@@ -1,0 +1,54 @@
+"""Shared benchmark context: graphs, partitions, comm stats (built once)."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+import jax
+
+
+def enable_x64():
+    jax.config.update("jax_enable_x64", True)
+
+
+@functools.lru_cache(maxsize=None)
+def example_graph():
+    from repro.sparse.matrices import example_2_1_graph
+
+    return example_2_1_graph()  # full published scale (element level)
+
+
+@functools.lru_cache(maxsize=None)
+def suite_graph(name: str):
+    from repro.sparse.matrices import surrogate_graph
+
+    return surrogate_graph(name)
+
+
+@functools.lru_cache(maxsize=None)
+def comm_stats(which: str, p: int, ppn: int):
+    from repro.sparse.partition import partition_csr
+    from repro.core.comm_graph import build_comm_graph
+
+    g, blk = example_graph() if which == "example" else suite_graph(which)
+    pm = partition_csr(g, p)
+    return build_comm_graph(pm, ppn=ppn, row_block=blk)
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """(result, wall microseconds per call) — median of repeats."""
+    fn(*args, **kw)  # warmup / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(out, jax.Array) else None
+        ts.append(time.perf_counter() - t0)
+    return out, float(np.median(ts) * 1e6)
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,32 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (model-driven rows are suffixed
+``_model``; the rest are measured CPU wall times).
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks.common import enable_x64
+
+    enable_x64()
+    from benchmarks import paper_figures
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for fn in paper_figures.ALL:
+        if only and only not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            for r in fn():
+                print(r, flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{fn.__name__}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+        print(f"# {fn.__name__} done in {time.time()-t0:.1f}s", file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

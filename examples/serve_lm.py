@@ -1,0 +1,58 @@
+"""Batched autoregressive serving with a KV cache.
+
+Prefills a batch of prompts (teacher-forced), then decodes greedily with the
+one-token serve step — the same step the decode_32k/long_500k dry-run cells
+lower at production scale.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.launch.mesh import make_smoke_mesh
+from repro.models.registry import model_api
+
+
+def main():
+    cfg = get_smoke("stablelm_1_6b").with_(dtype=jnp.float32)
+    mesh = make_smoke_mesh()
+    api = model_api(cfg)
+    params = api.init_params(cfg, jax.random.key(0))
+    step = jax.jit(api.decode_step(cfg, mesh))
+
+    batch, prompt_len, gen_len, cache_len = 4, 8, 24, 64
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab, (batch, prompt_len))
+    cache = api.init_cache(cfg, batch, cache_len)
+
+    # prefill token-by-token (production uses the fused prefill graph;
+    # the cache layout is identical)
+    tok = jnp.asarray(prompts[:, 0], jnp.int32)
+    for i in range(prompt_len):
+        pos = jnp.full((batch,), i, jnp.int32)
+        logits, cache = step(params, cache, {"token": tok, "pos": pos})
+        tok = (
+            jnp.asarray(prompts[:, i + 1], jnp.int32)
+            if i + 1 < prompt_len
+            else jnp.argmax(logits[:, : cfg.vocab], axis=-1).astype(jnp.int32)
+        )
+
+    outs = []
+    for i in range(prompt_len, prompt_len + gen_len):
+        pos = jnp.full((batch,), i, jnp.int32)
+        logits, cache = step(params, cache, {"token": tok, "pos": pos})
+        tok = jnp.argmax(logits[:, : cfg.vocab], axis=-1).astype(jnp.int32)
+        outs.append(np.asarray(tok))
+
+    gen = np.stack(outs, axis=1)
+    print(f"prompts ({batch}x{prompt_len}):\n{prompts}")
+    print(f"greedy continuations ({batch}x{gen_len}):\n{gen}")
+    assert gen.shape == (batch, gen_len) and (gen >= 0).all() and (gen < cfg.vocab).all()
+    print("serving OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Reproduce the §4 communication study on SuiteSparse surrogates.
+
+For each matrix: exact comm statistics at p=4096 (ppn=16), modeled times for
+all four strategies on Blue Waters + Lassen, tuned winner (paper Fig 4.10).
+
+    PYTHONPATH=src python examples/suite_study.py
+"""
+
+from repro.sparse.matrices import surrogate_graph, SUITE_MATRICES
+from repro.sparse.partition import partition_csr
+from repro.core.comm_graph import build_comm_graph
+from repro.core.models import tune_strategy
+from repro.core.machines import BLUE_WATERS, LASSEN
+
+
+def main():
+    p, ppn = 4096, 16
+    names = ("audikw_1", "Geo_1438", "thermal2", "ldoor")
+    for name in names:
+        g, blk = surrogate_graph(name)
+        pm = partition_csr(g, p)
+        cg = build_comm_graph(pm, ppn=ppn, row_block=blk)
+        spec = SUITE_MATRICES[name]
+        print(f"\n{name}: {spec.rows} rows (surrogate {g.shape[0]*blk}), "
+              f"{spec.nnz_per_row:.0f} nnz/row target")
+        print(f"  m_std={cg.m_standard} m_proc->node={cg.m_proc_to_node} "
+              f"m_node->node={cg.m_node_to_node} dedup={cg.total_standard_rows/max(cg.total_node_aware_rows,1):.2f}x")
+        for mach in (BLUE_WATERS, LASSEN.with_ppn(ppn)):
+            for t in (5, 20):
+                best, times = tune_strategy(cg, t, mach)
+                sp = times["standard"] / times[best]
+                print(f"  {mach.name:10s} t={t:2d}: best={best:8s} speedup={sp:5.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,196 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds (TPU v5e constants):
+
+    compute    = FLOPs_dev / peak_FLOP/s
+    memory     = HBM_bytes_dev / HBM_bw
+    collective = collective_bytes_dev / link_bw
+
+Sources: ``compiled.cost_analysis()`` (flops / bytes accessed) and the HLO
+text for collective payloads.  Notes on methodology (validated empirically in
+/tmp probes, recorded in EXPERIMENTS.md §Dry-run):
+
+  * XLA cost analysis counts a while/scan body ONCE, not x trip-count.  The
+    dry-run therefore compiles 1-layer and 2-layer *unrolled* variants of each
+    cell and extrapolates:  cost(L) = intercept + L · Δ  where
+    Δ = cost(2L_unrolled) - cost(1L_unrolled).  This is exact for
+    layer-homogeneous stacks (all assigned archs; Zamba2 uses period-level
+    deltas with a ~1.5% tail correction noted inline).
+  * cost_analysis numbers are per-device (the SPMD program); global figures
+    multiply by chip count.
+  * CPU-backend "bytes accessed" lacks TPU fusion, so the memory term is an
+    upper-bound proxy; flagged in the report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.core.machines import V5E_PEAK_FLOPS, V5E_HBM_BW, V5E_ICI_BW
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum per-collective payload bytes (per device) from HLO text.
+
+    For each collective instruction we take the larger of (result bytes,
+    summed operand bytes) — an upper bound on the wire payload that is exact
+    for all-reduce/permute and conservatively includes the gathered result
+    for all-gather.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.-]+\s*=\s*(.+?)\s+([\w-]+)\(", line)
+        if not m:
+            continue
+        result_type, op = m.groups()
+        base = op.removesuffix("-start").removesuffix("-done")
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        result_bytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result_type))
+        args = line[m.end():]
+        operand_bytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(args.split("),")[0]))
+        out[base] += max(result_bytes, operand_bytes)
+    return out
+
+
+def count_collective_ops(hlo_text: str) -> dict[str, int]:
+    return {
+        k: len(re.findall(rf"\b{k}(?:-start)?\(", hlo_text)) for k in _COLLECTIVES
+    }
+
+
+@dataclasses.dataclass
+class CellCost:
+    """Per-device extrapolated costs for one dry-run cell."""
+
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict[str, float]
+
+    @staticmethod
+    def extrapolate(c1: "CellCost", c2: "CellCost", n_units: float) -> "CellCost":
+        """cost(L) = c1 + (n_units - 1) * (c2 - c1)   (1- and 2-unit compiles)."""
+        d = lambda a, b: a + (n_units - 1) * (b - a)
+        return CellCost(
+            flops=d(c1.flops, c2.flops),
+            hbm_bytes=d(c1.hbm_bytes, c2.hbm_bytes),
+            coll_bytes=d(c1.coll_bytes, c2.coll_bytes),
+            coll_breakdown={
+                k: d(c1.coll_breakdown.get(k, 0), c2.coll_breakdown.get(k, 0))
+                for k in set(c1.coll_breakdown) | set(c2.coll_breakdown)
+            },
+        )
+
+
+def cost_from_compiled(compiled) -> CellCost:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    txt = compiled.as_text()
+    cb = collective_bytes(txt)
+    return CellCost(
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=float(sum(cb.values())),
+        coll_breakdown={k: float(v) for k, v in cb.items()},
+    )
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_global: float
+    hlo_flops_global: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = dict(compute=self.compute_s, memory=self.memory_s, collective=self.collective_s)
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/padding/redundancy waste detector."""
+        return self.model_flops_global / self.hlo_flops_global if self.hlo_flops_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the cell ran at its
+        bound: (useful compute time) / (time the dominant term costs)."""
+        ideal = self.model_flops_global / (self.chips * V5E_PEAK_FLOPS)
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def as_dict(self):
+        return dict(
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            dominant=self.dominant,
+            model_flops_global=self.model_flops_global,
+            hlo_flops_global=self.hlo_flops_global,
+            useful_flops_ratio=self.useful_flops_ratio,
+            roofline_fraction=self.roofline_fraction,
+            chips=self.chips,
+        )
+
+
+def roofline_from_cost(cost: CellCost, chips: int, model_flops_global: float) -> Roofline:
+    return Roofline(
+        compute_s=cost.flops / V5E_PEAK_FLOPS,
+        memory_s=cost.hbm_bytes / V5E_HBM_BW,
+        collective_s=cost.coll_bytes / V5E_ICI_BW,
+        model_flops_global=model_flops_global,
+        hlo_flops_global=cost.flops * chips,
+        chips=chips,
+    )
+
+
+def model_flops(cfg, kind: str, seq: int, batch: int) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference (per step over
+    ``batch`` tokens for decode), with N_active for MoE."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * seq * batch
+    if kind == "prefill":
+        return 2.0 * n * seq * batch
+    if kind == "decode":
+        return 2.0 * n * batch  # one token per sequence
+    raise ValueError(kind)

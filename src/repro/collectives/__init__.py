@@ -1,0 +1,3 @@
+from repro.collectives.hierarchical import hierarchical_allreduce, tiered_collective_bytes
+
+__all__ = ["hierarchical_allreduce", "tiered_collective_bytes"]

@@ -1,0 +1,14 @@
+"""Core: the paper's contribution — ECG + node-aware communication."""
+
+from repro.core.cg import cg_solve, SolveResult
+from repro.core.ecg import ecg_solve, ECGOperationCounts
+from repro.core.enlarging import split_residual, collapse
+
+__all__ = [
+    "cg_solve",
+    "ecg_solve",
+    "SolveResult",
+    "ECGOperationCounts",
+    "split_residual",
+    "collapse",
+]

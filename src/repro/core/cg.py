@@ -1,0 +1,56 @@
+"""Classical conjugate gradients — the paper's baseline method."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class SolveResult:
+    x: jax.Array
+    n_iters: int
+    res_hist: jax.Array  # (max_iters + 1,), padded with NaN past convergence
+    converged: bool
+
+    def __iter__(self):  # convenient unpacking
+        return iter((self.x, self.n_iters, self.res_hist, self.converged))
+
+
+def cg_solve(
+    a_apply: Callable[[jax.Array], jax.Array],
+    b: jax.Array,
+    x0: jax.Array | None = None,
+    tol: float = 1e-8,
+    max_iters: int = 1000,
+) -> SolveResult:
+    """Solve A x = b with CG. ``a_apply`` is the (possibly distributed) SpMV."""
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    r0 = b - a_apply(x0)
+    rn0 = jnp.linalg.norm(r0)
+    hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=b.dtype).at[0].set(rn0)
+
+    def cond(carry):
+        _, r, _, _, k, rn, _ = carry
+        return (rn > tol) & (k < max_iters)
+
+    def body(carry):
+        x, r, p, rz, k, _, hist = carry
+        ap = a_apply(p)
+        alpha = rz / (p @ ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rz_new = r @ r
+        beta = rz_new / rz
+        p = r + beta * p
+        rn = jnp.sqrt(rz_new)
+        hist = hist.at[k + 1].set(rn)
+        return x, r, p, rz_new, k + 1, rn, hist
+
+    x, r, p, rz, k, rn, hist = jax.lax.while_loop(
+        cond, body, (x0, r0, r0, r0 @ r0, jnp.int32(0), rn0, hist0)
+    )
+    return SolveResult(x=x, n_iters=int(k), res_hist=hist, converged=bool(rn <= tol))

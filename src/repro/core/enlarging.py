@@ -1,0 +1,41 @@
+"""Residual enlarging operators T_{r,t} (paper §2.1, Fig 2.1).
+
+T_{r,t} projects r ∈ R^n to an n x t block vector whose columns sum to r
+(row-sum preservation, eq. 2.3) and are linearly independent: column i of
+T carries the entries of r belonging to subdomain i, zeros elsewhere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def subdomain_map_contiguous(n: int, t: int) -> jax.Array:
+    """Row -> subdomain id, contiguous blocks (Fig 2.1 left; aligned with the
+    contiguous row partition the paper uses)."""
+    idx = jnp.arange(n)
+    return (idx * t) // n
+
+
+def subdomain_map_round_robin(n: int, t: int) -> jax.Array:
+    """Row -> subdomain id, cyclic assignment (Fig 2.1 middle)."""
+    return jnp.arange(n) % t
+
+
+def split_residual(r: jax.Array, t: int, mapping: str = "contiguous") -> jax.Array:
+    """T_{r,t}: split r into an (n, t) block vector along subdomains."""
+    n = r.shape[0]
+    if mapping == "contiguous":
+        sub = subdomain_map_contiguous(n, t)
+    elif mapping == "round_robin":
+        sub = subdomain_map_round_robin(n, t)
+    else:
+        raise ValueError(f"unknown mapping {mapping!r}")
+    onehot = jax.nn.one_hot(sub, t, dtype=r.dtype)
+    return r[:, None] * onehot
+
+
+def collapse(block: jax.Array) -> jax.Array:
+    """Inverse direction of (2.3): sum block-vector columns back to a vector."""
+    return block.sum(axis=1)

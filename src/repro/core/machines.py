@@ -1,0 +1,78 @@
+"""Machine parameter sets for the communication/computation models.
+
+Parameters follow Table 1 of the paper.  Blue Waters and Lassen constants are
+estimates consistent with the published max-rate literature ([16], [4]) and
+the qualitative crossovers in the paper's Fig 4.6 (exact measured constants
+were not published); the TPU-v5e mapping (chip=process, pod=node) uses public
+v5e specs.  All rates in bytes/second, latencies in seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineParams:
+    name: str
+    alpha: float        # inter-node latency (s)
+    alpha_l: float      # intra-node latency (s)
+    R_N: float          # NIC injection rate (B/s) per node
+    R_b: float          # per-process network transport rate (B/s)
+    R_bl: float         # intra-node (shared-memory) transport rate (B/s)
+    ppn: int            # default processes per node
+    gamma: float        # seconds per flop (inverse per-core flop rate)
+    eager_cutoff: int   # rendezvous-protocol switch (B) — §4.3 cutoff
+    f: int = 8          # bytes per float
+
+    def with_ppn(self, ppn: int) -> "MachineParams":
+        return dataclasses.replace(self, ppn=ppn)
+
+
+#: Cray XE6, 3D-torus Gemini, 2 AMD Interlagos/node (paper §3).
+BLUE_WATERS = MachineParams(
+    name="BlueWaters",
+    alpha=2.0e-6,
+    alpha_l=6.0e-7,
+    R_N=5.8e9,       # Gemini per-node injection
+    R_b=2.7e9,
+    R_bl=5.0e9,
+    ppn=16,
+    gamma=1.0 / 10.4e9,  # ~10.4 GF/s/core sustained (Interlagos)
+    eager_cutoff=8192,
+)
+
+#: IBM Power9 + EDR InfiniBand (paper §4.3).
+LASSEN = MachineParams(
+    name="Lassen",
+    alpha=1.1e-6,
+    alpha_l=3.5e-7,
+    R_N=12.5e9,      # 100 Gb/s EDR
+    R_b=3.1e9,       # ≈ R_N / 4: >4–5 active senders saturate the NIC (Fig 4.6)
+    R_bl=14.0e9,
+    ppn=40,
+    gamma=1.0 / 15.0e9,
+    eager_cutoff=16384,
+)
+
+#: TPU v5e mapping of the paper's hierarchy: chip ↔ process, pod (ICI domain)
+#: ↔ node, DCI ↔ inter-node network.  Used for the TPU column of the study.
+TPU_V5E_POD = MachineParams(
+    name="TPUv5e",
+    alpha=1.0e-5,    # DCI (inter-pod) latency
+    alpha_l=1.0e-6,  # ICI hop latency
+    R_N=2.5e10,      # per-chip DCI injection (≈200 Gb/s)
+    R_b=1.25e10,
+    R_bl=4.5e10,     # ICI per-link ~50 GB/s, one link busy
+    ppn=256,         # chips per v5e pod
+    gamma=1.0 / 197e12,  # bf16 peak per chip
+    eager_cutoff=65536,
+    f=4,             # f32 solver data on TPU
+)
+
+MACHINES = {m.name: m for m in (BLUE_WATERS, LASSEN, TPU_V5E_POD)}
+
+# Roofline hardware constants (per chip) — TPU v5e targets for §Roofline.
+V5E_PEAK_FLOPS = 197e12       # bf16 FLOP/s
+V5E_HBM_BW = 819e9            # B/s
+V5E_ICI_BW = 5.0e10           # B/s per link

@@ -1,0 +1,487 @@
+"""Static exchange plans for node-aware SpMBV communication.
+
+Each strategy (standard / 2-step / 3-step / nodal-optimal) compiles, at setup
+time, into a common IR — a sequence of :class:`ExchangeStep` rounds — that the
+shard_map executor in ``repro.sparse.spmbv`` replays with ``lax.ppermute``.
+This mirrors the paper's design exactly: the communication *schedule* is
+decided once from the matrix partition (the analogue of building the MPI
+node-aware communicator), and the device program is a fixed pipeline of
+gather → permute → scatter rounds.
+
+Topology mapping (DESIGN.md §2): device grid = ("node", "proc") =
+(slow-tier groups, fast-tier peers); on TPU, node=ICI-pod and proc=chip.
+
+Round semantics, per device d with local vector x (rows it owns):
+    src buffer  = x | stage
+    buf         = src[gather_idx[d]]                  (c rows)
+    buf         = ppermute(buf, axis, rotation offset)
+    dst buffer  = dst.at[scatter_pos[d]].set(buf)     (halo | stage)
+Padding rows use gather index 0 and scatter into a trailing dump slot, so
+every device executes identical static shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+
+import numpy as np
+
+from repro.sparse.partition import PartitionedMatrix
+from repro.core.machines import MachineParams
+
+
+@dataclasses.dataclass
+class ExchangeStep:
+    axis: str        # "node" | "proc" | "flat" (both axes, node-major)
+    offset: int      # rotation offset along `axis` (0 = local move, no comm)
+    src: str         # "x" | "stage"
+    dst: str         # "halo" | "stage"
+    gather_idx: np.ndarray   # (p, c) int32
+    scatter_pos: np.ndarray  # (p, c) int32
+
+    @property
+    def width(self) -> int:
+        return self.gather_idx.shape[1]
+
+
+@dataclasses.dataclass
+class ExchangePlan:
+    strategy: str
+    n_nodes: int
+    ppn: int
+    steps: list[ExchangeStep]
+    halo_size: int   # max halo slots over devices (excl. dump slot)
+    stage_size: int  # max stage slots over devices (excl. dump slot)
+
+    @property
+    def p(self) -> int:
+        return self.n_nodes * self.ppn
+
+    def comm_rows(self) -> dict[str, int]:
+        """Rows moved per tier (for tests vs CommGraph invariants)."""
+        inter = intra = 0
+        for s in self.steps:
+            if s.offset == 0:
+                continue
+            moved = int((s.scatter_pos < self._dump(s)).sum())
+            if s.axis == "proc":
+                intra += moved
+            elif s.axis == "node":
+                inter += moved
+            else:  # flat rotation: offset decides if it crosses nodes
+                src = np.arange(self.p)
+                dst = (src + s.offset) % self.p
+                crosses = (src // self.ppn) != (dst // self.ppn)
+                per_dev = (s.scatter_pos < self._dump(s)).sum(axis=1)
+                inter += int(per_dev[crosses].sum())
+                intra += int(per_dev[~crosses].sum())
+        return dict(inter=inter, intra=intra)
+
+    def _dump(self, s: ExchangeStep) -> int:
+        return self.halo_size if s.dst == "halo" else self.stage_size
+
+
+# --------------------------------------------------------------------------
+# message construction helpers
+# --------------------------------------------------------------------------
+class _Msg:
+    """One logical message: rows moving src_dev -> dst_dev in a given phase."""
+
+    __slots__ = ("src_dev", "dst_dev", "src_kind", "dst_kind", "rows", "stage_keys")
+
+    def __init__(self, src_dev, dst_dev, src_kind, dst_kind, rows, stage_keys=None):
+        self.src_dev = src_dev
+        self.dst_dev = dst_dev
+        self.src_kind = src_kind
+        self.dst_kind = dst_kind
+        self.rows = rows                       # global row ids (np.ndarray)
+        self.stage_keys = stage_keys           # per-row stage keys when src/dst is stage
+
+
+def _compile_phase(
+    msgs: list[_Msg],
+    axis: str,
+    n_nodes: int,
+    ppn: int,
+    local_index,           # (dev, global_row) -> local x index
+    halo_slot,             # (dev, global_row) -> halo slot
+    stage_slot,            # (dev, key) -> stage slot (assigning on demand)
+) -> list[ExchangeStep]:
+    """Group messages of one phase by rotation offset; emit ExchangeSteps."""
+    p = n_nodes * ppn
+
+    def rotation(src, dst):
+        if axis == "proc":
+            assert src // ppn == dst // ppn
+            return (dst - src) % ppn
+        if axis == "node":
+            assert src % ppn == dst % ppn, "node-axis rounds keep local rank"
+            return (dst // ppn - src // ppn) % n_nodes
+        return (dst - src) % p
+
+    by_off: dict[int, list[_Msg]] = defaultdict(list)
+    for m in msgs:
+        by_off[rotation(m.src_dev, m.dst_dev)].append(m)
+
+    steps = []
+    for off in sorted(by_off):
+        group = by_off[off]
+        per_src: dict[int, list[_Msg]] = defaultdict(list)
+        for m in group:
+            per_src[m.src_dev].append(m)
+        width = max(sum(len(m.rows) for m in ms) for ms in per_src.values())
+        gather = np.zeros((p, width), dtype=np.int32)
+        scatter = np.full((p, width), -1, dtype=np.int32)  # -1 -> dump (fixed later)
+        for src_dev, ms in per_src.items():
+            pos = 0
+            for m in ms:
+                k = len(m.rows)
+                if m.src_kind == "x":
+                    gather[src_dev, pos : pos + k] = [
+                        local_index(src_dev, r) for r in m.rows
+                    ]
+                else:
+                    gather[src_dev, pos : pos + k] = [
+                        stage_slot(src_dev, key, create=False)
+                        for key in m.stage_keys
+                    ]
+                if m.dst_kind == "halo":
+                    scatter[m.dst_dev, pos : pos + k] = [
+                        halo_slot(m.dst_dev, r) for r in m.rows
+                    ]
+                else:
+                    scatter[m.dst_dev, pos : pos + k] = [
+                        stage_slot(m.dst_dev, key, create=True)
+                        for key in m.stage_keys
+                    ]
+                pos += k
+        steps.append(
+            ExchangeStep(
+                axis=axis,
+                offset=off,
+                src=group[0].src_kind,
+                dst=group[0].dst_kind,
+                gather_idx=gather,
+                scatter_pos=scatter,
+            )
+        )
+    return steps
+
+
+def build_exchange_plan(
+    pm: PartitionedMatrix,
+    n_nodes: int,
+    ppn: int,
+    strategy: str = "standard",
+    t: int = 1,
+    machine: MachineParams | None = None,
+) -> ExchangePlan:
+    """Compile the halo exchange of ``pm`` into rounds for ``strategy``.
+
+    ``t`` and ``machine`` matter only for the nodal-optimal strategy (its
+    conglomerate/split cutoff is byte-based, per §4.3).
+    """
+    p = pm.p
+    assert p == n_nodes * ppn, (p, n_nodes, ppn)
+    node_of = lambda d: d // ppn
+    lrank = lambda d: d % ppn
+
+    starts = pm.part.starts
+    halo_sources = pm.halo_sources
+
+    def local_index(dev, row):
+        return int(row - starts[dev])
+
+    def halo_slot(dev, row):
+        return int(np.searchsorted(halo_sources[dev], row))
+
+    stage_maps: list[dict] = [dict() for _ in range(p)]
+
+    def stage_slot(dev, key, create):
+        m = stage_maps[dev]
+        if key not in m:
+            if not create:
+                raise KeyError(f"stage key {key} missing on dev {dev}")
+            m[key] = len(m)
+        return m[key]
+
+    # ---- per-strategy message lists (phases in execution order) -------------
+    phases: list[tuple[str, list[_Msg]]] = []
+
+    if strategy == "standard":
+        msgs = []
+        for i in range(p):
+            for q, rows in pm.comms[i].send_rows.items():
+                msgs.append(_Msg(i, q, "x", "halo", rows))
+        phases.append(("flat", msgs))
+
+    else:
+        # on-node direct exchange (common to all node-aware strategies)
+        onnode = []
+        for i in range(p):
+            for q, rows in pm.comms[i].send_rows.items():
+                if node_of(q) == node_of(i):
+                    onnode.append(_Msg(i, q, "x", "halo", rows))
+
+        # dedup'd (owner proc -> dst node) row sets
+        to_node: list[dict[int, np.ndarray]] = []
+        for i in range(p):
+            acc: dict[int, set] = defaultdict(set)
+            for q, rows in pm.comms[i].send_rows.items():
+                if node_of(q) != node_of(i):
+                    acc[node_of(q)].update(rows.tolist())
+            to_node.append({b: np.array(sorted(s), dtype=np.int64) for b, s in acc.items()})
+
+        # which procs on node B need row r (for final redistribution)
+        def dest_procs(b_node, row, owner):
+            res = []
+            for q in range(b_node * ppn, (b_node + 1) * ppn):
+                if owner in pm.comms[q].recv_rows and row in _recv_sets[q][owner]:
+                    res.append(q)
+            return res
+
+        _recv_sets = [
+            {src: set(rows.tolist()) for src, rows in pm.comms[q].recv_rows.items()}
+            for q in range(p)
+        ]
+
+        if strategy == "2step":
+            inter, redist = [], []
+            for i in range(p):
+                a = node_of(i)
+                for b, rows in to_node[i].items():
+                    j = b * ppn + lrank(i)  # paired process
+                    keys = [("s", int(r)) for r in rows]
+                    inter.append(_Msg(i, j, "x", "stage", rows, stage_keys=keys))
+                    # local redistribution from j's stage to final halos
+                    per_dst: dict[int, list[int]] = defaultdict(list)
+                    for r in rows:
+                        for q in dest_procs(b, int(r), i):
+                            per_dst[q].append(int(r))
+                    for q, rr in per_dst.items():
+                        rr = np.array(rr, dtype=np.int64)
+                        kk = [("s", int(r)) for r in rr]
+                        redist.append(_Msg(j, q, "stage", "halo", rr, stage_keys=kk))
+            phases = [("proc", onnode), ("node", inter), ("proc", redist)]
+
+        elif strategy == "3step":
+            gather_msgs, inter, redist = [], [], []
+            for a in range(n_nodes):
+                dsts = sorted(
+                    {b for i in range(a * ppn, (a + 1) * ppn) for b in to_node[i]}
+                )
+                for bi, b in enumerate(dsts):
+                    h = a * ppn + bi % ppn            # gathering proc on A for dst B
+                    g = b * ppn + lrank(h)            # receiving proc on B (paired)
+                    rows_all, owners = [], []
+                    for i in range(a * ppn, (a + 1) * ppn):
+                        if b in to_node[i]:
+                            rows_all.extend(int(r) for r in to_node[i][b])
+                            owners.extend([i] * len(to_node[i][b]))
+                    keys = [("g", b, r) for r in rows_all]
+                    # phase 0: owners stage rows on the handler h
+                    per_owner: dict[int, tuple[list, list]] = defaultdict(lambda: ([], []))
+                    for r, o, k in zip(rows_all, owners, keys):
+                        per_owner[o][0].append(r)
+                        per_owner[o][1].append(k)
+                    for o, (rr, kk) in per_owner.items():
+                        gather_msgs.append(
+                            _Msg(o, h, "x", "stage", np.array(rr), stage_keys=kk)
+                        )
+                    # phase 1: handler -> paired receiver on B
+                    keys_r = [("r", r) for r in rows_all]
+                    inter.append(
+                        _Msg(h, g, "stage", "stage", np.array(rows_all), stage_keys=list(zip(keys, keys_r)))
+                    )
+                    # phase 2: receiver redistributes on B
+                    per_dst: dict[int, tuple[list, list]] = defaultdict(lambda: ([], []))
+                    for r, o in zip(rows_all, owners):
+                        for q in dest_procs(b, r, o):
+                            per_dst[q][0].append(r)
+                            per_dst[q][1].append(("r", r))
+                    for q, (rr, kk) in per_dst.items():
+                        redist.append(_Msg(g, q, "stage", "halo", np.array(rr), stage_keys=kk))
+            phases = [("proc", onnode), ("proc", gather_msgs), ("node", inter), ("proc", redist)]
+
+        elif strategy == "optimal":
+            machine = machine or _default_machine()
+            cutoff = machine.eager_cutoff
+            unit = t * machine.f
+            gather_msgs, inter, redist = [], [], []
+            for a in range(n_nodes):
+                procs = list(range(a * ppn, (a + 1) * ppn))
+                # 2-step units: (owner, dst node, rows)
+                units = [
+                    (i, b, to_node[i][b]) for i in procs for b in to_node[i]
+                ]
+                by_dst: dict[int, list[tuple[int, np.ndarray]]] = defaultdict(list)
+                for i, b, rows in units:
+                    by_dst[b].append((i, rows))
+                buffers = []  # (size_bytes, dst_node, [(owner, rows)])
+                for b, owners in by_dst.items():
+                    small = [(i, r) for i, r in owners if len(r) * unit < cutoff]
+                    large = [(i, r) for i, r in owners if len(r) * unit >= cutoff]
+                    if small:
+                        buffers.append(
+                            (sum(len(r) for _, r in small) * unit, b, small)
+                        )
+                    for i, r in large:
+                        n_chunks = min(math.ceil(len(r) * unit / cutoff), ppn)
+                        for ch in np.array_split(r, n_chunks):
+                            if len(ch):
+                                buffers.append((len(ch) * unit, b, [(i, ch)]))
+                buffers.sort(key=lambda x: -x[0])
+                loads = {i: 0 for i in procs}
+                counts = {i: 0 for i in procs}
+                for size, b, parts in buffers:
+                    s_dev = min(procs, key=lambda q: (loads[q], counts[q]))
+                    loads[s_dev] += size
+                    counts[s_dev] += 1
+                    g_dev = b * ppn + lrank(s_dev)  # paired receiver (Fig 4.8 step 2)
+                    rows_all, owners = [], []
+                    for i, rr in parts:
+                        rows_all.extend(int(x) for x in rr)
+                        owners.extend([i] * len(rr))
+                    keys = [("o", b, r) for r in rows_all]
+                    per_owner: dict[int, tuple[list, list]] = defaultdict(lambda: ([], []))
+                    for r, o, k in zip(rows_all, owners, keys):
+                        per_owner[o][0].append(r)
+                        per_owner[o][1].append(k)
+                    for o, (rr, kk) in per_owner.items():
+                        if o == s_dev:
+                            # still stage locally (offset-0 round, no comm)
+                            gather_msgs.append(_Msg(o, s_dev, "x", "stage", np.array(rr), stage_keys=kk))
+                        else:
+                            gather_msgs.append(_Msg(o, s_dev, "x", "stage", np.array(rr), stage_keys=kk))
+                    keys_r = [("r", r) for r in rows_all]
+                    inter.append(
+                        _Msg(s_dev, g_dev, "stage", "stage", np.array(rows_all), stage_keys=list(zip(keys, keys_r)))
+                    )
+                    per_dst: dict[int, tuple[list, list]] = defaultdict(lambda: ([], []))
+                    for r, o in zip(rows_all, owners):
+                        for q in dest_procs(b, r, o):
+                            per_dst[q][0].append(r)
+                            per_dst[q][1].append(("r", r))
+                    for q, (rr, kk) in per_dst.items():
+                        redist.append(_Msg(g_dev, q, "stage", "halo", np.array(rr), stage_keys=kk))
+            phases = [("proc", onnode), ("proc", gather_msgs), ("node", inter), ("proc", redist)]
+        else:
+            raise ValueError(f"unknown strategy {strategy!r}")
+
+    # ---- stage-key bookkeeping for inter-node stage->stage moves ------------
+    # for stage->stage messages, stage_keys holds (src_key, dst_key) pairs;
+    # normalize to split views in _compile_phase via wrapper objects
+    steps: list[ExchangeStep] = []
+    for axis, msgs in phases:
+        msgs = [m for m in msgs if len(m.rows)]
+        if not msgs:
+            continue
+        split_msgs = []
+        for m in msgs:
+            if (
+                m.src_kind == "stage"
+                and m.dst_kind == "stage"
+                and m.stage_keys
+                and isinstance(m.stage_keys[0], tuple)
+                and len(m.stage_keys[0]) == 2
+                and isinstance(m.stage_keys[0][0], tuple)
+            ):
+                # (src_key, dst_key) pairs — register src lookup & dst create
+                split_msgs.append(m)
+            else:
+                split_msgs.append(m)
+        steps.extend(
+            _compile_phase_stage_aware(
+                split_msgs, axis, n_nodes, ppn, local_index, halo_slot, stage_slot
+            )
+        )
+
+    halo_size = max((len(h) for h in halo_sources), default=0)
+    stage_size = max((len(m) for m in stage_maps), default=0)
+    # fix dump slots: scatter_pos == -1 -> dump index
+    for s in steps:
+        dump = halo_size if s.dst == "halo" else stage_size
+        s.scatter_pos = np.where(s.scatter_pos < 0, dump, s.scatter_pos)
+    return ExchangePlan(
+        strategy=strategy,
+        n_nodes=n_nodes,
+        ppn=ppn,
+        steps=steps,
+        halo_size=halo_size,
+        stage_size=stage_size,
+    )
+
+
+def _compile_phase_stage_aware(msgs, axis, n_nodes, ppn, local_index, halo_slot, stage_slot):
+    """Like _compile_phase but handles (src_key, dst_key) pairs for
+    stage->stage messages."""
+    p = n_nodes * ppn
+
+    def rotation(src, dst):
+        if axis == "proc":
+            return (dst % ppn - src % ppn) % ppn
+        if axis == "node":
+            return (dst // ppn - src // ppn) % n_nodes
+        return (dst - src) % p
+
+    by_off = defaultdict(list)
+    for m in msgs:
+        by_off[rotation(m.src_dev, m.dst_dev)].append(m)
+
+    steps = []
+    for off in sorted(by_off):
+        group = by_off[off]
+        per_src = defaultdict(list)
+        for m in group:
+            per_src[m.src_dev].append(m)
+        width = max(sum(len(m.rows) for m in ms) for ms in per_src.values())
+        gather = np.zeros((p, width), dtype=np.int32)
+        scatter = np.full((p, width), -1, dtype=np.int32)
+        for src_dev, ms in per_src.items():
+            pos = 0
+            for m in ms:
+                k = len(m.rows)
+                pair_keys = (
+                    m.src_kind == "stage"
+                    and m.dst_kind == "stage"
+                    and m.stage_keys
+                    and isinstance(m.stage_keys[0][0], tuple)
+                )
+                if m.src_kind == "x":
+                    gather[src_dev, pos : pos + k] = [
+                        local_index(src_dev, int(r)) for r in m.rows
+                    ]
+                else:
+                    src_keys = [kk[0] for kk in m.stage_keys] if pair_keys else m.stage_keys
+                    gather[src_dev, pos : pos + k] = [
+                        stage_slot(src_dev, key, create=False) for key in src_keys
+                    ]
+                if m.dst_kind == "halo":
+                    scatter[m.dst_dev, pos : pos + k] = [
+                        halo_slot(m.dst_dev, int(r)) for r in m.rows
+                    ]
+                else:
+                    dst_keys = [kk[1] for kk in m.stage_keys] if pair_keys else m.stage_keys
+                    scatter[m.dst_dev, pos : pos + k] = [
+                        stage_slot(m.dst_dev, key, create=True) for key in dst_keys
+                    ]
+                pos += k
+        steps.append(
+            ExchangeStep(
+                axis=axis,
+                offset=off,
+                src=group[0].src_kind,
+                dst=group[0].dst_kind,
+                gather_idx=gather,
+                scatter_pos=scatter,
+            )
+        )
+    return steps
+
+
+def _default_machine():
+    from repro.core.machines import BLUE_WATERS
+
+    return BLUE_WATERS

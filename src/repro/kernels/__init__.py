@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the ECG hot spots.
+
+Each kernel ships as kernel.py (pl.pallas_call + BlockSpec), ops.py (public
+jit'd wrapper with backend dispatch) and ref.py (pure-jnp oracle used by the
+interpret-mode allclose test sweeps).
+"""
+
+from repro.kernels.bsr_spmbv.ops import bsr_spmbv, bsr_to_block_ell, block_ell_from_csr
+from repro.kernels.fused_gram.ops import fused_gram
+from repro.kernels.block_update.ops import block_update
+
+__all__ = [
+    "bsr_spmbv",
+    "bsr_to_block_ell",
+    "block_ell_from_csr",
+    "fused_gram",
+    "block_update",
+]

@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: fused ECG block-vector updates.
+
+X += P·c and R -= AP·c share the (t x t) coefficient block c; fusing them
+halves kernel dispatches and lets each (rows, t) tile of X/R be updated while
+P/AP tiles are VMEM-resident.  Grid: 1-D over row tiles; c is broadcast to
+every step (small, stays in VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, r_ref, p_ref, ap_ref, c_ref, xo_ref, ro_ref):
+    c = c_ref[...]
+    xo_ref[...] = x_ref[...] + jnp.dot(p_ref[...], c, preferred_element_type=x_ref.dtype)
+    ro_ref[...] = r_ref[...] - jnp.dot(ap_ref[...], c, preferred_element_type=r_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def block_update_pallas(x, r, p, ap, c, *, block_rows: int = 512, interpret: bool = False):
+    n, t = x.shape
+    n_pad = (n + block_rows - 1) // block_rows * block_rows
+    pad = lambda a: jnp.pad(a, ((0, n_pad - n), (0, 0)))
+    xp, rp, pp, app = map(pad, (x, r, p, ap))
+    grid = (n_pad // block_rows,)
+    spec = pl.BlockSpec((block_rows, t), lambda i: (i, 0))
+    cspec = pl.BlockSpec((t, t), lambda i: (0, 0))
+    xo, ro = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, cspec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, t), x.dtype),
+            jax.ShapeDtypeStruct((n_pad, t), r.dtype),
+        ],
+        interpret=interpret,
+    )(xp, rp, pp, app, c)
+    return xo[:n], ro[:n]

@@ -1,0 +1,17 @@
+"""Public op: fused ECG block updates (Pallas on TPU, oracle elsewhere)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.block_update.kernel import block_update_pallas
+from repro.kernels.block_update.ref import block_update_ref
+
+
+def block_update(x, r, p, ap, c, use_pallas: bool | None = None, block_rows: int = 512):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if use_pallas:
+        return block_update_pallas(x, r, p, ap, c, block_rows=block_rows, interpret=not on_tpu)
+    return block_update_ref(x, r, p, ap, c)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fused block-vector update kernel."""
+
+from __future__ import annotations
+
+
+def block_update_ref(x, r, p, ap, c):
+    """X += P·c ; R -= AP·c   (ECG Alg 1 lines 7–8, one fused pass)."""
+    return x + p @ c, r - ap @ c

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: Block-ELL sparse-matrix x block-vector product.
+
+TPU adaptation of the paper's SpMBV hot spot (DESIGN.md §2): instead of the
+CPU/GPU scalar-gather CSR formulation, the matrix is stored as dense
+(br x bc) tiles in Block-ELL layout (fixed ``kmax`` tiles per block row —
+DG/FE matrices are naturally block-uniform) so every inner step is a dense
+(br x bc) @ (bc x t) MXU matmul.
+
+Scalar-prefetched block-column indices drive the ``index_map`` of the V
+operand, so the needed (bc, t) slice of V streams HBM -> VMEM exactly once
+per nonzero tile; the output tile is revisited across the k grid dimension
+and accumulated in VMEM.
+
+Alignment notes (TPU):
+  - br, bc should be multiples of (8, 128) for f32 tiles; t is padded to the
+    lane width by the ops wrapper.
+  - grid = (nbr, kmax), k innermost so the output tile stays resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, blocks_ref, v_ref, out_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = blocks_ref[0, 0]          # (br, bc)
+    vv = v_ref[0]                 # (bc, t)
+    out_ref[0] += jnp.dot(a, vv, preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bsr_spmbv_pallas(blocks, indices, v, *, interpret: bool = False):
+    """blocks (nbr, kmax, br, bc); indices (nbr, kmax); v (nbc*bc, t)."""
+    nbr, kmax, br, bc = blocks.shape
+    t = v.shape[1]
+    v3 = v.reshape(-1, bc, t)
+
+    grid = (nbr, kmax)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, br, bc), lambda i, k, idx: (i, k, 0, 0)),
+                pl.BlockSpec((1, bc, t), lambda i, k, idx: (idx[i, k], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, br, t), lambda i, k, idx: (i, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nbr, br, t), v.dtype),
+        interpret=interpret,
+    )(indices, blocks, v3)
+    return out.reshape(nbr * br, t)

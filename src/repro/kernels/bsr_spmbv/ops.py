@@ -1,0 +1,44 @@
+"""Public op: Block-ELL SpMBV with Pallas-on-TPU / oracle-on-CPU dispatch."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.csr import BSRMatrix, CSRMatrix, csr_to_bsr
+from repro.kernels.bsr_spmbv.kernel import bsr_spmbv_pallas
+from repro.kernels.bsr_spmbv.ref import bsr_spmbv_ref
+
+
+def bsr_to_block_ell(b: BSRMatrix, kmax: int | None = None):
+    """BSR -> Block-ELL (fixed tiles per block row; zero-padded)."""
+    nbr = b.n_block_rows
+    indptr = np.asarray(b.block_indptr)
+    per_row = np.diff(indptr)
+    kmax = int(per_row.max()) if kmax is None else kmax
+    br, bc = b.block_shape
+    blocks = np.zeros((nbr, kmax, br, bc), dtype=np.asarray(b.blocks).dtype)
+    indices = np.zeros((nbr, kmax), dtype=np.int32)
+    src_blocks = np.asarray(b.blocks)
+    src_idx = np.asarray(b.block_indices)
+    for i in range(nbr):
+        s, e = indptr[i], indptr[i + 1]
+        blocks[i, : e - s] = src_blocks[s:e]
+        indices[i, : e - s] = src_idx[s:e]
+    return jnp.asarray(blocks), jnp.asarray(indices)
+
+
+def block_ell_from_csr(a: CSRMatrix, br: int, bc: int):
+    return bsr_to_block_ell(csr_to_bsr(a, br, bc))
+
+
+def bsr_spmbv(blocks, indices, v, use_pallas: bool | None = None):
+    """W = A @ V.  Pallas kernel on TPU; interpret-mode Pallas or the jnp
+    oracle elsewhere (``use_pallas=True`` forces interpret-mode validation)."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if use_pallas:
+        return bsr_spmbv_pallas(blocks, indices, v, interpret=not on_tpu)
+    return bsr_spmbv_ref(blocks, indices, v)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the Block-ELL SpMBV kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bsr_spmbv_ref(blocks: jnp.ndarray, indices: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """W = A @ V for Block-ELL A.
+
+    blocks:  (nbr, kmax, br, bc) dense tiles (zero tiles where padded)
+    indices: (nbr, kmax) block-column ids (0 where padded — safe: zero tiles)
+    v:       (nbc * bc, t)
+    returns: (nbr * br, t)
+    """
+    nbr, kmax, br, bc = blocks.shape
+    t = v.shape[1]
+    vt = v.reshape(-1, bc, t)                  # (nbc, bc, t)
+    gathered = vt[indices]                     # (nbr, kmax, bc, t)
+    out = jnp.einsum("nkrc,nkct->nrt", blocks, gathered)
+    return out.reshape(nbr * br, t)

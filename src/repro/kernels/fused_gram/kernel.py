@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused ECG block inner products.
+
+Computes the packed (t, 3t) payload  [PᵀR | APᵀAP | AP_oldᵀAP]  in a single
+pass over the row dimension.  The naive implementation reads P, R, AP, AP_old
+from HBM in three separate GEMM passes (AP twice); this kernel streams each
+operand tile exactly once — the local-compute counterpart of the paper's
+"fuse the reductions" discipline (§3.1): one HBM pass feeding one allreduce.
+
+Memory-bound analysis (per n-row shard, bf16/f32):
+    naive:  reads P, R, 2·AP, AP_old  = 5·n·t·f bytes
+    fused:  reads P, R, AP, AP_old    = 4·n·t·f bytes   (1.25x traffic cut)
+
+Grid: 1-D over row tiles; the (t, 3t) accumulator lives in the revisited
+output block (VMEM-resident across the whole grid).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(p_ref, r_ref, ap_ref, apo_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p, r = p_ref[...], r_ref[...]
+    ap, apo = ap_ref[...], apo_ref[...]
+    acc = out_ref.dtype
+    c = jnp.dot(p.T, r, preferred_element_type=acc)
+    d = jnp.dot(ap.T, ap, preferred_element_type=acc)
+    d_old = jnp.dot(apo.T, ap, preferred_element_type=acc)
+    out_ref[...] += jnp.concatenate([c, d, d_old], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_gram_pallas(p, r, ap, ap_old, *, block_rows: int = 512, interpret: bool = False):
+    n, t = p.shape
+    n_pad = (n + block_rows - 1) // block_rows * block_rows
+    pad = lambda x: jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    p, r, ap, ap_old = map(pad, (p, r, ap, ap_old))
+    grid = (n_pad // block_rows,)
+    spec = pl.BlockSpec((block_rows, t), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=pl.BlockSpec((t, 3 * t), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, 3 * t), p.dtype),
+        interpret=interpret,
+    )(p, r, ap, ap_old)

@@ -1,0 +1,17 @@
+"""Public op: fused ECG gram products (Pallas on TPU, oracle elsewhere)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fused_gram.kernel import fused_gram_pallas
+from repro.kernels.fused_gram.ref import fused_gram_ref
+
+
+def fused_gram(p, r, ap, ap_old, use_pallas: bool | None = None, block_rows: int = 512):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if use_pallas:
+        return fused_gram_pallas(p, r, ap, ap_old, block_rows=block_rows, interpret=not on_tpu)
+    return fused_gram_ref(p, r, ap, ap_old)

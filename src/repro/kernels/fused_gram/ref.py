@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused block-inner-product kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_gram_ref(p, r, ap, ap_old):
+    """[PᵀR | APᵀAP | AP_oldᵀAP]  — the 3t² payload of ECG's allreduce #2.
+
+    All inputs (n, t); output (t, 3t).
+    """
+    return jnp.concatenate([p.T @ r, ap.T @ ap, ap_old.T @ ap], axis=1)

@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the platform
+device count at first init).  For each cell we:
+
+  1. compile the full scan-based step on the production mesh — proves the
+     sharding config is coherent (no sharding mismatch / unsupported
+     collective) and yields memory_analysis (fits-on-chip evidence) and the
+     collective schedule;
+  2. compile 1-unit and 2-unit *unrolled* variants and extrapolate per-layer
+     FLOPs / bytes / collective payloads (XLA cost analysis counts scan
+     bodies once — see repro.analysis.roofline);
+  3. assemble the three roofline terms with v5e constants.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+        --out experiments/dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPE_CELLS, get_config, get_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.train.train_step import build_train_step, build_serve_step
+from repro.analysis.roofline import (
+    CellCost,
+    cost_from_compiled,
+    roofline_from_cost,
+    model_flops,
+    count_collective_ops,
+)
+
+
+def _unit_layers(cfg, k: int):
+    """Config with k layer-units, unrolled (extrapolation pass).  remat is
+    preserved so the measured FLOPs include the real recompute cost."""
+    kw = dict(n_layers=k, unroll=True)
+    if cfg.family == "hybrid" and cfg.attn_period:
+        kw["n_layers"] = k * cfg.attn_period  # period-level units
+    if cfg.family == "encdec":
+        kw["n_enc_layers"] = k
+    return cfg.with_(**kw)
+
+
+def _n_units(cfg) -> float:
+    if cfg.family == "hybrid" and cfg.attn_period:
+        return cfg.n_layers / cfg.attn_period  # ~1.5% tail correction noted
+    return float(cfg.n_layers)
+
+
+def _lower_cell(cfg, mesh, kind: str, seq: int, batch: int):
+    """Build + lower + compile one cell; returns (compiled, lower_s, compile_s)."""
+    if kind == "train":
+        bundle = build_train_step(cfg, mesh, batch=batch, seq=seq, donate=False)
+        args = (bundle.abstract_params, bundle.abstract_opt, bundle.abstract_batch)
+        fn = bundle.step_fn
+    else:  # prefill is modeled as a train-shaped forward w/o optimizer: use loss
+        if kind == "prefill":
+            from repro.models.registry import model_api
+            from repro.models.common import MeshAxes
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            api = model_api(cfg)
+            axes = MeshAxes.from_mesh(mesh)
+            loss = api.loss_fn(cfg, mesh)
+            pspecs = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                api.param_specs(cfg, axes),
+                is_leaf=lambda s: isinstance(s, P),
+            )
+            binput = api.train_input_specs(cfg, mesh, batch, seq)
+            abatch = {k: v[0] for k, v in binput.items()}
+            bspecs = {
+                k: NamedSharding(mesh, v[1]) for k, v in binput.items()
+            }
+            fn = jax.jit(loss, in_shardings=(pspecs, bspecs), out_shardings=NamedSharding(mesh, P()))
+            args = (api.abstract_params(cfg), abatch)
+        else:  # decode
+            fn, meta = build_serve_step(cfg, mesh, batch=batch, seq=seq)
+            args = (meta["abstract_params"], meta["abstract_cache"], meta["abstract_batch"])
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    t_low = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_comp = time.time() - t0
+    return compiled, t_low, t_comp
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, costs: bool = True) -> dict:
+    cfg = get_config(arch)
+    kind, seq, batch = SHAPE_CELLS[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(mesh.devices.size)
+    rec: dict = dict(
+        arch=arch, shape=shape_name, kind=kind, seq=seq, batch=batch,
+        mesh="multi" if multi_pod else "single", chips=chips,
+    )
+
+    compiled, t_low, t_comp = _lower_cell(cfg, mesh, kind, seq, batch)
+    ma = compiled.memory_analysis()
+    rec["compile_s"] = round(t_comp, 2)
+    rec["lower_s"] = round(t_low, 2)
+    rec["memory"] = dict(
+        argument_bytes_per_dev=int(ma.argument_size_in_bytes),
+        output_bytes_per_dev=int(ma.output_size_in_bytes),
+        temp_bytes_per_dev=int(ma.temp_size_in_bytes),
+        alias_bytes_per_dev=int(ma.alias_size_in_bytes),
+    )
+    rec["collective_ops_schedule"] = count_collective_ops(compiled.as_text())
+
+    if costs:
+        c1, *_ = _lower_cell(_unit_layers(cfg, 1), mesh, kind, seq, batch)
+        c2, *_ = _lower_cell(_unit_layers(cfg, 2), mesh, kind, seq, batch)
+        cost = CellCost.extrapolate(cost_from_compiled(c1), cost_from_compiled(c2), _n_units(cfg))
+        mf = model_flops(cfg, kind, seq, batch)
+        rl = roofline_from_cost(cost, chips, mf)
+        rec["cost"] = dict(
+            flops_per_dev=cost.flops,
+            hbm_bytes_per_dev=cost.hbm_bytes,
+            coll_bytes_per_dev=cost.coll_bytes,
+            coll_breakdown=cost.coll_breakdown,
+        )
+        rec["roofline"] = rl.as_dict()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--no-costs", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPE_CELLS) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = []
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results if "error" not in r}
+    n_fail = 0
+    for arch in archs:
+        arch_shapes = get_shapes(arch)
+        for shape in shapes:
+            status = arch_shapes[shape]
+            for mp in meshes:
+                key = (arch, shape, "multi" if mp else "single")
+                if key in done:
+                    continue
+                if status.startswith("skip:"):
+                    results = [r for r in results if (r["arch"], r["shape"], r["mesh"]) != key]
+                    results.append(dict(arch=arch, shape=shape, mesh=key[2], skipped=status[5:]))
+                    out_path.write_text(json.dumps(results, indent=1))
+                    print(f"SKIP {key}: {status[5:]}", flush=True)
+                    continue
+                print(f"RUN  {key} ...", flush=True)
+                t0 = time.time()
+                try:
+                    # roofline costs only needed on the single-pod mesh
+                    rec = run_cell(arch, shape, mp, costs=not (mp or args.no_costs))
+                    print(
+                        f"  ok {time.time()-t0:.0f}s compile={rec['compile_s']}s "
+                        f"temp={rec['memory']['temp_bytes_per_dev']/2**30:.2f}GiB"
+                        + (
+                            f" dominant={rec['roofline']['dominant']}"
+                            f" frac={rec['roofline']['roofline_fraction']:.3f}"
+                            if "roofline" in rec
+                            else ""
+                        ),
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = dict(
+                        arch=arch, shape=shape, mesh=key[2],
+                        error=f"{type(e).__name__}: {e}",
+                        trace=traceback.format_exc()[-2000:],
+                    )
+                    n_fail += 1
+                    print(f"  FAIL {type(e).__name__}: {str(e)[:200]}", flush=True)
+                results = [r for r in results if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                out_path.write_text(json.dumps(results, indent=1))
+    print(f"done: {len(results)} cells, {n_fail} failures", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device state
+(jax locks the device count on first backend init — see dryrun.py lines 1-2).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Assigned production meshes: 16x16 chips per pod; 2 pods multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_solver_mesh(*, multi_pod: bool = False, ppn: int = 16):
+    """Two-level ("node", "proc") grid for the distributed ECG solver.
+
+    On TPU the slow tier is the pod boundary: multi-pod uses (pods=2,
+    chips-per-pod=256); the single-pod study groups chips into ICI
+    neighbourhoods of ``ppn`` to mirror the paper's (node, ppn) layout.
+    """
+    n_dev = len(jax.devices())
+    if multi_pod:
+        return jax.make_mesh((2, n_dev // 2), ("node", "proc"))
+    return jax.make_mesh((n_dev // ppn, ppn), ("node", "proc"))
+
+
+def make_smoke_mesh():
+    """1x1 mesh for CPU smoke paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))

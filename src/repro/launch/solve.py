@@ -1,0 +1,83 @@
+"""ECG solve driver (single- or multi-device).
+
+    PYTHONPATH=src python -m repro.launch.solve --matrix dg --t 8 \
+        --strategy tuned [--devices 8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--matrix", default="dg", choices=["dg", "fd", "random"])
+    ap.add_argument("--elements", type=int, default=16)
+    ap.add_argument("--block", type=int, default=16)
+    ap.add_argument("--t", type=int, default=8)
+    ap.add_argument("--tol", type=float, default=1e-8)
+    ap.add_argument("--strategy", default="tuned",
+                    choices=["sequential", "standard", "2step", "3step", "optimal", "tuned"])
+    ap.add_argument("--devices", type=int, default=0, help="force host devices (re-execs)")
+    ap.add_argument("--ppn", type=int, default=4)
+    args = ap.parse_args()
+
+    if args.devices and "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={args.devices}"
+        os.execv(sys.executable, [sys.executable, "-m", "repro.launch.solve"] + sys.argv[1:])
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.sparse import dg_laplace_2d, fd_laplace_2d, random_spd, csr_spmbv
+    from repro.core import ecg_solve, cg_solve
+    from repro.core.machines import TPU_V5E_POD
+
+    a = {
+        "dg": lambda: dg_laplace_2d((args.elements, args.elements), block=args.block),
+        "fd": lambda: fd_laplace_2d(args.elements * 4),
+        "random": lambda: random_spd(1024, density=0.02),
+    }[args.matrix]()
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(a.shape[0])
+    print(f"matrix: {a.shape[0]} rows, {a.nnz} nnz; t={args.t}")
+
+    if args.strategy == "sequential" or not args.devices:
+        t0 = time.time()
+        res = ecg_solve(lambda V: csr_spmbv(a, V), jnp.asarray(b), t=args.t, tol=args.tol, max_iters=5000)
+        print(f"sequential ECG: iters={res.n_iters} converged={res.converged} {time.time()-t0:.1f}s")
+        res_cg = cg_solve(lambda v: csr_spmbv(a, v[:, None])[:, 0], jnp.asarray(b), tol=args.tol, max_iters=20000)
+        print(f"reference CG:  iters={res_cg.n_iters}")
+        return
+
+    from repro.sparse.spmbv import distributed_ecg
+    from repro.sparse.partition import partition_csr
+    from repro.core.comm_graph import build_comm_graph
+    from repro.core.models import tune_strategy
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev // args.ppn, args.ppn), ("node", "proc"))
+    strategy = args.strategy
+    if strategy == "tuned":
+        pm = partition_csr(a, n_dev)
+        g = build_comm_graph(pm, ppn=args.ppn)
+        strategy, times = tune_strategy(g, args.t, TPU_V5E_POD.with_ppn(args.ppn))
+        print("tuned strategy:", strategy, {k: f"{v*1e6:.0f}us" for k, v in times.items()})
+    t0 = time.time()
+    res, op = distributed_ecg(a, b, mesh, t=args.t, strategy=strategy, tol=args.tol, max_iters=5000)
+    x = op.unshard(res.x)
+    relres = np.linalg.norm(np.asarray(a.todense(), np.float64) @ x - b) / np.linalg.norm(b) \
+        if a.shape[0] <= 8192 else float("nan")
+    print(
+        f"distributed ECG[{strategy}] on {n_dev} devices: iters={res.n_iters} "
+        f"converged={res.converged} relres={relres:.2e} {time.time()-t0:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Shared model configuration + sharding rules.
+
+One ``ArchConfig`` covers every assigned family (dense / moe / ssm / hybrid /
+encdec / vlm); family-specific fields are ignored elsewhere.  Sharding rules
+implement the 2-D FSDP("data") x TP("model") layout of DESIGN.md §4 with
+divisibility-aware fallback (jit in_shardings demand exact divisibility).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None        # default d_model // n_heads
+    mlp: str = "swiglu"              # swiglu | gelu
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    # --- moe ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- ssm / hybrid ---
+    d_state: int = 0
+    expand: int = 2
+    ssm_head_dim: int = 64
+    conv_width: int = 4
+    attn_period: int = 0             # hybrid: shared attn block every N layers
+    # --- encdec ---
+    n_enc_layers: int = 0
+    enc_ctx: int = 1500              # whisper frame positions (frontend stub)
+    # --- vlm ---
+    n_patches: int = 0               # paligemma image prefix length (stub)
+    # --- execution knobs (perf levers; see EXPERIMENTS.md §Perf) ---
+    dtype: Any = jnp.bfloat16
+    seq_parallel: bool = True        # shard residual stream seq over "model"
+    remat: bool = True
+    attn_logits_f32: bool = True
+    unroll: bool = False             # python-loop layers instead of lax.scan
+                                     # (dry-run cost extrapolation — XLA cost
+                                     # analysis counts scan bodies once)
+    # --- §Perf hillclimb levers (see EXPERIMENTS.md §Perf) ---
+    attn_chunk: int = 0              # online-softmax attention over KV chunks
+                                     # (kills S×S HBM materialization)
+    loss_chunk: int = 0              # CE loss computed over sequence chunks
+                                     # (kills fp32 full-logit materialization)
+    gqa_shard_fix: bool = False      # constrain K/V repeat to head-TP layout
+                                     # (avoids GSPMD involuntary remat on
+                                     # kv-uneven archs)
+    moe_scatter_combine: bool = False  # EP combine via reduce-scatter into the
+                                       # seq-sharded residual (vs all-reduce)
+    attn_seq_shard: bool = False     # shard attention by query positions over
+                                     # "model" instead of heads (no padding
+                                     # waste when H % tp != 0; SP-aligned)
+    dense_scatter_combine: bool = False  # row-parallel out-projections emit
+                                         # reduce-scatter into the seq-sharded
+                                         # residual instead of all-reduce
+    # padding of the vocab to a multiple (for TP divisibility); logits masked
+    vocab_pad_multiple: int = 256
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def vocab_padded(self) -> int:
+        m = self.vocab_pad_multiple
+        return (self.vocab + m - 1) // m * m
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------- counting
+    def param_count(self) -> int:
+        """Analytic parameter count (validated against published sizes)."""
+        d, f, dh = self.d_model, self.d_ff, self.head_dim
+        attn = d * self.n_heads * dh * 2 + d * self.n_kv_heads * dh * 2
+        mlp = (3 if self.mlp == "swiglu" else 2) * d * f
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.family in ("dense", "vlm"):
+            return self.n_layers * (attn + mlp) + emb
+        if self.family == "moe":
+            router = d * self.n_experts
+            return self.n_layers * (attn + self.n_experts * mlp + router) + emb
+        if self.family == "ssm":
+            return self.n_layers * self._ssm_layer_params() + self.vocab * d
+        if self.family == "hybrid":
+            shared = attn + mlp
+            return self.n_layers * self._ssm_layer_params() + shared + self.vocab * d
+        if self.family == "encdec":
+            enc = self.n_enc_layers * (attn + mlp)
+            dec = self.n_layers * (2 * attn + mlp)
+            return enc + dec + self.vocab * d
+        raise ValueError(self.family)
+
+    def _ssm_layer_params(self) -> int:
+        d, di, n, h = self.d_model, self.d_inner, self.d_state, self.n_ssm_heads
+        in_proj = d * (2 * di + 2 * n + h)
+        return in_proj + di * d + self.conv_width * (di + 2 * n) + 2 * h + di
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (for MODEL_FLOPS = 6·N_active·D)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        attn = d * self.n_heads * self.head_dim * 2 + d * self.n_kv_heads * self.head_dim * 2
+        mlp = (3 if self.mlp == "swiglu" else 2) * d * f
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + self.top_k * mlp + d * self.n_experts) + emb
+
+
+# ----------------------------------------------------------------- sharding
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Resolved axis names of the active mesh (pod axis optional)."""
+
+    batch: tuple[str, ...]   # ("pod","data") or ("data",)
+    fsdp: str | None         # "data"
+    model: str | None        # "model"
+    sizes: dict[str, int]
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        batch = tuple(a for a in ("pod", "data") if a in names) or (names[0],)
+        return cls(
+            batch=batch,
+            fsdp="data" if "data" in names else None,
+            model="model" if "model" in names else None,
+            sizes={n: s for n, s in zip(names, mesh.devices.shape)},
+        )
+
+    def size(self, axis: str | None) -> int:
+        return self.sizes.get(axis, 1) if axis else 1
+
+    def tp(self, dim: int) -> str | None:
+        """'model' if it divides dim, else None (replicate)."""
+        m = self.model
+        return m if m and dim % self.sizes[m] == 0 else None
+
+    def fs(self, dim: int) -> str | None:
+        f = self.fsdp
+        return f if f and dim % self.sizes[f] == 0 else None
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def constrain(x, mesh: Mesh, *spec):
+    return jax.lax.with_sharding_constraint(x, named(mesh, *spec))
+
+
+def logical_to_sharding(rules: dict, mesh: Mesh):
+    """Map a pytree of PartitionSpecs to NamedShardings."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        rules,
+        is_leaf=lambda s: isinstance(s, P),
+    )

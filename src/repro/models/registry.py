@@ -1,0 +1,92 @@
+"""Uniform model API dispatch: family -> module functions."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh
+
+from repro.models.common import ArchConfig, MeshAxes
+from repro.models import transformer as _tf
+from repro.models import ssm as _ssm
+from repro.models import encdec as _ed
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init_params: Callable
+    abstract_params: Callable
+    param_specs: Callable         # (cfg, axes) -> pytree of PartitionSpec
+    loss_fn: Callable             # (cfg, mesh) -> f(params, batch) -> loss
+    decode_step: Callable         # (cfg, mesh) -> f(params, cache, batch)
+    abstract_cache: Callable      # (cfg, batch, seq)
+    init_cache: Callable
+    cache_specs: Callable         # (cfg, axes, batch, seq)
+    train_input_specs: Callable   # (cfg, mesh, batch, seq) -> {name: (sds, spec)}
+
+
+_TRANSFORMER = ModelApi(
+    init_params=_tf.init_params,
+    abstract_params=_tf.abstract_params,
+    param_specs=_tf.param_specs,
+    loss_fn=_tf.loss_fn,
+    decode_step=_tf.decode_step,
+    abstract_cache=_tf.abstract_cache,
+    init_cache=_tf.init_cache,
+    cache_specs=_tf.cache_specs,
+    train_input_specs=_tf.train_input_specs,
+)
+
+_SSM = ModelApi(
+    init_params=_ssm.init_params,
+    abstract_params=_ssm.abstract_params,
+    param_specs=_ssm.param_specs,
+    loss_fn=_ssm.loss_fn,
+    decode_step=_ssm.decode_step,
+    abstract_cache=_ssm.abstract_cache,
+    init_cache=_ssm.init_cache,
+    cache_specs=_ssm.cache_specs,
+    train_input_specs=_ssm.train_input_specs,
+)
+
+_ENCDEC = ModelApi(
+    init_params=_ed.init_params,
+    abstract_params=_ed.abstract_params,
+    param_specs=_ed.param_specs,
+    loss_fn=_ed.loss_fn,
+    decode_step=_ed.decode_step,
+    abstract_cache=_ed.abstract_cache,
+    init_cache=_ed.init_cache,
+    cache_specs=_ed.cache_specs,
+    train_input_specs=_ed.train_input_specs,
+)
+
+_BY_FAMILY = {
+    "dense": _TRANSFORMER,
+    "moe": _TRANSFORMER,
+    "vlm": _TRANSFORMER,
+    "ssm": _SSM,
+    "hybrid": _SSM,
+    "encdec": _ENCDEC,
+}
+
+
+def model_api(cfg: ArchConfig) -> ModelApi:
+    return _BY_FAMILY[cfg.family]
+
+
+def serve_input_specs(cfg: ArchConfig, mesh: Mesh, batch: int):
+    """Decode-step inputs: one token + position per sequence."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    import numpy as np
+
+    axes = MeshAxes.from_mesh(mesh)
+    bsz = int(np.prod([axes.size(a) for a in axes.batch]))
+    bspec = P(axes.batch) if batch % bsz == 0 else P()
+    return {
+        "token": (jax.ShapeDtypeStruct((batch,), jnp.int32), bspec),
+        "pos": (jax.ShapeDtypeStruct((batch,), jnp.int32), bspec),
+    }

@@ -1,0 +1,417 @@
+"""Mamba2 (SSD — state-space duality) and the Zamba2 hybrid.
+
+Training uses the chunked matmul form of SSD (intra-chunk quadratic term +
+inter-chunk state recurrence), which maps onto the MXU; decode is the O(1)
+per-token state update.  Heads shard over "model" (48 and 64 heads for the
+assigned configs — both divide 16).
+
+Zamba2: Mamba2 backbone + ONE shared attention+MLP block applied every
+``attn_period`` layers (parameters shared across applications, per the
+Zamba2 design; per-application LoRA deltas are omitted — noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.common import ArchConfig, MeshAxes, constrain
+from repro.models import layers as L
+
+
+# ------------------------------------------------------------------ params
+def ssm_layer_shapes(cfg: ArchConfig, n: int) -> dict[str, tuple]:
+    d, di, nst, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_ssm_heads
+    conv_dim = di + 2 * nst
+    return {
+        "ln": (n, d),
+        "in_proj": (n, d, 2 * di + 2 * nst + h),
+        "conv_w": (n, cfg.conv_width, conv_dim),
+        "conv_b": (n, conv_dim),
+        "A_log": (n, h),
+        "D_skip": (n, h),
+        "dt_bias": (n, h),
+        "out_ln": (n, di),
+        "out_proj": (n, di, d),
+    }
+
+
+def ssm_layer_specs(cfg: ArchConfig, axes: MeshAxes, n_dim: bool = True) -> dict[str, P]:
+    d, di, nst, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_ssm_heads
+    fs = axes.fs
+    lead = (None,) if n_dim else ()
+    return {
+        "ln": P(*lead, None),
+        "in_proj": P(*lead, fs(d), axes.tp(2 * di + 2 * nst + h)),
+        "conv_w": P(*lead, None, None),
+        "conv_b": P(*lead, None),
+        "A_log": P(*lead, axes.tp(h)),
+        "D_skip": P(*lead, axes.tp(h)),
+        "dt_bias": P(*lead, axes.tp(h)),
+        "out_ln": P(*lead, None),
+        "out_proj": P(*lead, axes.tp(di), fs(d)),
+    }
+
+
+def param_shapes(cfg: ArchConfig) -> dict[str, Any]:
+    shapes = {
+        "emb": (cfg.vocab_padded, cfg.d_model),
+        "final_ln": (cfg.d_model,),
+        "layers": ssm_layer_shapes(cfg, cfg.n_layers),
+    }
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (cfg.d_model, cfg.vocab_padded)
+    if cfg.family == "hybrid":
+        d, f, h, kv, dh = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        shapes["shared"] = {
+            "ln1": (d,), "ln2": (d,),
+            "wq": (d, h, dh), "wk": (d, kv, dh), "wv": (d, kv, dh), "wo": (h, dh, d),
+            "wg": (d, f), "wu": (d, f), "wd": (f, d),
+        }
+    return shapes
+
+
+def param_specs(cfg: ArchConfig, axes: MeshAxes) -> dict[str, Any]:
+    specs = {
+        "emb": P(axes.tp(cfg.vocab_padded), axes.fs(cfg.d_model)),
+        "final_ln": P(None),
+        "layers": ssm_layer_specs(cfg, axes),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(axes.fs(cfg.d_model), axes.tp(cfg.vocab_padded))
+    if cfg.family == "hybrid":
+        d, f, h, kv = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv_heads
+        fs, tp = axes.fs, axes.tp
+        specs["shared"] = {
+            "ln1": P(None), "ln2": P(None),
+            "wq": P(fs(d), tp(h), None), "wk": P(fs(d), tp(kv), None),
+            "wv": P(fs(d), tp(kv), None), "wo": P(tp(h), None, fs(d)),
+            "wg": P(fs(d), tp(f)), "wu": P(fs(d), tp(f)), "wd": P(tp(f), fs(d)),
+        }
+    return specs
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s, cfg.dtype),
+        param_shapes(cfg),
+        is_leaf=lambda s: isinstance(s, tuple),
+    )
+
+
+def init_params(cfg: ArchConfig, key):
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten_with_path(shapes, is_leaf=lambda s: isinstance(s, tuple))
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for k, (path, shape) in zip(keys, flat):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("ln", "out_ln", "final_ln", "ln1", "ln2", "conv_b", "D_skip"):
+            leaves.append(jnp.ones(shape, cfg.dtype))
+        elif name == "A_log":
+            leaves.append(jnp.log(jnp.broadcast_to(jnp.arange(1, shape[-1] + 1, dtype=jnp.float32), shape)).astype(cfg.dtype))
+        elif name == "dt_bias":
+            leaves.append(jnp.full(shape, -1.0, cfg.dtype))
+        else:
+            fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+            leaves.append((jax.random.normal(k, shape) * fan_in ** -0.5).astype(cfg.dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------------- SSD
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, x (B,S,C), w (W,C)."""
+    ww = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (ww - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(ww))
+    return out + b
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p)   dt: (b, s, h)   A: (h,) negative
+    B, C: (b, s, n)   returns y (b, s, h, p) and final state (b, h, p, n),
+    both fp32 (state precision; callers cast activations back down).
+    """
+    x = x.astype(jnp.float32)
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    xr = x.reshape(b, nc, chunk, h, p)
+    dtr = dt.reshape(b, nc, chunk, h)
+    Br = B.reshape(b, nc, chunk, n)
+    Cr = C.reshape(b, nc, chunk, n)
+
+    la = dtr * A  # (b, nc, q, h) log-decay per step (negative)
+    cum = jnp.cumsum(la, axis=2)  # inclusive
+    xbar = xr * dtr[..., None]
+
+    # intra-chunk quadratic term (batched over chunks — one big einsum set).
+    # mask the EXPONENT, not the result: exp() of the (positive) anti-causal
+    # entries overflows and poisons gradients through the where.
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,q,j,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))[None, None, :, :, None]
+    li = jnp.where(causal, jnp.minimum(li, 0.0), -jnp.inf)
+    decay = jnp.exp(li)
+    cb = jnp.einsum("bcqn,bcjn->bcqj", Cr, Br)  # (b,nc,q,j)
+    y_intra = jnp.einsum("bcqj,bcqjh,bcjhp->bcqhp", cb, decay, xbar)
+
+    # inter-chunk recurrence over states
+    sum_la = cum[:, :, -1, :]  # (b,nc,h)
+    chunk_in = jnp.einsum(
+        "bcjhp,bcjn,bcjh->bchpn", xbar, Br, jnp.exp(sum_la[:, :, None, :] - cum)
+    )  # contribution of each chunk to its end-state
+
+    def scan_fn(state, inp):
+        ci, sl = inp  # (b,h,p,n), (b,h)
+        new = state * jnp.exp(sl)[..., None, None] + ci
+        return new, state  # emit the state *entering* the chunk
+
+    s0 = jnp.zeros((b, h, p, n), x.dtype)
+    final, entering = jax.lax.scan(
+        scan_fn,
+        s0,
+        (chunk_in.transpose(1, 0, 2, 3, 4), sum_la.transpose(1, 0, 2)),
+    )
+    entering = entering.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cr, entering, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_layer(cfg: ArchConfig, mesh: Mesh, axes: MeshAxes, x, p, chunk: int = 128):
+    """One Mamba2 block (training path). x: (B, S, D)."""
+    b, s, d = x.shape
+    di, nst, h = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads
+    hd = cfg.ssm_head_dim
+    res = x
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", xn, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * nst], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, B, C = jnp.split(xbc, [di, di + nst], axis=-1)
+    xs = constrain(xs.reshape(b, s, h, hd), mesh, axes.batch, None, axes.tp(h), None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xs, dt, A, B.astype(jnp.float32), C.astype(jnp.float32), chunk=min(chunk, s))
+    y = y.astype(x.dtype) + xs * p["D_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di) * jax.nn.silu(z)
+    y = L.rms_norm(y, p["out_ln"], cfg.norm_eps)
+    return res + jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+
+
+def ssm_decode_layer(cfg: ArchConfig, x, p, state):
+    """One-token decode. x: (B, 1, D); state dict {conv: (B,W-1,convdim),
+    ssm: (B,H,P,N)} -> (y, new_state)."""
+    b = x.shape[0]
+    di, nst, h, hd = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    res = x
+    xn = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", xn, p["in_proj"])[:, 0]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * nst], axis=-1)
+    window = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)  # (B,W,convdim)
+    xbc = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv = window[:, 1:]
+    xs, B, C = jnp.split(xbc, [di, di + nst], axis=-1)
+    xs = xs.reshape(b, h, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * A)  # (B,H)
+    s_new = state["ssm"] * da[..., None, None].astype(state["ssm"].dtype) + jnp.einsum(
+        "bhp,bn,bh->bhpn", xs.astype(jnp.float32), B.astype(jnp.float32), dt
+    ).astype(state["ssm"].dtype)
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(s_new.dtype), s_new).astype(x.dtype) \
+        + xs * p["D_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, di) * jax.nn.silu(z)
+    y = L.rms_norm(y, p["out_ln"], cfg.norm_eps)
+    out = res + jnp.einsum("bk,kd->bd", y, p["out_proj"])[:, None].astype(res.dtype)
+    return out, {"conv": new_conv.astype(res.dtype), "ssm": s_new}
+
+
+# ---------------------------------------------------------------- forwards
+def _shared_attn_block(cfg, mesh, axes, x, sp, positions):
+    h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv(cfg, h, sp, positions)
+    mask = None if cfg.attn_chunk else L.causal_mask(x.shape[1])
+    o = L.attention(cfg, mesh, axes, q, k, v, mask, mask_kind="causal")
+    x = x + jnp.einsum("bshe,hed->bsd", o, sp["wo"])
+    h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + L.mlp_block(cfg, mesh, axes, h, sp)
+
+
+def forward(cfg: ArchConfig, mesh: Mesh, params, tokens):
+    axes = MeshAxes.from_mesh(mesh)
+    x = params["emb"][tokens].astype(cfg.dtype)
+    b, s, _ = x.shape
+    rspec = (axes.batch, None, None)
+    x = constrain(x, mesh, *rspec)
+    positions = jnp.arange(s)[None, :]
+
+    def seg_scan(x, seg_params):
+        def body(carry, lp):
+            y = ssm_layer(cfg, mesh, axes, carry, lp)
+            return constrain(y, mesh, *rspec), None
+        if cfg.remat:
+            body = jax.remat(body)
+        if cfg.unroll:
+            k = jax.tree.leaves(seg_params)[0].shape[0]
+            for i in range(k):
+                x, _ = body(x, jax.tree.map(lambda w: w[i], seg_params))
+            return x
+        x, _ = jax.lax.scan(body, x, seg_params)
+        return x
+
+    n = cfg.n_layers
+    if cfg.family == "hybrid" and cfg.attn_period:
+        per = cfg.attn_period
+
+        def shared_fn(xx, sp):
+            return _shared_attn_block(cfg, mesh, axes, xx, sp, positions)
+
+        shared = jax.remat(shared_fn) if cfg.remat else shared_fn
+        for s0 in range(0, n, per):
+            e0 = min(s0 + per, n)
+            x = shared(x, params["shared"])
+            x = seg_scan(x, jax.tree.map(lambda a: a[s0:e0], params["layers"]))
+    else:
+        x = seg_scan(x, params["layers"])
+    return L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ArchConfig, mesh: Mesh):
+    from repro.models.transformer import lm_loss
+
+    def f(params, batch):
+        x = forward(cfg, mesh, params, batch["tokens"])
+        return lm_loss(cfg, mesh, params, x, batch["labels"])
+
+    return f
+
+
+# ------------------------------------------------------------------ decode
+def cache_shapes(cfg: ArchConfig, batch: int, seq: int):
+    di, nst, h, hd = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    conv_dim = di + 2 * nst
+    shapes = {
+        "conv": (cfg.n_layers, batch, cfg.conv_width - 1, conv_dim),
+        "ssm": (cfg.n_layers, batch, h, hd, nst),
+    }
+    if cfg.family == "hybrid" and cfg.attn_period:
+        n_apps = math.ceil(cfg.n_layers / cfg.attn_period)
+        kv, dh = cfg.n_kv_heads, cfg.head_dim
+        shapes |= {
+            "k": (n_apps, batch, seq, kv, dh),
+            "v": (n_apps, batch, seq, kv, dh),
+        }
+    return shapes
+
+
+def abstract_cache(cfg, batch, seq):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s, jnp.float32 if len(s) == 5 and s[-1] == cfg.d_state else cfg.dtype),
+        cache_shapes(cfg, batch, seq),
+        is_leaf=lambda s: isinstance(s, tuple),
+    )
+
+
+def init_cache(cfg, batch, seq):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        abstract_cache(cfg, batch, seq),
+        is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct),
+    )
+
+
+def cache_specs(cfg: ArchConfig, axes: MeshAxes, batch: int, seq: int) -> dict:
+    h = cfg.n_ssm_heads
+    bsz = int(np.prod([axes.size(a) for a in axes.batch]))
+    batch_ax = axes.batch if batch % bsz == 0 else None
+    specs = {
+        "conv": P(None, batch_ax, None, None),
+        "ssm": P(None, batch_ax, axes.tp(h), None, None),
+    }
+    if cfg.family == "hybrid" and cfg.attn_period:
+        kv_tp = axes.tp(cfg.n_kv_heads)
+        # long-context hybrid decode: KV cache sequence-sharded over "data"
+        # when the batch cannot occupy it (DESIGN.md §4, long_500k)
+        seq_data = None
+        if batch_ax is None and axes.fsdp and seq % axes.sizes[axes.fsdp] == 0:
+            seq_data = axes.fsdp
+        specs |= {
+            "k": P(None, batch_ax, seq_data, kv_tp, None),
+            "v": P(None, batch_ax, seq_data, kv_tp, None),
+        }
+    return specs
+
+
+def decode_step(cfg: ArchConfig, mesh: Mesh):
+    axes = MeshAxes.from_mesh(mesh)
+    from repro.models.transformer import logits_from_hidden, _scatter_cache
+
+    def f(params, cache, batch):
+        token, pos = batch["token"], batch["pos"]
+        x = params["emb"][token][:, None].astype(cfg.dtype)
+
+        def ssm_seg(x, seg_params, seg_cache):
+            def body(carry, inp):
+                lp, cv, sm = inp
+                y, ns = ssm_decode_layer(cfg, carry, lp, {"conv": cv, "ssm": sm})
+                return y, (ns["conv"], ns["ssm"])
+            if cfg.unroll:
+                k = jax.tree.leaves(seg_params)[0].shape[0]
+                cvs, sms = [], []
+                for i in range(k):
+                    lp = jax.tree.map(lambda w: w[i], seg_params)
+                    x, (cv, sm) = body(x, (lp, seg_cache["conv"][i], seg_cache["ssm"][i]))
+                    cvs.append(cv), sms.append(sm)
+                return x, {"conv": jnp.stack(cvs), "ssm": jnp.stack(sms)}
+            x, (cvs, sms) = jax.lax.scan(body, x, (seg_params, seg_cache["conv"], seg_cache["ssm"]))
+            return x, {"conv": cvs, "ssm": sms}
+
+        n = cfg.n_layers
+        if cfg.family == "hybrid" and cfg.attn_period:
+            per = cfg.attn_period
+            new_conv, new_ssm, new_k, new_v = [], [], [], []
+            s_cache = cache["k"].shape[2]
+            for app, s0 in enumerate(range(0, n, per)):
+                e0 = min(s0 + per, n)
+                sp = params["shared"]
+                hnorm = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+                q, k, v = L.qkv(cfg, hnorm, sp, pos[:, None])
+                kc = _scatter_cache(cache["k"][app], k, pos)
+                vc = _scatter_cache(cache["v"][app], v, pos)
+                new_k.append(kc), new_v.append(vc)
+                mask = jnp.arange(s_cache)[None, None, None, :] <= pos[:, None, None, None]
+                o = L.attention(cfg, mesh, axes, q, kc, vc, mask)
+                x = x + jnp.einsum("bshe,hed->bsd", o, sp["wo"])
+                hnorm = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+                x = x + L.mlp_block(cfg, mesh, axes, hnorm, sp)
+                seg = jax.tree.map(lambda a: a[s0:e0], params["layers"])
+                segc = {"conv": cache["conv"][s0:e0], "ssm": cache["ssm"][s0:e0]}
+                x, nsc = ssm_seg(x, seg, segc)
+                new_conv.append(nsc["conv"]), new_ssm.append(nsc["ssm"])
+            new_cache = {
+                "conv": jnp.concatenate(new_conv),
+                "ssm": jnp.concatenate(new_ssm),
+                "k": jnp.stack(new_k),
+                "v": jnp.stack(new_v),
+            }
+        else:
+            x, new_cache = ssm_seg(x, params["layers"], cache)
+        x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = logits_from_hidden(cfg, mesh, params, x)[:, 0]
+        return logits, new_cache
+
+    return f
+
+
+def train_input_specs(cfg: ArchConfig, mesh: Mesh, batch: int, seq: int):
+    from repro.models.transformer import train_input_specs as tis
+
+    return {k: v for k, v in tis(cfg.with_(family="dense"), mesh, batch, seq).items()}

@@ -1,0 +1,351 @@
+"""Decoder-only transformer (dense / MoE / VLM-backbone) with 2-D sharding.
+
+Covers: phi3-medium-14b, stablelm-1.6b, granite-20b/8b, phi3.5-moe, olmoe,
+paligemma-3b (image prefix stubbed as precomputed patch embeddings per the
+assignment).  Layers run under ``lax.scan`` with optional remat and
+sequence-parallel residual stream.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.common import ArchConfig, MeshAxes, constrain
+from repro.models import layers as L
+from repro.models.moe import moe_ffn
+
+
+# ------------------------------------------------------------------ params
+def layer_shapes(cfg: ArchConfig) -> dict[str, tuple]:
+    d, f, h, kv, dh, n = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    shapes = {
+        "ln1": (n, d),
+        "wq": (n, d, h, dh),
+        "wk": (n, d, kv, dh),
+        "wv": (n, d, kv, dh),
+        "wo": (n, h, dh, d),
+        "ln2": (n, d),
+    }
+    if cfg.family == "moe":
+        e = cfg.n_experts
+        shapes |= {
+            "router": (n, d, e),
+            "we_g": (n, e, d, f),
+            "we_u": (n, e, d, f),
+            "we_d": (n, e, f, d),
+        }
+        if cfg.mlp != "swiglu":
+            shapes.pop("we_g")
+    else:
+        shapes |= {"wg": (n, d, f), "wu": (n, d, f), "wd": (n, f, d)}
+        if cfg.mlp != "swiglu":
+            shapes.pop("wg")
+    return shapes
+
+
+def param_shapes(cfg: ArchConfig) -> dict[str, Any]:
+    shapes = {
+        "emb": (cfg.vocab_padded, cfg.d_model),
+        "final_ln": (cfg.d_model,),
+        "layers": layer_shapes(cfg),
+    }
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (cfg.d_model, cfg.vocab_padded)
+    return shapes
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s, cfg.dtype),
+        param_shapes(cfg),
+        is_leaf=lambda s: isinstance(s, tuple),
+    )
+
+
+def init_params(cfg: ArchConfig, key):
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes, is_leaf=lambda s: isinstance(s, tuple))
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for k, shape in zip(keys, flat):
+        fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+        if len(shape) <= 2 and shape[-1] == cfg.d_model:  # norms
+            leaves.append(jnp.ones(shape, cfg.dtype))
+        else:
+            leaves.append(
+                (jax.random.normal(k, shape) * (0.02 if len(shape) <= 2 else fan_in ** -0.5)).astype(cfg.dtype)
+            )
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def param_specs(cfg: ArchConfig, axes: MeshAxes) -> dict[str, Any]:
+    """2-D FSDP x TP PartitionSpecs (divisibility-aware, DESIGN.md §4)."""
+    d, f, h, kv, dh = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    vp = cfg.vocab_padded
+    fs, tp = axes.fs, axes.tp
+    specs = {
+        "emb": P(tp(vp), fs(d)),
+        "final_ln": P(None),
+        "layers": {
+            "ln1": P(None, None),
+            "ln2": P(None, None),
+            "wq": P(None, fs(d), tp(h), None),
+            "wk": P(None, fs(d), tp(kv), None),
+            "wv": P(None, fs(d), tp(kv), None),
+            "wo": P(None, tp(h), None, fs(d)),
+        },
+    }
+    if cfg.family == "moe":
+        e = cfg.n_experts
+        specs["layers"] |= {
+            "router": P(None, fs(d), None),
+            "we_g": P(None, tp(e), fs(d), None),
+            "we_u": P(None, tp(e), fs(d), None),
+            "we_d": P(None, tp(e), None, fs(d)),
+        }
+        if cfg.mlp != "swiglu":
+            specs["layers"].pop("we_g")
+    else:
+        specs["layers"] |= {
+            "wg": P(None, fs(d), tp(f)),
+            "wu": P(None, fs(d), tp(f)),
+            "wd": P(None, tp(f), fs(d)),
+        }
+        if cfg.mlp != "swiglu":
+            specs["layers"].pop("wg")
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(fs(d), tp(vp))
+    return specs
+
+
+# ----------------------------------------------------------------- forward
+def _residual_spec(cfg: ArchConfig, axes: MeshAxes, s: int):
+    seq_ax = (
+        axes.model
+        if cfg.seq_parallel and axes.model and s % axes.size(axes.model) == 0
+        else None
+    )
+    return (axes.batch, seq_ax, None)
+
+
+def decoder_layer(cfg: ArchConfig, mesh: Mesh, axes: MeshAxes, x, p, positions, mask,
+                  mask_kind: str = "causal"):
+    s = x.shape[1]
+    rspec = _residual_spec(cfg, axes, s)
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv(cfg, h, p, positions)
+    o = L.attention(cfg, mesh, axes, q, k, v, mask, mask_kind=mask_kind)
+    x = x + constrain(jnp.einsum("bshe,hed->bsd", o, p["wo"]), mesh, *rspec)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        ff, aux = moe_ffn(cfg, mesh, axes, h, p)
+    else:
+        ff, aux = L.mlp_block(cfg, mesh, axes, h, p), 0.0
+    x = x + constrain(ff, mesh, *rspec)
+    return x, aux
+
+
+def forward(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    params,
+    tokens=None,           # (B, S) int32
+    embeds=None,           # (B, S_img, D) for VLM prefix (stub frontend)
+    positions=None,
+    layer_range: tuple[int, int] | None = None,
+):
+    """Token (+ optional image-prefix) forward to final hidden states."""
+    axes = MeshAxes.from_mesh(mesh)
+    x = params["emb"][tokens].astype(cfg.dtype)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(cfg.dtype), x], axis=1)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    rspec = _residual_spec(cfg, axes, s)
+    x = constrain(x, mesh, *rspec)
+
+    if cfg.family == "vlm" and embeds is not None:
+        mask_kind = f"prefix:{embeds.shape[1]}"
+        mask = None if cfg.attn_chunk else L.prefix_lm_mask(s, embeds.shape[1])
+    else:
+        mask_kind = "causal"
+        mask = None if cfg.attn_chunk else L.causal_mask(s)
+
+    def body(carry, lp):
+        y, aux = decoder_layer(cfg, mesh, axes, carry, lp, positions, mask, mask_kind)
+        return constrain(y, mesh, *rspec), aux
+
+    if cfg.remat:
+        body = jax.remat(body)
+    if cfg.unroll:
+        auxs = []
+        for i in range(cfg.n_layers):
+            x, a = body(x, jax.tree.map(lambda w: w[i], params["layers"]))
+            auxs.append(a)
+        auxs = jnp.stack(auxs) if cfg.family == "moe" else jnp.zeros(())
+    else:
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return x, jnp.sum(auxs) if cfg.family == "moe" else 0.0
+
+
+def logits_from_hidden(cfg: ArchConfig, mesh: Mesh, params, x):
+    axes = MeshAxes.from_mesh(mesh)
+    head = params["emb"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return constrain(logits, mesh, axes.batch, None, axes.tp(cfg.vocab_padded))
+
+
+def cross_entropy(cfg: ArchConfig, logits, labels, mask=None):
+    """Stable CE over the padded vocab (pad ids masked to -inf)."""
+    vp = logits.shape[-1]
+    valid = (jnp.arange(vp) < cfg.vocab)[None, None, :]
+    logits = jnp.where(valid, logits.astype(jnp.float32), -jnp.inf)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def lm_loss(cfg: ArchConfig, mesh: Mesh, params, x, labels):
+    """Projection + CE, optionally chunked over the sequence so the fp32
+    (B, S, V) logits never materialize at once (§Perf lever)."""
+    if not cfg.loss_chunk or x.shape[1] % cfg.loss_chunk:
+        return cross_entropy(cfg, logits_from_hidden(cfg, mesh, params, x), labels)
+    c = cfg.loss_chunk
+    nc = x.shape[1] // c
+    xs = x.reshape(x.shape[0], nc, c, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(labels.shape[0], nc, c).transpose(1, 0, 2)
+
+    def body(tot, inp):
+        xc, lc = inp
+        logits = logits_from_hidden(cfg, mesh, params, xc)
+        return tot + cross_entropy(cfg, logits, lc) * lc.size, None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return tot / labels.size
+
+
+def loss_fn(cfg: ArchConfig, mesh: Mesh):
+    def f(params, batch):
+        embeds = batch.get("patch_embeds") if cfg.family == "vlm" else None
+        x, aux = forward(cfg, mesh, params, tokens=batch["tokens"], embeds=embeds)
+        if embeds is not None:
+            x = x[:, embeds.shape[1] :]  # loss over text positions only
+        loss = lm_loss(cfg, mesh, params, x, batch["labels"])
+        return loss + 0.01 * aux
+
+    return f
+
+
+# ------------------------------------------------------------------ decode
+def cache_shapes(cfg: ArchConfig, batch: int, seq: int):
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": (cfg.n_layers, batch, seq, kv, dh),
+        "v": (cfg.n_layers, batch, seq, kv, dh),
+    }
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, seq: int):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s, cfg.dtype),
+        cache_shapes(cfg, batch, seq),
+        is_leaf=lambda s: isinstance(s, tuple),
+    )
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s, cfg.dtype),
+        cache_shapes(cfg, batch, seq),
+        is_leaf=lambda s: isinstance(s, tuple),
+    )
+
+
+def cache_specs(cfg: ArchConfig, axes: MeshAxes, batch: int, seq: int) -> dict:
+    """KV sharded over "model" when divisible, else the *sequence* dim is
+    sharded over "model" (memory-parallel attention — DESIGN.md §4)."""
+    kv_tp = axes.tp(cfg.n_kv_heads)
+    seq_tp = None if kv_tp else axes.tp(seq)
+    batch_ax = axes.batch if batch % int(np.prod([axes.size(a) for a in axes.batch])) == 0 else None
+    spec = P(None, batch_ax, seq_tp, kv_tp, None)
+    return {"k": spec, "v": spec}
+
+
+def decode_step(cfg: ArchConfig, mesh: Mesh):
+    """One-token decode against a (B, S_cache) KV cache.
+
+    batch = {"token": (B,) int32, "pos": (B,) int32 current positions}
+    """
+    axes = MeshAxes.from_mesh(mesh)
+
+    def f(params, cache, batch):
+        token, pos = batch["token"], batch["pos"]
+        b = token.shape[0]
+        x = params["emb"][token][:, None].astype(cfg.dtype)  # (B, 1, D)
+        s_cache = cache["k"].shape[2]
+
+        def body(carry, inputs):
+            x = carry
+            lp, kc, vc = inputs
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = L.qkv(cfg, h, lp, pos[:, None])
+            kc = _scatter_cache(kc, k, pos)
+            vc = _scatter_cache(vc, v, pos)
+            mask = (jnp.arange(s_cache)[None, None, None, :] <= pos[:, None, None, None])
+            o = L.attention(cfg, mesh, axes, q, kc, vc, mask)
+            x = x + jnp.einsum("bshe,hed->bsd", o, lp["wo"])
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                ff, _ = moe_ffn(cfg, mesh, axes, h, lp)
+            else:
+                ff = L.mlp_block(cfg, mesh, axes, h, lp)
+            return x + ff, (kc, vc)
+
+        if cfg.unroll:
+            kcs, vcs = [], []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda w: w[i], params["layers"])
+                x, (kc, vc) = body(x, (lp, cache["k"][i], cache["v"][i]))
+                kcs.append(kc), vcs.append(vc)
+            kcs, vcs = jnp.stack(kcs), jnp.stack(vcs)
+        else:
+            x, (kcs, vcs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = logits_from_hidden(cfg, mesh, params, x)[:, 0]
+        return logits, {"k": kcs, "v": vcs}
+
+    return f
+
+
+def _scatter_cache(cache, kv_new, pos):
+    """cache (B,S,KV,dh) <- kv_new (B,1,KV,dh) at per-batch positions."""
+    b = cache.shape[0]
+    onehot = jax.nn.one_hot(pos, cache.shape[1], dtype=cache.dtype)  # (B, S)
+    return cache * (1 - onehot[..., None, None]) + kv_new * onehot[..., None, None]
+
+
+def train_input_specs(cfg: ArchConfig, mesh: Mesh, batch: int, seq: int):
+    axes = MeshAxes.from_mesh(mesh)
+    bspec = P(axes.batch, None)
+    out = {
+        "tokens": (jax.ShapeDtypeStruct((batch, seq), jnp.int32), bspec),
+        "labels": (jax.ShapeDtypeStruct((batch, seq), jnp.int32), bspec),
+    }
+    if cfg.family == "vlm":
+        out["patch_embeds"] = (
+            jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model), cfg.dtype),
+            P(axes.batch, None, None),
+        )
+    return out

@@ -1,0 +1,31 @@
+"""Sparse-matrix substrate: containers, partitioning, generators, distributed SpMBV."""
+
+from repro.sparse.csr import CSRMatrix, BSRMatrix, csr_to_bsr, csr_spmv, csr_spmbv
+from repro.sparse.partition import RowPartition, PartitionedMatrix, partition_csr
+from repro.sparse.matrices import (
+    dg_laplace_2d,
+    fd_laplace_2d,
+    fd_laplace_3d,
+    random_spd,
+    suite_surrogate,
+    SUITE_MATRICES,
+    EXAMPLE_2_1,
+)
+
+__all__ = [
+    "CSRMatrix",
+    "BSRMatrix",
+    "csr_to_bsr",
+    "csr_spmv",
+    "csr_spmbv",
+    "RowPartition",
+    "PartitionedMatrix",
+    "partition_csr",
+    "dg_laplace_2d",
+    "fd_laplace_2d",
+    "fd_laplace_3d",
+    "random_spd",
+    "suite_surrogate",
+    "SUITE_MATRICES",
+    "EXAMPLE_2_1",
+]

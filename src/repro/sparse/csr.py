@@ -1,0 +1,214 @@
+"""CSR and BSR sparse-matrix containers backed by JAX arrays.
+
+The CSR container mirrors the row-wise storage the paper assumes (§3: "an
+n x n matrix A with nnz nonzeros is partitioned row-wise").  The BSR
+container is the TPU-native adaptation (DESIGN.md §2): fixed-size dense
+tiles so the local SpMBV feeds the MXU instead of doing scalar gathers.
+
+Both containers are pytrees, so they pass through jit/shard_map.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSRMatrix:
+    """Compressed-sparse-row matrix.
+
+    indptr:  (n_rows + 1,) int32
+    indices: (nnz,) int32 column ids
+    data:    (nnz,) values
+    shape:   static (n_rows, n_cols)
+    """
+
+    indptr: jax.Array
+    indices: jax.Array
+    data: jax.Array
+    shape: tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.indptr, self.indices, self.data), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, leaves):
+        return cls(*leaves, shape=shape)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    def todense(self) -> jax.Array:
+        """Dense materialization (tests / small problems only)."""
+        n, m = self.shape
+        row_ids = jnp.repeat(
+            jnp.arange(n, dtype=jnp.int32),
+            jnp.diff(self.indptr),
+            total_repeat_length=self.nnz,
+        )
+        dense = jnp.zeros((n, m), self.data.dtype)
+        return dense.at[row_ids, self.indices].add(self.data)
+
+    @classmethod
+    def from_scipy(cls, mat) -> "CSRMatrix":
+        mat = mat.tocsr()
+        return cls(
+            indptr=jnp.asarray(mat.indptr, jnp.int32),
+            indices=jnp.asarray(mat.indices, jnp.int32),
+            data=jnp.asarray(mat.data),
+            shape=tuple(mat.shape),
+        )
+
+    @classmethod
+    def from_dense(cls, dense) -> "CSRMatrix":
+        dense = np.asarray(dense)
+        n, m = dense.shape
+        indptr = [0]
+        indices = []
+        data = []
+        for i in range(n):
+            (cols,) = np.nonzero(dense[i])
+            indices.extend(cols.tolist())
+            data.extend(dense[i, cols].tolist())
+            indptr.append(len(indices))
+        return cls(
+            indptr=jnp.asarray(indptr, jnp.int32),
+            indices=jnp.asarray(indices, jnp.int32),
+            data=jnp.asarray(data, dense.dtype),
+            shape=(n, m),
+        )
+
+
+def _expand_rows(indptr: jax.Array, nnz: int) -> jax.Array:
+    """indptr -> per-nonzero row index (int32)."""
+    n = indptr.shape[0] - 1
+    return jnp.repeat(
+        jnp.arange(n, dtype=jnp.int32), jnp.diff(indptr), total_repeat_length=nnz
+    )
+
+
+@partial(jax.jit, static_argnames=())
+def csr_spmv(a: CSRMatrix, v: jax.Array) -> jax.Array:
+    """w = A @ v for a single vector. Segment-sum formulation (XLA-friendly)."""
+    rows = _expand_rows(a.indptr, a.nnz)
+    prod = a.data * v[a.indices]
+    return jax.ops.segment_sum(prod, rows, num_segments=a.n_rows)
+
+
+@partial(jax.jit, static_argnames=())
+def csr_spmbv(a: CSRMatrix, v: jax.Array) -> jax.Array:
+    """W = A @ V for a block vector V of shape (n, t).
+
+    The SpMBV kernel of the paper (§4, eq. 4.1): one gather of t-wide rows
+    per nonzero + segment reduction.  This is the pure-JAX reference; the
+    Pallas BSR kernel in ``repro.kernels`` is the TPU-optimized version.
+    """
+    rows = _expand_rows(a.indptr, a.nnz)
+    prod = a.data[:, None] * v[a.indices, :]  # (nnz, t)
+    return jax.ops.segment_sum(prod, rows, num_segments=a.n_rows)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BSRMatrix:
+    """Block-sparse-row matrix with fixed (br x bc) dense tiles.
+
+    block_indptr:  (n_block_rows + 1,) int32
+    block_indices: (n_blocks,) int32 block-column ids
+    blocks:        (n_blocks, br, bc) values
+    shape:         static (n_rows, n_cols) — multiples of (br, bc)
+    """
+
+    block_indptr: jax.Array
+    block_indices: jax.Array
+    blocks: jax.Array
+    shape: tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.block_indptr, self.block_indices, self.blocks), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, leaves):
+        return cls(*leaves, shape=shape)
+
+    @property
+    def block_shape(self) -> tuple[int, int]:
+        return tuple(self.blocks.shape[1:])
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.block_indptr.shape[0] - 1
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.block_indices.shape[0])
+
+    def todense(self) -> jax.Array:
+        br, bc = self.block_shape
+        nbr = self.n_block_rows
+        nbc = self.shape[1] // bc
+        brow = _expand_rows(self.block_indptr, self.n_blocks)
+        dense = jnp.zeros((nbr, nbc, br, bc), self.blocks.dtype)
+        dense = dense.at[brow, self.block_indices].add(self.blocks)
+        return dense.transpose(0, 2, 1, 3).reshape(self.shape)
+
+
+def csr_to_bsr(a: CSRMatrix, br: int, bc: int, pad_rows: bool = True) -> BSRMatrix:
+    """Convert CSR -> BSR with (br x bc) tiles (host-side, numpy).
+
+    Zero-pads the matrix up to tile multiples.  Tiles with any nonzero become
+    dense blocks — this is the VMEM/MXU trade the paper's philosophy endorses:
+    more local flops per communicated/loaded byte.
+    """
+    indptr = np.asarray(a.indptr)
+    indices = np.asarray(a.indices)
+    data = np.asarray(a.data)
+    n, m = a.shape
+    n_pad = (n + br - 1) // br * br if pad_rows else n
+    m_pad = (m + bc - 1) // bc * bc
+    nbr, nbc = n_pad // br, m_pad // bc
+
+    # bucket nonzeros by (block_row, block_col)
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    brow = rows // br
+    bcol = indices // bc
+    key = brow * nbc + bcol
+    order = np.argsort(key, kind="stable")
+    key_s = key[order]
+    uniq, starts = np.unique(key_s, return_index=True)
+    n_blocks = len(uniq)
+    blocks = np.zeros((n_blocks, br, bc), dtype=data.dtype)
+    block_rows = (uniq // nbc).astype(np.int64)
+    block_cols = (uniq % nbc).astype(np.int32)
+    ends = np.append(starts[1:], len(key_s))
+    r_in = (rows % br)[order]
+    c_in = (indices % bc)[order]
+    d_s = data[order]
+    for bi in range(n_blocks):
+        sl = slice(starts[bi], ends[bi])
+        blocks[bi, r_in[sl], c_in[sl]] = d_s[sl]
+
+    block_indptr = np.zeros(nbr + 1, dtype=np.int32)
+    np.add.at(block_indptr[1:], block_rows, 1)
+    block_indptr = np.cumsum(block_indptr).astype(np.int32)
+    return BSRMatrix(
+        block_indptr=jnp.asarray(block_indptr),
+        block_indices=jnp.asarray(block_cols),
+        blocks=jnp.asarray(blocks),
+        shape=(n_pad, m_pad),
+    )

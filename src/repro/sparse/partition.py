@@ -1,0 +1,155 @@
+"""Row-wise partitioning of CSR matrices + communication-graph extraction.
+
+Mirrors the paper's setup (§3): the n x n matrix is partitioned row-wise
+across p processes, contiguous rows per process; vectors share the row
+distribution.  The local matrix splits into *on-process* and *off-process*
+blocks (§2.2, Fig 2.2); the off-process block induces the point-to-point
+communication pattern (who needs which remote vector rows).
+
+All of this is host-side numpy — it is the moral equivalent of the MPI
+communicator setup phase, executed once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix
+
+
+@dataclasses.dataclass(frozen=True)
+class RowPartition:
+    """Contiguous row partition of n rows over p processes."""
+
+    n: int
+    p: int
+
+    def __post_init__(self):
+        assert self.p >= 1
+
+    @property
+    def starts(self) -> np.ndarray:
+        # paper: "each process contains at most ceil(n/p) contiguous rows"
+        base, rem = divmod(self.n, self.p)
+        counts = np.full(self.p, base, dtype=np.int64)
+        counts[:rem] += 1
+        return np.concatenate([[0], np.cumsum(counts)])
+
+    def owner_of(self, rows: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self.starts, rows, side="right") - 1
+
+    def local_range(self, rank: int) -> tuple[int, int]:
+        s = self.starts
+        return int(s[rank]), int(s[rank + 1])
+
+    @property
+    def max_local_rows(self) -> int:
+        s = self.starts
+        return int(np.max(np.diff(s)))
+
+
+@dataclasses.dataclass
+class ProcessComm:
+    """Per-process communication metadata for the halo exchange.
+
+    recv_rows[q]: global row ids this process needs from process q
+    send_rows[q]: global row ids this process must send to process q
+    """
+
+    rank: int
+    recv_rows: dict[int, np.ndarray]
+    send_rows: dict[int, np.ndarray]
+
+    @property
+    def n_recv_msgs(self) -> int:
+        return len(self.recv_rows)
+
+    @property
+    def n_send_msgs(self) -> int:
+        return len(self.send_rows)
+
+    def send_bytes(self, t: int = 1, f: int = 8) -> int:
+        """Total bytes this process sends for a block vector of width t."""
+        return sum(len(v) for v in self.send_rows.values()) * t * f
+
+
+@dataclasses.dataclass
+class PartitionedMatrix:
+    """A CSR matrix partitioned row-wise with halo-exchange metadata."""
+
+    a: CSRMatrix
+    part: RowPartition
+    comms: list[ProcessComm]
+    # per-rank local CSR pieces (numpy views over the global CSR):
+    local_indptr: list[np.ndarray]
+    local_indices: list[np.ndarray]  # remapped: [0, n_local) local, >= n_local halo
+    local_data: list[np.ndarray]
+    halo_sources: list[np.ndarray]  # global row ids backing the halo slots, ordered
+
+    @property
+    def p(self) -> int:
+        return self.part.p
+
+
+def partition_csr(a: CSRMatrix, p: int) -> PartitionedMatrix:
+    """Partition ``a`` row-wise over p processes; extract comm graph.
+
+    The halo (off-process) columns of each local block are remapped to local
+    ids ``n_local + k`` where k indexes the (sorted, deduplicated) remote rows
+    this process receives — the standard "ghost" layout.
+    """
+    indptr = np.asarray(a.indptr, dtype=np.int64)
+    indices = np.asarray(a.indices, dtype=np.int64)
+    data = np.asarray(a.data)
+    part = RowPartition(a.shape[0], p)
+    starts = part.starts
+
+    # recv side: per rank, remote rows needed
+    recv_rows_per_rank: list[dict[int, np.ndarray]] = []
+    halo_sources: list[np.ndarray] = []
+    local_indptr, local_indices, local_data = [], [], []
+    for r in range(p):
+        lo, hi = starts[r], starts[r + 1]
+        s, e = indptr[lo], indptr[hi]
+        cols = indices[s:e]
+        vals = data[s:e]
+        lptr = indptr[lo : hi + 1] - s
+        off_mask = (cols < lo) | (cols >= hi)
+        remote = np.unique(cols[off_mask])
+        owners = part.owner_of(remote)
+        recv: dict[int, np.ndarray] = {}
+        for q in np.unique(owners):
+            recv[int(q)] = remote[owners == q]
+        recv_rows_per_rank.append(recv)
+        halo_sources.append(remote)  # sorted by global id
+
+        # remap columns: local -> [0, n_local); remote -> n_local + halo slot
+        n_local = hi - lo
+        remap = np.empty(len(cols), dtype=np.int32)
+        remap[~off_mask] = (cols[~off_mask] - lo).astype(np.int32)
+        remap[off_mask] = (n_local + np.searchsorted(remote, cols[off_mask])).astype(np.int32)
+        local_indptr.append(lptr.astype(np.int64))
+        local_indices.append(remap)
+        local_data.append(vals)
+
+    # send side: transpose the recv graph
+    send_rows_per_rank: list[dict[int, np.ndarray]] = [dict() for _ in range(p)]
+    for r in range(p):
+        for q, rows in recv_rows_per_rank[r].items():
+            send_rows_per_rank[q][r] = rows
+
+    comms = [
+        ProcessComm(rank=r, recv_rows=recv_rows_per_rank[r], send_rows=send_rows_per_rank[r])
+        for r in range(p)
+    ]
+    return PartitionedMatrix(
+        a=a,
+        part=part,
+        comms=comms,
+        local_indptr=local_indptr,
+        local_indices=local_indices,
+        local_data=local_data,
+        halo_sources=halo_sources,
+    )

@@ -1,0 +1,290 @@
+"""Distributed SpMBV:  W = A · V  with node-aware halo exchange (shard_map).
+
+The matrix is row-partitioned over a ("node", "proc") device grid; block
+vectors share the row distribution (paper §3).  The halo exchange replays a
+static :class:`~repro.core.node_aware.ExchangePlan` — gather → ppermute →
+scatter rounds — then the local SpMBV runs on [own rows ‖ halo rows].
+
+This module also provides the distributed ECG wrapper: the same iteration
+body as :func:`repro.core.ecg.ecg_solve` with `psum` reductions, executed
+entirely inside one shard_map (so the two fused allreduces of §3.1 appear as
+exactly two psums per iteration in the lowered HLO).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.sparse.csr import CSRMatrix
+from repro.sparse.partition import PartitionedMatrix, partition_csr
+from repro.core.node_aware import ExchangePlan, ExchangeStep, build_exchange_plan
+
+
+@dataclasses.dataclass
+class DistributedSpMBV:
+    """Device-ready distributed SpMBV operator."""
+
+    mesh: Mesh
+    plan: ExchangePlan
+    n: int                 # true global rows
+    rmax: int              # padded rows per device
+    starts: np.ndarray     # (p+1,) partition row offsets (true global ids)
+    # stacked per-device CSR (sharded on axis 0 at call time)
+    indptr: jax.Array      # (p, rmax + 1)
+    indices: jax.Array     # (p, nnz_max)  — local ids; halo ids offset by rmax
+    data: jax.Array        # (p, nnz_max)
+    # stacked per-step exchange arrays
+    gathers: list[jax.Array]
+    scatters: list[jax.Array]
+
+    @property
+    def p(self) -> int:
+        return self.plan.p
+
+    @property
+    def n_padded(self) -> int:
+        return self.p * self.rmax
+
+    # ---------------------------------------------------------------- spec
+    @property
+    def vec_spec(self) -> P:
+        return P(("node", "proc"), None)
+
+    def shard_vector(self, v: np.ndarray | jax.Array, t: int | None = None) -> jax.Array:
+        """Lay out a global (n,) or (n, t) array into the padded per-rank
+        layout (device r's block holds its partition rows) and device_put."""
+        v = np.asarray(v)
+        out = np.zeros((self.p * self.rmax,) + v.shape[1:], v.dtype)
+        for r in range(self.p):
+            lo, hi = self.starts[r], self.starts[r + 1]
+            out[r * self.rmax : r * self.rmax + (hi - lo)] = v[lo:hi]
+        spec = self.vec_spec if v.ndim > 1 else P(("node", "proc"))
+        return jax.device_put(out, NamedSharding(self.mesh, spec))
+
+    def unshard(self, w: jax.Array) -> np.ndarray:
+        """Inverse of :meth:`shard_vector`."""
+        w = np.asarray(w)
+        out = np.zeros((self.n,) + w.shape[1:], w.dtype)
+        for r in range(self.p):
+            lo, hi = self.starts[r], self.starts[r + 1]
+            out[lo:hi] = w[r * self.rmax : r * self.rmax + (hi - lo)]
+        return out
+
+    def padded_mask(self) -> np.ndarray:
+        """(n_padded,) 1.0 where the slot backs a true row."""
+        m = np.zeros(self.p * self.rmax)
+        for r in range(self.p):
+            lo, hi = self.starts[r], self.starts[r + 1]
+            m[r * self.rmax : r * self.rmax + (hi - lo)] = 1.0
+        return m
+
+    def true_row_of_slot(self) -> np.ndarray:
+        """(n_padded,) true global row id per padded slot (-1 for pads)."""
+        m = np.full(self.p * self.rmax, -1, dtype=np.int64)
+        for r in range(self.p):
+            lo, hi = self.starts[r], self.starts[r + 1]
+            m[r * self.rmax : r * self.rmax + (hi - lo)] = np.arange(lo, hi)
+        return m
+
+    # ------------------------------------------------------------- exchange
+    def _exchange(self, x_local: jax.Array, gathers, scatters) -> jax.Array:
+        """Per-device halo exchange.  x_local: (rmax, t) block rows."""
+        t = x_local.shape[-1]
+        plan = self.plan
+        halo = jnp.zeros((plan.halo_size + 1, t), x_local.dtype)
+        stage = jnp.zeros((plan.stage_size + 1, t), x_local.dtype)
+        for step, g_idx, s_pos in zip(plan.steps, gathers, scatters):
+            src = x_local if step.src == "x" else stage
+            buf = src[g_idx]  # (c, t)
+            if step.offset:
+                axis = ("node", "proc") if step.axis == "flat" else step.axis
+                buf = jax.lax.ppermute(buf, axis, _perm(step, plan))
+            if step.dst == "halo":
+                halo = halo.at[s_pos].set(buf)
+            else:
+                stage = stage.at[s_pos].set(buf)
+        return halo[: plan.halo_size]
+
+    def _local_spmbv(self, x_local, halo, indptr, indices, data):
+        """CSR SpMBV over [own ‖ halo] rows; returns (rmax, t)."""
+        xfull = jnp.concatenate([x_local, halo], axis=0)
+        rows = jnp.repeat(
+            jnp.arange(self.rmax, dtype=jnp.int32),
+            jnp.diff(indptr),
+            total_repeat_length=indices.shape[0],
+        )
+        prod = data[:, None] * xfull[indices]
+        return jax.ops.segment_sum(prod, rows, num_segments=self.rmax)
+
+    # ------------------------------------------------------------------ api
+    def matvec_fn(self):
+        """Returns f(V_sharded (n_padded, t)) -> (n_padded, t), jit-able."""
+        plan = self.plan
+
+        def per_device(v, indptr, indices, data, *exchange_arrays):
+            k = len(plan.steps)
+            gathers = [a[0] for a in exchange_arrays[:k]]
+            scatters = [a[0] for a in exchange_arrays[k:]]
+            v = v.reshape(self.rmax, -1)
+            halo = self._exchange(v, gathers, scatters)
+            w = self._local_spmbv(v, halo, indptr[0], indices[0], data[0])
+            return w.reshape(v.shape)
+
+        dev_specs = P(("node", "proc"),)
+        smapped = shard_map(
+            per_device,
+            mesh=self.mesh,
+            in_specs=(self.vec_spec, dev_specs, dev_specs, dev_specs)
+            + (dev_specs,) * (2 * len(plan.steps)),
+            out_specs=self.vec_spec,
+            check_rep=False,
+        )
+
+        def apply(v):
+            return smapped(v, self.indptr, self.indices, self.data, *self.gathers, *self.scatters)
+
+        return apply
+
+
+def _perm(step: ExchangeStep, plan: ExchangePlan):
+    if step.axis == "proc":
+        n = plan.ppn
+    elif step.axis == "node":
+        n = plan.n_nodes
+    else:
+        n = plan.p
+    return [(i, (i + step.offset) % n) for i in range(n)]
+
+
+def make_distributed_spmbv(
+    a: CSRMatrix,
+    mesh: Mesh,
+    strategy: str = "standard",
+    t: int = 1,
+    machine=None,
+    pm: PartitionedMatrix | None = None,
+) -> DistributedSpMBV:
+    """Partition ``a`` over ``mesh`` and build the device-ready operator."""
+    n_nodes, ppn = mesh.devices.shape
+    p = n_nodes * ppn
+    pm = pm or partition_csr(a, p)
+    plan = build_exchange_plan(pm, n_nodes, ppn, strategy, t=t, machine=machine)
+
+    rmax = pm.part.max_local_rows
+    nnz_max = max(len(ix) for ix in pm.local_indices)
+    indptr = np.zeros((p, rmax + 1), np.int32)
+    indices = np.zeros((p, nnz_max), np.int32)
+    data = np.zeros((p, nnz_max), np.asarray(pm.local_data[0]).dtype)
+    for r in range(p):
+        lo, hi = pm.part.local_range(r)
+        n_local = hi - lo
+        ptr = pm.local_indptr[r]
+        indptr[r, : n_local + 1] = ptr
+        indptr[r, n_local + 1 :] = ptr[-1]
+        k = len(pm.local_indices[r])
+        # halo ids were n_local-based; re-base to rmax so x can be padded
+        ix = pm.local_indices[r].astype(np.int64)
+        ix = np.where(ix >= n_local, ix - n_local + rmax, ix)
+        indices[r, :k] = ix
+        data[r, :k] = pm.local_data[r]
+
+    dev_sharding = NamedSharding(mesh, P(("node", "proc")))
+    put = lambda arr: jax.device_put(jnp.asarray(arr), dev_sharding)
+    return DistributedSpMBV(
+        mesh=mesh,
+        plan=plan,
+        n=a.shape[0],
+        rmax=rmax,
+        starts=pm.part.starts,
+        indptr=put(indptr),
+        indices=put(indices),
+        data=put(data),
+        gathers=[put(s.gather_idx) for s in plan.steps],
+        scatters=[put(s.scatter_pos) for s in plan.steps],
+    )
+
+
+# ----------------------------------------------------------------------------
+# distributed ECG: same body as core.ecg, inside one shard_map
+# ----------------------------------------------------------------------------
+def distributed_ecg(
+    a: CSRMatrix,
+    b: np.ndarray,
+    mesh: Mesh,
+    t: int,
+    strategy: str = "standard",
+    tol: float = 1e-8,
+    max_iters: int = 500,
+    machine=None,
+):
+    """Distributed ECG solve with the selected node-aware SpMBV strategy.
+
+    Runs the whole while_loop inside jit with the distributed operator; the
+    two fused reductions appear as psums over ("node", "proc").
+    """
+    from repro.core.ecg import ecg_solve
+
+    op = make_distributed_spmbv(a, mesh, strategy, t=t, machine=machine)
+    apply_a = op.matvec_fn()
+    b_sh = op.shard_vector(b)
+    n_pad = op.n_padded
+    axes = ("node", "proc")
+    vspec = op.vec_spec
+
+    # fused reductions (§3.1): exactly one psum each, via shard_map
+    gram1 = shard_map(
+        lambda z, az: jax.lax.psum(z.T @ az, axes),
+        mesh=mesh,
+        in_specs=(vspec, vspec),
+        out_specs=P(None, None),
+        check_rep=False,
+    )
+    gram2 = shard_map(
+        lambda pp, rr, ap, apo: jax.lax.psum(
+            jnp.concatenate([pp.T @ rr, ap.T @ ap, apo.T @ ap], axis=1), axes
+        ),
+        mesh=mesh,
+        in_specs=(vspec,) * 4,
+        out_specs=P(None, None),
+        check_rep=False,
+    )
+    sqnorm = shard_map(
+        lambda v: jax.lax.psum(jnp.vdot(v, v), axes),
+        mesh=mesh,
+        in_specs=P(("node", "proc")),
+        out_specs=P(),
+        check_rep=False,
+    )
+
+    # T_{r,t} on the padded layout: subdomains follow *true* global row ids so
+    # the splitting matches the sequential solver exactly; pad slots masked.
+    true_rows = op.true_row_of_slot()
+    sub = np.where(true_rows >= 0, (true_rows * t) // op.n, 0)
+    onehot_np = np.zeros((n_pad, t))
+    onehot_np[np.arange(n_pad), np.minimum(sub, t - 1)] = (true_rows >= 0).astype(float)
+    onehot = jax.device_put(
+        jnp.asarray(onehot_np, b_sh.dtype), NamedSharding(mesh, op.vec_spec)
+    )
+
+    def split(r, t_):
+        return r[:, None] * onehot
+
+    result = ecg_solve(
+        apply_a,
+        b_sh,
+        t=t,
+        tol=tol,
+        max_iters=max_iters,
+        split=split,
+        gram1=gram1,
+        gram2=gram2,
+        sqnorm=sqnorm,
+    )
+    return result, op

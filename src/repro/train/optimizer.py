@@ -1,0 +1,124 @@
+"""AdamW in pure JAX with ZeRO-1 state sharding.
+
+Optimizer moments are fp32 and sharded like the parameters *plus* spread over
+the data axis where the parameter spec leaves it free (ZeRO-1) — required to
+fit the 14B/20B/42B assigned configs on 16 GB v5e chips (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import MeshAxes
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(abstract_params):
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(sds, abstract_params),
+        "nu": jax.tree.map(sds, abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def zero1_specs(param_specs, axes: MeshAxes, param_shapes) -> Any:
+    """Moment PartitionSpecs: parameter spec + "data" on the largest free,
+    divisible dim (ZeRO-1)."""
+    fsdp = axes.fsdp
+    fsize = axes.size(fsdp)
+
+    def widen(spec: P, shape) -> P:
+        if fsdp is None:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        if any(e == fsdp or (isinstance(e, tuple) and fsdp in e) for e in entries):
+            return spec  # already data-sharded
+        # pick the largest dim divisible by the data axis
+        best, best_dim = -1, None
+        for i, (e, dim) in enumerate(zip(entries, shape)):
+            if e is None and dim % fsize == 0 and dim > best:
+                best, best_dim = dim, i
+        if best_dim is None:
+            return spec
+        entries[best_dim] = fsdp
+        return P(*entries)
+
+    return jax.tree.map(
+        lambda s, p: widen(s, p.shape),
+        param_specs,
+        param_shapes,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def opt_state_specs(param_specs, axes: MeshAxes, abstract_params):
+    mom = zero1_specs(param_specs, axes, abstract_params)
+    return {"mu": mom, "nu": mom, "step": P()}
+
+
+def apply_adamw(cfg: AdamWConfig, params, grads, state, extra_reduce=None):
+    """One AdamW step.  ``extra_reduce`` optionally post-processes the global
+    grad-norm scalar (e.g. the fused-collective discipline of §3.1: ride every
+    step statistic on one reduction)."""
+    step = state["step"] + 1
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    if extra_reduce is not None:
+        gnorm = extra_reduce(gnorm)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1**step.astype(jnp.float32)
+    b2c = 1 - cfg.b2**step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, dict(grad_norm=gnorm, lr=lr)

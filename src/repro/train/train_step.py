@@ -1,0 +1,146 @@
+"""Train-step builder: loss + grad + AdamW, with microbatch accumulation.
+
+The returned jitted function carries full in/out shardings so it can be
+``.lower().compile()``'d on the production mesh from ShapeDtypeStructs alone
+(the dry-run path) or executed for real at smoke scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig, MeshAxes
+from repro.models.registry import model_api
+from repro.train.optimizer import (
+    AdamWConfig,
+    apply_adamw,
+    abstract_opt_state,
+    init_opt_state,
+    opt_state_specs,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepBundle:
+    step_fn: Any                 # jit'd (params, opt_state, batch) -> (params, opt, metrics)
+    param_shardings: Any
+    opt_shardings: Any
+    batch_shardings: Any
+    abstract_params: Any
+    abstract_opt: Any
+    abstract_batch: Any
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    opt_cfg: AdamWConfig | None = None,
+    batch: int = 8,
+    seq: int = 128,
+    microbatches: int = 1,
+    donate: bool = True,
+) -> TrainStepBundle:
+    opt_cfg = opt_cfg or AdamWConfig()
+    api = model_api(cfg)
+    axes = MeshAxes.from_mesh(mesh)
+    loss = api.loss_fn(cfg, mesh)
+
+    def step(params, opt_state, batch_data):
+        if microbatches > 1:
+            def micro(i, acc):
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // microbatches), x.shape[0] // microbatches
+                    ),
+                    batch_data,
+                )
+                l, g = jax.value_and_grad(loss)(params, mb)
+                return (
+                    acc[0] + l / microbatches,
+                    jax.tree.map(lambda a, b: a + b / microbatches, acc[1], g),
+                )
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            l, grads = jax.lax.fori_loop(0, microbatches, micro, (jnp.float32(0), zero_g))
+        else:
+            l, grads = jax.value_and_grad(loss)(params, batch_data)
+        new_params, new_opt, stats = apply_adamw(opt_cfg, params, grads, opt_state)
+        metrics = dict(loss=l, **stats)
+        return new_params, new_opt, metrics
+
+    aparams = api.abstract_params(cfg)
+    pspecs = api.param_specs(cfg, axes)
+    aopt = abstract_opt_state(aparams)
+    ospecs = opt_state_specs(pspecs, axes, aparams)
+    binput = api.train_input_specs(cfg, mesh, batch, seq)
+    abatch = {k: v[0] for k, v in binput.items()}
+    bspecs = {k: v[1] for k, v in binput.items()}
+
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda s: isinstance(s, P)
+    )
+    p_sh, o_sh, b_sh = to_sh(pspecs), to_sh(ospecs), to_sh(bspecs)
+    metric_sh = dict(
+        loss=NamedSharding(mesh, P()),
+        grad_norm=NamedSharding(mesh, P()),
+        lr=NamedSharding(mesh, P()),
+    )
+    step_fn = jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, metric_sh),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return TrainStepBundle(
+        step_fn=step_fn,
+        param_shardings=p_sh,
+        opt_shardings=o_sh,
+        batch_shardings=b_sh,
+        abstract_params=aparams,
+        abstract_opt=aopt,
+        abstract_batch=abatch,
+    )
+
+
+def build_serve_step(cfg: ArchConfig, mesh: Mesh, batch: int, seq: int):
+    """Decode-step bundle for the inference shape cells."""
+    from repro.models.registry import serve_input_specs
+
+    api = model_api(cfg)
+    axes = MeshAxes.from_mesh(mesh)
+    f = api.decode_step(cfg, mesh)
+    aparams = api.abstract_params(cfg)
+    pspecs = api.param_specs(cfg, axes)
+    acache = api.abstract_cache(cfg, batch, seq)
+    cspecs = api.cache_specs(cfg, axes, batch, seq)
+    binput = serve_input_specs(cfg, mesh, batch)
+    abatch = {k: v[0] for k, v in binput.items()}
+    bspecs = {k: v[1] for k, v in binput.items()}
+
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda s: isinstance(s, P)
+    )
+    p_sh, c_sh, b_sh = to_sh(pspecs), to_sh(cspecs), to_sh(bspecs)
+    axes_b = MeshAxes.from_mesh(mesh)
+    import numpy as np
+
+    bsz = int(np.prod([axes_b.size(a) for a in axes_b.batch]))
+    logit_spec = P(axes_b.batch if batch % bsz == 0 else None, axes_b.tp(cfg.vocab_padded))
+    step_fn = jax.jit(
+        f,
+        in_shardings=(p_sh, c_sh, b_sh),
+        out_shardings=(NamedSharding(mesh, logit_spec), c_sh),
+        donate_argnums=(1,),
+    )
+    return step_fn, dict(
+        param_shardings=p_sh,
+        cache_shardings=c_sh,
+        batch_shardings=b_sh,
+        abstract_params=aparams,
+        abstract_cache=acache,
+        abstract_batch=abatch,
+    )

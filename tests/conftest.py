@@ -1,0 +1,18 @@
+"""Shared test fixtures.
+
+NOTE: x64 is enabled here for solver accuracy.  Device-count forcing
+(XLA_FLAGS) is deliberately NOT set here — multi-device tests run in
+subprocesses (see test_distributed.py) so ordinary tests see 1 device.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

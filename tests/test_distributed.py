@@ -1,0 +1,27 @@
+"""Multi-device distributed tests (8 forced host devices, subprocess-isolated
+so the rest of the suite keeps a single device)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_distributed_spmbv_and_ecg():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "dist_worker.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in proc.stdout

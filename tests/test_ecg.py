@@ -1,0 +1,124 @@
+"""ECG solver: convergence, CG equivalence, algorithmic invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cg_solve, ecg_solve, split_residual, collapse
+from repro.core.ecg import ECGOperationCounts, _chol_inv_apply
+from repro.sparse import dg_laplace_2d, fd_laplace_2d, random_spd, csr_spmv, csr_spmbv
+
+
+@pytest.fixture(scope="module")
+def system(rng=np.random.default_rng(0)):
+    a = dg_laplace_2d((10, 10), block=8)  # 800 rows
+    b = jnp.asarray(rng.standard_normal(a.shape[0]))
+    return a, b
+
+
+class TestSplitting:
+    @given(
+        n=st.integers(8, 200),
+        t=st.integers(1, 12),
+        mapping=st.sampled_from(["contiguous", "round_robin"]),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_row_sum_preserved(self, n, t, mapping, seed):
+        # eq (2.3): r == sum_i (T_{r,t})_i
+        t = min(t, n)
+        r = jnp.asarray(np.random.default_rng(seed).standard_normal(n))
+        big = split_residual(r, t, mapping)
+        assert big.shape == (n, t)
+        np.testing.assert_allclose(np.asarray(collapse(big)), np.asarray(r), atol=1e-12)
+
+    def test_columns_linearly_independent(self):
+        r = jnp.asarray(np.random.default_rng(1).standard_normal(64) + 0.5)
+        big = np.asarray(split_residual(r, 8))
+        assert np.linalg.matrix_rank(big) == 8
+
+
+class TestECG:
+    def test_cg_converges(self, system):
+        a, b = system
+        res = cg_solve(lambda v: csr_spmv(a, v), b, tol=1e-9, max_iters=3000)
+        assert res.converged
+        d = np.asarray(a.todense(), np.float64)
+        relres = np.linalg.norm(d @ np.asarray(res.x) - np.asarray(b)) / np.linalg.norm(b)
+        assert relres < 1e-7
+
+    @pytest.mark.parametrize("t", [2, 4, 8])
+    def test_ecg_converges_and_solution_correct(self, system, t):
+        a, b = system
+        res = ecg_solve(lambda V: csr_spmbv(a, V), b, t=t, tol=1e-9, max_iters=3000)
+        assert res.converged
+        d = np.asarray(a.todense(), np.float64)
+        relres = np.linalg.norm(d @ np.asarray(res.x) - np.asarray(b)) / np.linalg.norm(b)
+        assert relres < 1e-7
+
+    def test_ecg_t1_equals_cg_iterates(self, system):
+        """ECG with t=1 spans the same Krylov space as CG -> same iterates."""
+        a, b = system
+        res_cg = cg_solve(lambda v: csr_spmv(a, v), b, tol=1e-9, max_iters=3000)
+        res_ecg = ecg_solve(lambda V: csr_spmbv(a, V), b, t=1, tol=1e-9, max_iters=3000)
+        assert abs(res_cg.n_iters - res_ecg.n_iters) <= 1
+        np.testing.assert_allclose(
+            np.asarray(res_cg.x), np.asarray(res_ecg.x), rtol=1e-5, atol=1e-7
+        )
+
+    def test_iterations_decrease_with_t(self, system):
+        """Paper Fig 3.2: enlarging reduces iterations monotonically (weakly)."""
+        a, b = system
+        iters = []
+        for t in (1, 2, 4, 8, 16):
+            res = ecg_solve(lambda V: csr_spmbv(a, V), b, t=t, tol=1e-8, max_iters=3000)
+            assert res.converged
+            iters.append(res.n_iters)
+        assert all(iters[i + 1] <= iters[i] for i in range(len(iters) - 1)), iters
+        assert iters[-1] < iters[0]
+
+    def test_residual_history_monotone_tail(self, system):
+        a, b = system
+        res = ecg_solve(lambda V: csr_spmbv(a, V), b, t=4, tol=1e-8, max_iters=3000)
+        h = np.asarray(res.res_hist)
+        h = h[~np.isnan(h)]
+        assert h[-1] <= 1e-8 * 10
+        # overall decay by orders of magnitude
+        assert h[-1] < h[0] * 1e-6
+
+    def test_random_spd_system(self):
+        a = random_spd(96, density=0.1, seed=5)
+        rng = np.random.default_rng(2)
+        b = jnp.asarray(rng.standard_normal(96))
+        res = ecg_solve(lambda V: csr_spmbv(a, V), b, t=6, tol=1e-10, max_iters=500)
+        assert res.converged
+        d = np.asarray(a.todense(), np.float64)
+        assert np.linalg.norm(d @ np.asarray(res.x) - np.asarray(b)) < 1e-6
+
+
+class TestAOrthonormalization:
+    def test_p_is_a_orthonormal(self, system):
+        """Line 5 of Alg 1: P = Z(ZᵀAZ)^{-1/2}  =>  PᵀAP = I."""
+        a, b = system
+        rng = np.random.default_rng(3)
+        z = jnp.asarray(rng.standard_normal((a.shape[0], 5)))
+        az = csr_spmbv(a, z)
+        g = z.T @ az
+        p, ap = _chol_inv_apply(g, z, az)
+        ptap = np.asarray(p.T @ csr_spmbv(a, p))
+        np.testing.assert_allclose(ptap, np.eye(5), atol=1e-8)
+        # AP really is A @ P (the TRSM shortcut of Alg 2)
+        np.testing.assert_allclose(np.asarray(ap), np.asarray(csr_spmbv(a, p)), atol=1e-8)
+
+
+class TestOperationCounts:
+    def test_eq_3_3_totals(self):
+        c = ECGOperationCounts(n=1000, nnz=9000, p=10, t=4)
+        expected = (2 + 8) * 900 + (16 + 64) * 100 + 16 / 2 + 64 / 6
+        assert c.total_flops == pytest.approx(expected)
+
+    def test_allreduce_payloads(self):
+        c = ECGOperationCounts(n=10, nnz=10, p=1, t=7)
+        assert c.allreduce_payload_floats == (49, 147)

@@ -1,0 +1,83 @@
+"""Pallas kernels: interpret-mode shape/dtype sweeps against pure-jnp oracles."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.sparse import dg_laplace_2d, csr_to_bsr, random_spd
+from repro.kernels.bsr_spmbv.kernel import bsr_spmbv_pallas
+from repro.kernels.bsr_spmbv.ref import bsr_spmbv_ref
+from repro.kernels.bsr_spmbv.ops import bsr_to_block_ell
+from repro.kernels.fused_gram.kernel import fused_gram_pallas
+from repro.kernels.fused_gram.ref import fused_gram_ref
+from repro.kernels.block_update.kernel import block_update_pallas
+from repro.kernels.block_update.ref import block_update_ref
+
+
+def tol_for(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestBsrSpmbv:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("blk,t", [(8, 1), (8, 4), (16, 8), (8, 20)])
+    def test_against_ref_and_dense(self, rng, blk, t, dtype):
+        a = dg_laplace_2d((4, 3), block=blk, dtype=jnp.float32)
+        b = csr_to_bsr(a, blk, blk)
+        blocks, indices = bsr_to_block_ell(b)
+        blocks = blocks.astype(dtype)
+        v = jnp.asarray(rng.standard_normal((b.shape[1], t)), dtype)
+        w_ref = bsr_spmbv_ref(blocks, indices, v)
+        w_pal = bsr_spmbv_pallas(blocks, indices, v, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(w_pal, np.float32), np.asarray(w_ref, np.float32), **tol_for(dtype)
+        )
+        if dtype == jnp.float32:
+            ad = np.asarray(a.todense(), np.float64)
+            np.testing.assert_allclose(
+                np.asarray(w_pal, np.float64)[: a.shape[0]],
+                ad @ np.asarray(v, np.float64),
+                rtol=1e-4, atol=1e-4,
+            )
+
+    def test_irregular_block_rows(self, rng):
+        """Rows with differing tile counts exercise the zero-padding path."""
+        a = random_spd(48, density=0.15, seed=9)
+        b = csr_to_bsr(a, 4, 4)
+        blocks, indices = bsr_to_block_ell(b)
+        per_row = np.diff(np.asarray(b.block_indptr))
+        assert per_row.min() != per_row.max(), "want irregular structure"
+        v = jnp.asarray(rng.standard_normal((b.shape[1], 3)), jnp.float32)
+        w_pal = bsr_spmbv_pallas(blocks.astype(jnp.float32), indices, v, interpret=True)
+        ad = np.asarray(a.todense(), np.float64)
+        np.testing.assert_allclose(
+            np.asarray(w_pal, np.float64)[:48], ad @ np.asarray(v, np.float64), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestFusedGram:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n,t,block_rows", [(64, 4, 16), (200, 5, 64), (1000, 20, 256), (37, 3, 8)])
+    def test_against_ref(self, rng, n, t, block_rows, dtype):
+        mats = [jnp.asarray(rng.standard_normal((n, t)), dtype) for _ in range(4)]
+        got = fused_gram_pallas(*mats, block_rows=block_rows, interpret=True)
+        want = fused_gram_ref(*mats)
+        assert got.shape == (t, 3 * t)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+            atol=(3e-1 if n >= 1000 else 1e-1) if dtype == jnp.bfloat16 else 1e-3,
+        )
+
+
+class TestBlockUpdate:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n,t,block_rows", [(64, 4, 16), (130, 7, 32), (512, 20, 128)])
+    def test_against_ref(self, rng, n, t, block_rows, dtype):
+        x, r, p, ap = (jnp.asarray(rng.standard_normal((n, t)), dtype) for _ in range(4))
+        c = jnp.asarray(rng.standard_normal((t, t)), dtype)
+        xo, ro = block_update_pallas(x, r, p, ap, c, block_rows=block_rows, interpret=True)
+        xw, rw = block_update_ref(x, r, p, ap, c)
+        np.testing.assert_allclose(np.asarray(xo, np.float32), np.asarray(xw, np.float32), **tol_for(dtype))
+        np.testing.assert_allclose(np.asarray(ro, np.float32), np.asarray(rw, np.float32), **tol_for(dtype))

@@ -1,0 +1,134 @@
+"""Performance models + comm-graph statistics: paper invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import fd_laplace_2d, partition_csr, suite_surrogate
+from repro.sparse.matrices import example_2_1_graph
+from repro.core.comm_graph import build_comm_graph, build_optimal_plan
+from repro.core.machines import BLUE_WATERS, LASSEN, MACHINES
+from repro.core.models import (
+    STRATEGIES,
+    t_p2p,
+    t_standard,
+    t_standard_postal,
+    t_2step,
+    t_3step,
+    t_optimal,
+    t_collective,
+    t_computation,
+    t_ecg_iteration,
+    tune_strategy,
+    max_rate,
+    postal,
+    ping_time,
+    split_send_time,
+)
+from repro.core.ecg import ECGOperationCounts
+
+
+@pytest.fixture(scope="module")
+def graph():
+    g, blk = example_2_1_graph(scale=0.25)  # 80x64 elements
+    pm = partition_csr(g, 64)
+    return build_comm_graph(pm, ppn=8, row_block=blk)
+
+
+class TestCommGraph:
+    def test_bytes_2step_equals_3step_lte_standard(self, graph):
+        """Paper §2.2: '2-step and 3-step bytes are the same' and both are
+        deduplicated, hence <= standard."""
+        assert graph.total_node_aware_rows <= graph.total_standard_rows
+        # node-injected == sum of per-pair rows (both are the dedup'd volume)
+        assert graph.node_injected_rows.sum() == graph.total_node_aware_rows
+
+    def test_message_count_hierarchy(self, graph):
+        # 2-step cannot need more distinct node destinations than standard's
+        # distinct process destinations
+        assert graph.m_proc_to_node <= graph.m_standard
+
+    def test_eq_4_4_bounds(self, graph):
+        """m_node→node/ppn <= n_opt <= max(m_proc→node, ppn) (eq. 4.4)."""
+        for t in (1, 5, 20):
+            for mach in (BLUE_WATERS, LASSEN):
+                plan = build_optimal_plan(graph, t, mach.with_ppn(graph.ppn))
+                lower = int(np.ceil(graph.m_node_to_node / graph.ppn))
+                upper = max(graph.m_proc_to_node, graph.ppn)
+                assert plan.max_msgs <= upper
+                assert plan.max_msgs >= min(lower, 1)
+
+    def test_optimal_plan_conserves_bytes(self, graph):
+        mach = BLUE_WATERS.with_ppn(graph.ppn)
+        for t in (1, 20):
+            plan = build_optimal_plan(graph, t, mach)
+            unit = t * mach.f * graph.row_block
+            assert plan.s_proc_opt.sum() == graph.total_node_aware_rows * unit
+
+    def test_splitting_kicks_in_at_large_t(self, graph):
+        mach = BLUE_WATERS.with_ppn(graph.ppn)
+        p1 = build_optimal_plan(graph, 1, mach)
+        p20 = build_optimal_plan(graph, 20, mach)
+        # larger t -> larger buffers -> more splitting -> >= messages
+        assert p20.max_msgs >= p1.max_msgs
+
+
+class TestModels:
+    def test_max_rate_reduces_to_postal_without_injection_limit(self):
+        m = BLUE_WATERS
+        # when ppn*s/R_N < s/R_b the max picks the postal term
+        s, msgs = 100.0, 3
+        assert max_rate(m, msgs, s, ppn=1) <= postal(m.alpha, m.R_b, msgs, s) + 1e-12
+
+    def test_models_monotone_in_t(self, graph):
+        for strat in STRATEGIES:
+            times = [t_p2p(graph, t, BLUE_WATERS.with_ppn(graph.ppn), strat) for t in (1, 5, 10, 20)]
+            assert all(times[i] <= times[i + 1] + 1e-15 for i in range(len(times) - 1)), (strat, times)
+
+    def test_max_rate_upper_bounds_postal_p2p(self, graph):
+        for t in (1, 20):
+            assert t_standard(graph, t, BLUE_WATERS.with_ppn(graph.ppn)) >= t_standard_postal(
+                graph, t, BLUE_WATERS.with_ppn(graph.ppn)
+            ) - 1e-15
+
+    def test_collective_model_t_squared_growth(self):
+        base = t_collective(1024, 1, BLUE_WATERS)
+        big = t_collective(1024, 20, BLUE_WATERS)
+        pure_latency = 2 * BLUE_WATERS.alpha * 10
+        assert (big - pure_latency) / max(base - pure_latency, 1e-300) == pytest.approx(400, rel=0.01)
+
+    def test_computation_model_eq_3_3(self):
+        counts = ECGOperationCounts(n=10_000, nnz=90_000, p=8, t=5)
+        got = t_computation(counts, BLUE_WATERS)
+        expected = BLUE_WATERS.gamma * (
+            (2 + 10) * 90_000 / 8 + (20 + 100) * 10_000 / 8 + 25 / 2 + 125 / 6
+        )
+        assert got == pytest.approx(expected)
+
+    def test_iteration_model_composition(self, graph):
+        counts = ECGOperationCounts(n=81920 * 4, nnz=81920 * 4 * 80, p=graph.p, t=5)
+        m = t_ecg_iteration(graph, counts, BLUE_WATERS.with_ppn(graph.ppn), "2step")
+        assert m.total == pytest.approx(m.p2p + m.collective + m.computation)
+        assert 0 < m.p2p_fraction < 1
+
+    def test_tuning_picks_argmin(self, graph):
+        best, times = tune_strategy(graph, 10, LASSEN.with_ppn(graph.ppn))
+        assert best in STRATEGIES
+        assert times[best] == min(times.values())
+
+    @given(nbytes=st.floats(1e2, 1e7), ppn=st.integers(1, 64))
+    @settings(max_examples=30, deadline=None)
+    def test_split_send_never_slower_than_single(self, nbytes, ppn):
+        """Fig 4.7: splitting a fixed volume across ppn senders can only help
+        (per-process bandwidth term shrinks; injection term unchanged)."""
+        m = LASSEN
+        assert split_send_time(m, nbytes, ppn) <= ping_time(m, nbytes, "network", active=1) + 1e-12
+
+    def test_ping_network_vs_onnode_crossover(self):
+        """Fig 4.6 (Lassen): small messages cross the network faster than
+        cross-socket on-node; large volumes with many active senders do not."""
+        m = LASSEN
+        small = 1024
+        assert ping_time(m, small, "network", active=1) < ping_time(m, small * 40, "node")
+        big = 10**6
+        assert ping_time(m, big, "network", active=40) > ping_time(m, big, "socket")

@@ -1,0 +1,86 @@
+"""Roofline analysis: HLO collective parser + term assembly."""
+
+import pytest
+
+from repro.analysis.roofline import (
+    CellCost,
+    Roofline,
+    collective_bytes,
+    count_collective_ops,
+    model_flops,
+    roofline_from_cost,
+    _shape_bytes,
+)
+from repro.models.common import ArchConfig
+
+
+HLO = """
+HloModule jit_step
+ENTRY %main {
+  %p0 = bf16[256,1024]{1,0} parameter(0)
+  %ar = bf16[256,1024]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = bf16[4096,1024]{1,0} all-gather(%p0), dimensions={0}
+  %rs.1 = f32[64,1024]{1,0} reduce-scatter(%conv), dimensions={0}
+  %a2a = (bf16[8,32]{1,0}, bf16[8,32]{1,0}) all-to-all(%x, %y)
+  %cp-start = bf16[16,16]{1,0} collective-permute-start(%p0)
+  %cp-done = bf16[16,16]{1,0} collective-permute-done(%cp-start)
+  %tuple.ar = (f32[2048]{0}, f32[2048]{0}) all-reduce(%a, %b)
+}
+"""
+
+
+class TestParser:
+    def test_shape_bytes(self):
+        assert _shape_bytes("bf16", "256,1024") == 256 * 1024 * 2
+        assert _shape_bytes("f32", "64") == 256
+        assert _shape_bytes("pred", "8,8") == 64
+
+    def test_collective_bytes(self):
+        got = collective_bytes(HLO)
+        assert got["all-reduce"] == 256 * 1024 * 2 + 2 * 2048 * 4
+        assert got["all-gather"] == 4096 * 1024 * 2
+        assert got["reduce-scatter"] == 64 * 1024 * 4
+        assert got["all-to-all"] == 2 * 8 * 32 * 2
+        # permute counted once (start only, done skipped)
+        assert got["collective-permute"] == 16 * 16 * 2
+
+    def test_counts(self):
+        got = count_collective_ops(HLO)
+        assert got["all-reduce"] == 2
+        assert got["collective-permute"] == 1  # start only
+
+
+class TestExtrapolation:
+    def test_linear_extrapolation(self):
+        c1 = CellCost(flops=10.0, hbm_bytes=100.0, coll_bytes=4.0, coll_breakdown={"all-reduce": 4.0})
+        c2 = CellCost(flops=16.0, hbm_bytes=130.0, coll_bytes=6.0, coll_breakdown={"all-reduce": 6.0})
+        c = CellCost.extrapolate(c1, c2, 10)
+        assert c.flops == pytest.approx(10 + 9 * 6)
+        assert c.hbm_bytes == pytest.approx(100 + 9 * 30)
+        assert c.coll_breakdown["all-reduce"] == pytest.approx(4 + 9 * 2)
+
+
+class TestRoofline:
+    def test_terms_and_dominant(self):
+        cost = CellCost(flops=197e12, hbm_bytes=819e9 * 2, coll_bytes=5e10 * 0.5, coll_breakdown={})
+        rl = roofline_from_cost(cost, chips=256, model_flops_global=197e12 * 256 * 0.5)
+        assert rl.compute_s == pytest.approx(1.0)
+        assert rl.memory_s == pytest.approx(2.0)
+        assert rl.collective_s == pytest.approx(0.5)
+        assert rl.dominant == "memory"
+        assert rl.useful_flops_ratio == pytest.approx(0.5)
+        # ideal 0.5s of useful compute vs 2.0s bound
+        assert rl.roofline_fraction == pytest.approx(0.25)
+
+    def test_model_flops(self):
+        cfg = ArchConfig(name="x", family="dense", n_layers=2, d_model=64, n_heads=4,
+                         n_kv_heads=4, d_ff=128, vocab=100)
+        n = cfg.param_count()
+        assert model_flops(cfg, "train", 128, 4) == 6.0 * n * 128 * 4
+        assert model_flops(cfg, "decode", 128, 4) == 2.0 * n * 4
+
+    def test_moe_uses_active_params(self):
+        cfg = ArchConfig(name="m", family="moe", n_layers=2, d_model=64, n_heads=4,
+                         n_kv_heads=4, d_ff=128, vocab=100, n_experts=8, top_k=2)
+        assert model_flops(cfg, "train", 16, 1) == 6.0 * cfg.active_param_count() * 16
+        assert cfg.active_param_count() < cfg.param_count()

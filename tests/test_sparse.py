@@ -1,0 +1,149 @@
+"""Sparse substrate: containers, generators, partitioning."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import (
+    CSRMatrix,
+    csr_spmv,
+    csr_spmbv,
+    csr_to_bsr,
+    dg_laplace_2d,
+    fd_laplace_2d,
+    fd_laplace_3d,
+    random_spd,
+    suite_surrogate,
+    partition_csr,
+    SUITE_MATRICES,
+)
+from repro.sparse.matrices import example_2_1_graph, window_shuffle_perm
+
+
+def dense(a):
+    return np.asarray(a.todense(), np.float64)
+
+
+class TestGenerators:
+    def test_fd_laplace_2d_spd(self):
+        a = fd_laplace_2d(10)
+        d = dense(a)
+        assert np.allclose(d, d.T)
+        assert np.linalg.eigvalsh(d).min() > 0
+
+    def test_fd_laplace_3d_spd(self):
+        a = fd_laplace_3d(4)
+        d = dense(a)
+        assert np.allclose(d, d.T)
+        assert np.linalg.eigvalsh(d).min() > 0
+
+    def test_dg_laplace_structure(self):
+        # Example 2.1 shape law: rows = elements * block, nnz/row ~= 5*block
+        a = dg_laplace_2d((8, 8), block=16)
+        assert a.shape[0] == 8 * 8 * 16
+        assert a.nnz / a.shape[0] == pytest.approx(5 * 16, rel=0.1)
+        d = dense(a)
+        assert np.allclose(d, d.T, atol=1e-12)
+        assert np.linalg.eigvalsh(d).min() > 0
+
+    def test_example_2_1_full_scale_stats(self):
+        # At full scale the surrogate must match the paper's published size.
+        g, blk = example_2_1_graph()
+        rows = g.shape[0] * blk
+        nnz = g.nnz * blk * blk
+        assert rows == 1_310_720
+        assert abs(nnz - 104_529_920) / 104_529_920 < 0.001
+
+    def test_random_spd(self):
+        a = random_spd(40, density=0.2, seed=3)
+        d = dense(a)
+        assert np.allclose(d, d.T)
+        assert np.linalg.eigvalsh(d).min() > 0
+
+    @pytest.mark.parametrize("name", ["Geo_1438", "thermal2"])
+    def test_suite_surrogate_stats(self, name):
+        spec = SUITE_MATRICES[name]
+        a = suite_surrogate(name, scale=0.1)
+        # structure class preserved: nnz/row within 25% of published
+        assert a.nnz / a.shape[0] == pytest.approx(spec.nnz_per_row, rel=0.30)
+
+    def test_window_shuffle_is_permutation(self):
+        p = window_shuffle_perm(1000, 64, seed=5)
+        assert np.array_equal(np.sort(p), np.arange(1000))
+
+
+class TestSpMV:
+    def test_spmv_matches_dense(self, rng):
+        a = dg_laplace_2d((5, 4), block=4)
+        d = dense(a)
+        v = rng.standard_normal(a.shape[0])
+        assert np.allclose(np.asarray(csr_spmv(a, jnp.asarray(v))), d @ v, atol=1e-10)
+
+    @pytest.mark.parametrize("t", [1, 2, 5, 20])
+    def test_spmbv_matches_dense(self, rng, t):
+        a = fd_laplace_2d(9)
+        d = dense(a)
+        V = rng.standard_normal((a.shape[0], t))
+        W = np.asarray(csr_spmbv(a, jnp.asarray(V)))
+        assert np.allclose(W, d @ V, atol=1e-10)
+
+    def test_from_dense_roundtrip(self, rng):
+        m = rng.standard_normal((7, 9)) * (rng.random((7, 9)) < 0.4)
+        a = CSRMatrix.from_dense(m)
+        assert np.allclose(np.asarray(a.todense()), m)
+
+
+class TestBSR:
+    @pytest.mark.parametrize("br,bc", [(2, 2), (4, 4), (4, 8)])
+    def test_bsr_roundtrip(self, rng, br, bc):
+        a = dg_laplace_2d((4, 4), block=4)
+        b = csr_to_bsr(a, br, bc)
+        db = np.asarray(b.todense(), np.float64)[: a.shape[0], : a.shape[1]]
+        assert np.allclose(db, dense(a), atol=1e-12)
+
+    @given(
+        n=st.integers(6, 24),
+        br=st.sampled_from([2, 3, 4]),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_bsr_roundtrip_property(self, n, br, seed):
+        rng = np.random.default_rng(seed)
+        m = rng.standard_normal((n, n)) * (rng.random((n, n)) < 0.3)
+        a = CSRMatrix.from_dense(m)
+        b = csr_to_bsr(a, br, br)
+        db = np.asarray(b.todense(), np.float64)[:n, :n]
+        assert np.allclose(db, m, atol=1e-12)
+
+
+class TestPartition:
+    @pytest.mark.parametrize("p", [2, 3, 7, 8])
+    def test_partitioned_spmv_reconstructs(self, rng, p):
+        a = dg_laplace_2d((6, 5), block=4)
+        d = dense(a)
+        pm = partition_csr(a, p)
+        x = rng.standard_normal(a.shape[0])
+        out = np.zeros(a.shape[0])
+        for r in range(p):
+            lo, hi = pm.part.local_range(r)
+            xloc = np.concatenate([x[lo:hi], x[pm.halo_sources[r]]])
+            ptr, idx = pm.local_indptr[r], pm.local_indices[r]
+            dat = np.asarray(pm.local_data[r], np.float64)
+            for i in range(hi - lo):
+                out[lo + i] = dat[ptr[i] : ptr[i + 1]] @ xloc[idx[ptr[i] : ptr[i + 1]]]
+        assert np.allclose(out, d @ x, atol=1e-10)
+
+    def test_send_recv_transpose(self):
+        a = fd_laplace_2d(12)
+        pm = partition_csr(a, 6)
+        for r in range(6):
+            for q, rows in pm.comms[r].recv_rows.items():
+                assert np.array_equal(pm.comms[q].send_rows[r], rows)
+
+    def test_uneven_rows(self):
+        a = fd_laplace_2d(7)  # 49 rows over 4 procs
+        pm = partition_csr(a, 4)
+        sizes = [pm.part.local_range(r)[1] - pm.part.local_range(r)[0] for r in range(4)]
+        assert sum(sizes) == 49
+        assert max(sizes) - min(sizes) <= 1
