@@ -1,0 +1,48 @@
+"""Kernel-vs-oracle and overlap-vs-blocking benchmark sweep (8 host devices).
+
+    PYTHONPATH=src python benchmarks/kernel_sweep.py [filter]
+
+Prints ``name,us_per_call,derived`` CSV:
+  * ``spmbv/<strategy>_t<t>_<backend>_<blocking|overlap>`` — distributed
+    SpMBV wall time for all four exchange strategies at t in {4, 8}, with
+    the CSR jnp backend and the Block-ELL kernel backend, blocking vs
+    comm-hiding (interior/boundary) schedules;
+  * ``kernel/...`` — local hot-spot head-to-heads (Block-ELL vs scalar CSR,
+    fused vs unfused gram and tail).
+
+XLA_FLAGS is set before jax import so the sweep runs on a (2 nodes x 4
+procs) mesh anywhere; pre-set XLA_FLAGS wins (e.g. a real TPU topology).
+"""
+
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    jax.config.update("jax_enable_x64", True)
+    from repro.analysis.ecg_bench import kernel_vs_oracle, overlap_vs_blocking_sweep
+    from repro.sparse import dg_laplace_2d
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    n_dev = len(jax.devices())
+    assert n_dev >= 8, f"need >= 8 devices, got {n_dev}"
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:8]).reshape(2, 4), ("node", "proc")
+    )
+
+    a = dg_laplace_2d((16, 12), block=8)  # 1536 rows over 8 ranks
+    print("name,us_per_call,derived")
+    rows = overlap_vs_blocking_sweep(a, mesh, ts=(4, 8)) + kernel_vs_oracle()
+    for r in rows:
+        if only and only not in r["name"]:
+            continue
+        print(f"{r['name']},{r['us']:.1f},{r['derived']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

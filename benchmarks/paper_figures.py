@@ -248,35 +248,18 @@ def fig4_10_table4_tuned():
 
 # --------------------------------------------------- kernels (real timing)
 def kernels_local():
-    """Measured local kernels: SpMBV and fused vs unfused gram (CPU wall)."""
-    from repro.sparse import dg_laplace_2d, csr_spmbv, csr_to_bsr
-    from repro.kernels.bsr_spmbv.ref import bsr_spmbv_ref
-    from repro.kernels.bsr_spmbv.ops import bsr_to_block_ell
-    from repro.kernels.fused_gram.ref import fused_gram_ref
+    """Measured local kernels: SpMBV, fused vs unfused gram, fused tail.
 
-    a = dg_laplace_2d((16, 16), block=16, dtype=jnp.float32)
-    rows = []
-    rng = np.random.default_rng(2)
-    for t in (5, 20):
-        v = jnp.asarray(rng.standard_normal((a.shape[0], t)), jnp.float32)
-        f_csr = jax.jit(lambda vv: csr_spmbv(a, vv))
-        _, us_csr = timed(f_csr, v)
-        rows.append(row(f"kernels/csr_spmbv_t{t}", us_csr, f"nnz={a.nnz}"))
-        blocks, idx = bsr_to_block_ell(csr_to_bsr(a, 16, 16))
-        f_bsr = jax.jit(lambda vv: bsr_spmbv_ref(blocks, idx, vv))
-        _, us_bsr = timed(f_bsr, v)
-        rows.append(row(f"kernels/bsr_spmbv_t{t}", us_bsr, f"csr/bsr={us_csr/us_bsr:.2f}"))
+    Delegates to :func:`repro.analysis.ecg_bench.kernel_vs_oracle` (the same
+    harness the multi-device ``benchmarks/kernel_sweep.py`` uses; it runs
+    here at the paper's t values on a single device).
+    """
+    from repro.analysis.ecg_bench import kernel_vs_oracle
 
-        n_loc = 32768
-        mats = [jnp.asarray(rng.standard_normal((n_loc, t)), jnp.float32) for _ in range(4)]
-        fused = jax.jit(lambda p, r, ap, apo: fused_gram_ref(p, r, ap, apo))
-        sep = jax.jit(
-            lambda p, r, ap, apo: (p.T @ r, ap.T @ ap, apo.T @ ap)
-        )
-        _, us_f = timed(fused, *mats)
-        _, us_s = timed(sep, *mats)
-        rows.append(row(f"kernels/fused_gram_t{t}", us_f, f"unfused/fused={us_s/us_f:.2f}"))
-    return rows
+    return [
+        row(r["name"].replace("kernel/", "kernels/"), r["us"], r["derived"])
+        for r in kernel_vs_oracle(ts=(5, 20), repeats=3)
+    ]
 
 
 ALL = [

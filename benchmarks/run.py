@@ -2,6 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV (model-driven rows are suffixed
 ``_model``; the rest are measured CPU wall times).
+
+The multi-device kernel-vs-oracle / overlap-vs-blocking sweep is a separate
+entry point (it must force 8 host devices before importing jax):
+
+    PYTHONPATH=src python benchmarks/kernel_sweep.py
 """
 
 import sys

@@ -17,6 +17,18 @@ Exactly two allreduce-shaped collectives per iteration, matching §3.1.  The
 the shard_map-distributed run, so the same iteration body serves both — and
 the fusion of the second reduction (c, d, d_old packed in one buffer) is
 structural, not cosmetic.
+
+Backend switch: ``backend="jnp"`` (default) runs the iteration body on plain
+XLA ops; ``backend="pallas"`` routes the two per-iteration hot spots that the
+paper's performance model singles out through the Pallas kernel suite —
+``kernels/fused_gram`` for the packed [PᵀR | APᵀAP | AP_oldᵀAP] product (one
+HBM pass over P/R/AP/AP_old instead of three GEMM passes) and
+``kernels/block_update.ecg_tail`` for the X/R/Z tail (one pass over P/AP
+instead of two).  On non-TPU platforms the kernel ops dispatch to their
+pure-jnp oracles, so the switch is always safe to flip; the SpMBV itself is
+owned by the caller via ``a_apply`` (see
+``repro.kernels.make_block_ell_apply`` and the ``backend`` argument of
+``make_distributed_spmbv``).
 """
 
 from __future__ import annotations
@@ -29,6 +41,8 @@ import jax.numpy as jnp
 
 from repro.core.cg import SolveResult
 from repro.core.enlarging import split_residual
+from repro.kernels.block_update.ops import ecg_tail
+from repro.kernels.fused_gram.ops import fused_gram
 
 
 def _chol_inv_apply(g: jax.Array, *mats: jax.Array, eps: float = 0.0):
@@ -59,6 +73,8 @@ def ecg_solve(
     gram1: Callable | None = None,
     gram2: Callable | None = None,
     sqnorm: Callable | None = None,
+    tail: Callable | None = None,
+    backend: str = "jnp",
 ) -> SolveResult:
     """Solve A x = b with ECG using enlarging factor ``t``.
 
@@ -75,15 +91,30 @@ def ecg_solve(
     distributed solver substitutes fused shard_map psums so the lowered HLO
     carries exactly two collectives per iteration (paper §3.1).
     split:     optional override of T_{r,t} (e.g. distributed splitting).
+    tail:      (X, R, P, AP, P_old, c, d, d_old) -> (X, R, Z) — the local
+               block-vector updates; defaults per ``backend``.
+    backend:   "jnp" | "pallas" — see module docstring.
     """
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
     if gram1 is None:
         gram1 = lambda z, az: allreduce(z.T @ az)
     if gram2 is None:
-        gram2 = lambda p, r, ap, apo: allreduce(
-            jnp.concatenate([p.T @ r, ap.T @ ap, apo.T @ ap], axis=1)
-        )
+        if backend == "pallas":
+            gram2 = lambda p, r, ap, apo: allreduce(fused_gram(p, r, ap, apo))
+        else:
+            gram2 = lambda p, r, ap, apo: allreduce(
+                jnp.concatenate([p.T @ r, ap.T @ ap, apo.T @ ap], axis=1)
+            )
     if sqnorm is None:
         sqnorm = lambda v: allreduce(jnp.asarray([[v @ v]], v.dtype))[0, 0]
+    if tail is None:
+        if backend == "pallas":
+            tail = ecg_tail
+        else:
+            tail = lambda x, r, p, ap, po, c, d, do: (
+                x + p @ c, r - ap @ c, ap - p @ d - po @ do
+            )
 
     x0 = jnp.zeros_like(b) if x0 is None else x0
     r0 = b - _apply_vec(a_apply, x0, t)  # initial SpMV (Alg 3 line 1)
@@ -111,11 +142,10 @@ def ecg_solve(
         packed = gram2(p, big_r, ap, ap_old)  # allreduce #2: 3t² floats
         c, d, d_old = jnp.split(packed, 3, axis=1)
 
-        big_x = big_x + p @ c
-        big_r = big_r - ap @ c
+        # fused tail: X += Pc, R -= APc, Z = AP − Pd − P_old d_old
+        big_x, big_r, z_new = tail(big_x, big_r, p, ap, p_old, c, d, d_old)
         rsum = big_r.sum(axis=1)
         rn = jnp.sqrt(sqnorm(rsum))
-        z_new = ap - p @ d - p_old @ d_old
         hist = hist.at[k + 1].set(rn)
         return dict(X=big_x, R=big_r, Z=z_new, P=p, AP=ap, k=k + 1, rn=rn, hist=hist)
 
@@ -129,9 +159,14 @@ def ecg_solve(
 
 
 def _apply_vec(a_apply: Callable, v: jax.Array, t: int) -> jax.Array:
-    """Apply the SpMBV operator to a single vector by embedding it in a block."""
-    block = jnp.zeros((v.shape[0], t), v.dtype).at[:, 0].set(v)
-    return a_apply(block)[:, 0]
+    """Apply the SpMBV operator to a single vector as a width-1 block.
+
+    Used once, for the initial residual (Alg 3 line 1).  A width-1 SpMV costs
+    t× fewer flops and bytes than the old formulation, which embedded v in a
+    zero-padded (n, t) block and multiplied all t columns.
+    """
+    del t  # kept in the signature for call-site clarity; width is always 1
+    return a_apply(v[:, None])[:, 0]
 
 
 @dataclasses.dataclass(frozen=True)

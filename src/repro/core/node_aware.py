@@ -370,31 +370,16 @@ def build_exchange_plan(
         else:
             raise ValueError(f"unknown strategy {strategy!r}")
 
-    # ---- stage-key bookkeeping for inter-node stage->stage moves ------------
-    # for stage->stage messages, stage_keys holds (src_key, dst_key) pairs;
-    # normalize to split views in _compile_phase via wrapper objects
+    # ---- compile phases; _compile_phase_stage_aware resolves the
+    # (src_key, dst_key) pairs carried by stage->stage messages -------------
     steps: list[ExchangeStep] = []
     for axis, msgs in phases:
         msgs = [m for m in msgs if len(m.rows)]
         if not msgs:
             continue
-        split_msgs = []
-        for m in msgs:
-            if (
-                m.src_kind == "stage"
-                and m.dst_kind == "stage"
-                and m.stage_keys
-                and isinstance(m.stage_keys[0], tuple)
-                and len(m.stage_keys[0]) == 2
-                and isinstance(m.stage_keys[0][0], tuple)
-            ):
-                # (src_key, dst_key) pairs — register src lookup & dst create
-                split_msgs.append(m)
-            else:
-                split_msgs.append(m)
         steps.extend(
             _compile_phase_stage_aware(
-                split_msgs, axis, n_nodes, ppn, local_index, halo_slot, stage_slot
+                msgs, axis, n_nodes, ppn, local_index, halo_slot, stage_slot
             )
         )
 

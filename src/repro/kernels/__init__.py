@@ -5,14 +5,25 @@ jit'd wrapper with backend dispatch) and ref.py (pure-jnp oracle used by the
 interpret-mode allclose test sweeps).
 """
 
-from repro.kernels.bsr_spmbv.ops import bsr_spmbv, bsr_to_block_ell, block_ell_from_csr
+from repro.kernels.bsr_spmbv.ops import (
+    bsr_spmbv,
+    bsr_to_block_ell,
+    block_ell_from_csr,
+    csr_arrays_to_block_ell,
+    count_block_ell_tiles,
+    make_block_ell_apply,
+)
 from repro.kernels.fused_gram.ops import fused_gram
-from repro.kernels.block_update.ops import block_update
+from repro.kernels.block_update.ops import block_update, ecg_tail
 
 __all__ = [
     "bsr_spmbv",
     "bsr_to_block_ell",
     "block_ell_from_csr",
+    "csr_arrays_to_block_ell",
+    "count_block_ell_tiles",
+    "make_block_ell_apply",
     "fused_gram",
     "block_update",
+    "ecg_tail",
 ]

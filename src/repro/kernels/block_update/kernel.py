@@ -1,9 +1,16 @@
-"""Pallas TPU kernel: fused ECG block-vector updates.
+"""Pallas TPU kernels: fused ECG block-vector updates.
 
 X += P·c and R -= AP·c share the (t x t) coefficient block c; fusing them
 halves kernel dispatches and lets each (rows, t) tile of X/R be updated while
 P/AP tiles are VMEM-resident.  Grid: 1-D over row tiles; c is broadcast to
 every step (small, stays in VMEM).
+
+``ecg_tail_pallas`` extends the fusion to the whole per-iteration tail of
+Algorithm 3 — X += P·c, R -= AP·c, Z = AP − P·d − P_old·d_old — so each
+(rows, t) tile of P and AP is read from HBM exactly once and feeds three
+small MXU matmuls while VMEM-resident (P feeds both the X and Z updates, AP
+feeds both the R and Z updates).  The unfused formulation reads P and AP
+twice each: 7 tile reads instead of 5 (a 1.4x traffic cut on the tail).
 """
 
 from __future__ import annotations
@@ -42,3 +49,42 @@ def block_update_pallas(x, r, p, ap, c, *, block_rows: int = 512, interpret: boo
         interpret=interpret,
     )(xp, rp, pp, app, c)
     return xo[:n], ro[:n]
+
+
+def _tail_kernel(x_ref, r_ref, p_ref, ap_ref, po_ref, c_ref, d_ref, do_ref,
+                 xo_ref, ro_ref, zo_ref):
+    p, ap = p_ref[...], ap_ref[...]
+    acc = xo_ref.dtype
+    xo_ref[...] = x_ref[...] + jnp.dot(p, c_ref[...], preferred_element_type=acc)
+    ro_ref[...] = r_ref[...] - jnp.dot(ap, c_ref[...], preferred_element_type=acc)
+    zo_ref[...] = (
+        ap
+        - jnp.dot(p, d_ref[...], preferred_element_type=acc)
+        - jnp.dot(po_ref[...], do_ref[...], preferred_element_type=acc)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ecg_tail_pallas(x, r, p, ap, p_old, c, d, d_old, *, block_rows: int = 512,
+                    interpret: bool = False):
+    """Fused ECG tail: (X+P·c, R−AP·c, AP−P·d−P_old·d_old) in one row pass."""
+    n, t = x.shape
+    n_pad = (n + block_rows - 1) // block_rows * block_rows
+    pad = lambda a: jnp.pad(a, ((0, n_pad - n), (0, 0)))
+    xp, rp, pp, app, pop = map(pad, (x, r, p, ap, p_old))
+    grid = (n_pad // block_rows,)
+    spec = pl.BlockSpec((block_rows, t), lambda i: (i, 0))
+    cspec = pl.BlockSpec((t, t), lambda i: (0, 0))
+    xo, ro, zo = pl.pallas_call(
+        _tail_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, spec, cspec, cspec, cspec],
+        out_specs=[spec, spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, t), x.dtype),
+            jax.ShapeDtypeStruct((n_pad, t), r.dtype),
+            jax.ShapeDtypeStruct((n_pad, t), ap.dtype),
+        ],
+        interpret=interpret,
+    )(xp, rp, pp, app, pop, c, d, d_old)
+    return xo[:n], ro[:n], zo[:n]

@@ -1,4 +1,17 @@
-"""Public op: Block-ELL SpMBV with Pallas-on-TPU / oracle-on-CPU dispatch."""
+"""Public op: Block-ELL SpMBV with Pallas-on-TPU / oracle-on-CPU dispatch.
+
+Besides the kernel wrapper this module carries the host-side (numpy)
+conversion machinery that puts the kernel on the solver hot path:
+
+* :func:`csr_arrays_to_block_ell` / :func:`count_block_ell_tiles` convert raw
+  CSR arrays (a rank's local [own ‖ halo] block in the distributed solver)
+  into the fixed-``kmax`` Block-ELL layout the kernel consumes.  Conversion
+  cost is O(nnz log nnz) (one sort + one pass over nonzeros) and is paid once
+  at ``make_distributed_spmbv`` setup — the analogue of the MPI communicator
+  setup phase, amortized over all solver iterations.
+* :func:`make_block_ell_apply` builds a ``(n, t) -> (n, t)`` closure over a
+  global CSR matrix for the sequential solver's ``backend="pallas"`` path.
+"""
 
 from __future__ import annotations
 
@@ -31,6 +44,80 @@ def bsr_to_block_ell(b: BSRMatrix, kmax: int | None = None):
 
 def block_ell_from_csr(a: CSRMatrix, br: int, bc: int):
     return bsr_to_block_ell(csr_to_bsr(a, br, bc))
+
+
+def count_block_ell_tiles(indptr, indices, n_rows: int, n_cols: int, br: int, bc: int) -> int:
+    """Max distinct (br x bc) tiles in any block row of a raw-CSR matrix."""
+    indptr = np.asarray(indptr, dtype=np.int64)
+    indices = np.asarray(indices, dtype=np.int64)
+    nnz = int(indptr[min(n_rows, len(indptr) - 1)])
+    if nnz == 0:
+        return 0
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), np.diff(indptr[: n_rows + 1]))
+    nbc = (n_cols + bc - 1) // bc
+    tiles = np.unique((rows // br) * nbc + indices[:nnz] // bc)
+    return int(np.bincount(tiles // nbc).max())
+
+
+def csr_arrays_to_block_ell(
+    indptr, indices, data, n_rows: int, n_cols: int, br: int, bc: int,
+    nbr: int, kmax: int,
+):
+    """Raw CSR arrays -> Block-ELL with caller-fixed (nbr, kmax) padding.
+
+    The caller fixes ``nbr``/``kmax`` so per-rank conversions can be stacked
+    into one (p, nbr, kmax, br, bc) device array; unused tiles stay zero with
+    block-column id 0 (safe: zero tiles contribute nothing).
+    """
+    indptr = np.asarray(indptr, dtype=np.int64)
+    indices = np.asarray(indices, dtype=np.int64)
+    data = np.asarray(data)
+    blocks = np.zeros((nbr, kmax, br, bc), dtype=data.dtype)
+    ell_idx = np.zeros((nbr, kmax), dtype=np.int32)
+    nnz = int(indptr[min(n_rows, len(indptr) - 1)])
+    if nnz == 0:
+        return blocks, ell_idx
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), np.diff(indptr[: n_rows + 1]))
+    nbc = (n_cols + bc - 1) // bc
+    brow = rows // br
+    bcol = indices[:nnz] // bc
+    key = brow * nbc + bcol
+    order = np.argsort(key, kind="stable")
+    key_s = key[order]
+    uniq, starts = np.unique(key_s, return_index=True)
+    ends = np.append(starts[1:], len(key_s))
+    r_in = (rows % br)[order]
+    c_in = (indices[:nnz] % bc)[order]
+    d_s = data[:nnz][order]
+    slot = np.zeros(nbr, dtype=np.int64)
+    for u, s, e in zip(uniq, starts, ends):
+        bi, bj = int(u // nbc), int(u % nbc)
+        k = slot[bi]
+        assert k < kmax, f"block row {bi} overflows kmax={kmax}"
+        ell_idx[bi, k] = bj
+        blocks[bi, k, r_in[s:e], c_in[s:e]] = d_s[s:e]
+        slot[bi] += 1
+    return blocks, ell_idx
+
+
+def make_block_ell_apply(a: CSRMatrix, block: int = 8, use_pallas: bool | None = None):
+    """Build the sequential solver's SpMBV closure over the Block-ELL kernel.
+
+    Converts ``a`` once (CSR -> BSR -> Block-ELL) and returns
+    ``apply(V: (n, t)) -> (n, t)`` that pads V to the tile grid, runs
+    :func:`bsr_spmbv`, and slices back to true rows.
+    """
+    b = csr_to_bsr(a, block, block)
+    blocks, indices = bsr_to_block_ell(b)
+    n = a.shape[0]
+    m_pad = b.shape[1]
+
+    def apply(v):
+        vp = jnp.pad(v, ((0, m_pad - v.shape[0]), (0, 0)))
+        w = bsr_spmbv(blocks, indices, vp, use_pallas=use_pallas)
+        return w[:n]
+
+    return apply
 
 
 def bsr_spmbv(blocks, indices, v, use_pallas: bool | None = None):

@@ -1,4 +1,10 @@
-"""Public op: fused ECG gram products (Pallas on TPU, oracle elsewhere)."""
+"""Public op: fused ECG gram products (Pallas on TPU, oracle elsewhere).
+
+Hot-path wiring: with ``backend="pallas"`` this op IS allreduce #2's local
+compute — ``repro.core.ecg.ecg_solve`` wraps it in ``allreduce`` and
+``repro.sparse.spmbv.distributed_ecg`` runs it per device inside the
+shard_map ``gram2``, feeding exactly one psum (the 3t² payload of §3.1).
+"""
 
 from __future__ import annotations
 

@@ -5,6 +5,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 record hypothesis → change → before → after (EXPERIMENTS.md §Perf).
 
     PYTHONPATH=src python -m repro.launch.perf --out experiments/perf.json
+
+ECG mode — measure the solver hot path instead of the transformer cells
+(kernel-vs-oracle + overlap-vs-blocking, on an 8-device (2x4) sub-mesh):
+
+    PYTHONPATH=src python -m repro.launch.perf --ecg --out experiments/ecg_perf.json
 """
 
 import argparse
@@ -132,11 +137,42 @@ def run_iteration(arch, shape, overrides):
     )
 
 
+def run_ecg_sweep(out_path: Path, only: str | None = None):
+    """ECG hot-path measurements (uses 8 of the forced host devices)."""
+    import numpy as np
+
+    from repro.analysis.ecg_bench import kernel_vs_oracle, overlap_vs_blocking_sweep
+    from repro.sparse import dg_laplace_2d
+
+    jax.config.update("jax_enable_x64", True)
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:8]).reshape(2, 4), ("node", "proc")
+    )
+    a = dg_laplace_2d((16, 12), block=8)
+    rows = overlap_vs_blocking_sweep(a, mesh, ts=(4, 8)) + kernel_vs_oracle()
+    if only:
+        rows = [r for r in rows if only in r["name"]]
+    for r in rows:
+        print(f"ECG {r['name']}: {r['us']:.1f}us  {r['derived']}", flush=True)
+    out_path.write_text(json.dumps(rows, indent=1))
+    print("ecg perf pass done", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="experiments/perf.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: experiments/perf.json, or "
+                         "experiments/ecg_perf.json with --ecg)")
     ap.add_argument("--only", default=None, help="substring filter on cell/iteration")
+    ap.add_argument("--ecg", action="store_true",
+                    help="run the ECG kernel/overlap sweep instead of the cells")
     args = ap.parse_args()
+    if args.ecg:
+        out_path = Path(args.out or "experiments/ecg_perf.json")
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        run_ecg_sweep(out_path, args.only)
+        return
+    args.out = args.out or "experiments/perf.json"
     out_path = Path(args.out)
     out_path.parent.mkdir(parents=True, exist_ok=True)
     results = json.loads(out_path.read_text()) if out_path.exists() else []

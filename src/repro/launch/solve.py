@@ -1,7 +1,11 @@
 """ECG solve driver (single- or multi-device).
 
     PYTHONPATH=src python -m repro.launch.solve --matrix dg --t 8 \
-        --strategy tuned [--devices 8]
+        --strategy tuned [--devices 8] [--backend pallas] [--overlap]
+
+--backend pallas routes the SpMBV through the Block-ELL Pallas kernel and
+the gram/tail updates through the fused kernels (oracles on CPU); --overlap
+enables the interior/boundary comm-hiding schedule in the distributed solver.
 """
 
 from __future__ import annotations
@@ -23,6 +27,10 @@ def main():
                     choices=["sequential", "standard", "2step", "3step", "optimal", "tuned"])
     ap.add_argument("--devices", type=int, default=0, help="force host devices (re-execs)")
     ap.add_argument("--ppn", type=int, default=4)
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--overlap", action="store_true",
+                    help="hide halo exchange behind interior SpMBV compute")
+    ap.add_argument("--ell-block", type=int, default=8, help="Block-ELL tile size")
     args = ap.parse_args()
 
     if args.devices and "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
@@ -48,9 +56,17 @@ def main():
     print(f"matrix: {a.shape[0]} rows, {a.nnz} nnz; t={args.t}")
 
     if args.strategy == "sequential" or not args.devices:
+        if args.backend == "pallas":
+            from repro.kernels import make_block_ell_apply
+
+            apply_a = make_block_ell_apply(a, block=args.ell_block)
+        else:
+            apply_a = lambda V: csr_spmbv(a, V)
         t0 = time.time()
-        res = ecg_solve(lambda V: csr_spmbv(a, V), jnp.asarray(b), t=args.t, tol=args.tol, max_iters=5000)
-        print(f"sequential ECG: iters={res.n_iters} converged={res.converged} {time.time()-t0:.1f}s")
+        res = ecg_solve(apply_a, jnp.asarray(b), t=args.t, tol=args.tol, max_iters=5000,
+                        backend=args.backend)
+        print(f"sequential ECG[{args.backend}]: iters={res.n_iters} "
+              f"converged={res.converged} {time.time()-t0:.1f}s")
         res_cg = cg_solve(lambda v: csr_spmbv(a, v[:, None])[:, 0], jnp.asarray(b), tol=args.tol, max_iters=20000)
         print(f"reference CG:  iters={res_cg.n_iters}")
         return
@@ -69,13 +85,17 @@ def main():
         strategy, times = tune_strategy(g, args.t, TPU_V5E_POD.with_ppn(args.ppn))
         print("tuned strategy:", strategy, {k: f"{v*1e6:.0f}us" for k, v in times.items()})
     t0 = time.time()
-    res, op = distributed_ecg(a, b, mesh, t=args.t, strategy=strategy, tol=args.tol, max_iters=5000)
+    res, op = distributed_ecg(a, b, mesh, t=args.t, strategy=strategy, tol=args.tol,
+                              max_iters=5000, backend=args.backend,
+                              overlap=args.overlap, ell_block=args.ell_block)
     x = op.unshard(res.x)
     relres = np.linalg.norm(np.asarray(a.todense(), np.float64) @ x - b) / np.linalg.norm(b) \
         if a.shape[0] <= 8192 else float("nan")
     print(
-        f"distributed ECG[{strategy}] on {n_dev} devices: iters={res.n_iters} "
-        f"converged={res.converged} relres={relres:.2e} {time.time()-t0:.1f}s"
+        f"distributed ECG[{strategy}/{args.backend}"
+        f"{'/overlap' if args.overlap else ''}] on {n_dev} devices: "
+        f"iters={res.n_iters} converged={res.converged} relres={relres:.2e} "
+        f"{time.time()-t0:.1f}s"
     )
 
 

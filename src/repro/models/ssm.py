@@ -106,7 +106,7 @@ def abstract_params(cfg: ArchConfig):
 
 def init_params(cfg: ArchConfig, key):
     shapes = param_shapes(cfg)
-    flat, treedef = jax.tree.flatten_with_path(shapes, is_leaf=lambda s: isinstance(s, tuple))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes, is_leaf=lambda s: isinstance(s, tuple))
     keys = jax.random.split(key, len(flat))
     leaves = []
     for k, (path, shape) in zip(keys, flat):

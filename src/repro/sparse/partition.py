@@ -93,6 +93,29 @@ class PartitionedMatrix:
         return self.part.p
 
 
+def interior_boundary_split(pm: "PartitionedMatrix") -> list[tuple[np.ndarray, np.ndarray]]:
+    """Per rank, (interior_rows, boundary_rows) — local row ids in [0, n_local).
+
+    A row is *interior* when every nonzero column is on-process (< n_local in
+    the remapped local ids), i.e. its SpMBV output never waits on the halo
+    exchange.  Boundary rows are the rest.  This is the static analysis
+    behind the comm/compute-overlap schedule in ``repro.sparse.spmbv``: the
+    interior SpMBV is issued with no data dependence on the exchange rounds,
+    so it runs while the inter-node messages are in flight.
+    """
+    out = []
+    for r in range(pm.p):
+        lo, hi = pm.part.local_range(r)
+        n_local = hi - lo
+        ptr = np.asarray(pm.local_indptr[r])
+        ix = np.asarray(pm.local_indices[r])
+        has_halo = np.zeros(n_local, dtype=bool)
+        rows_of_nnz = np.repeat(np.arange(n_local, dtype=np.int64), np.diff(ptr))
+        np.logical_or.at(has_halo, rows_of_nnz, ix >= n_local)
+        out.append((np.nonzero(~has_halo)[0], np.nonzero(has_halo)[0]))
+    return out
+
+
 def partition_csr(a: CSRMatrix, p: int) -> PartitionedMatrix:
     """Partition ``a`` row-wise over p processes; extract comm graph.
 

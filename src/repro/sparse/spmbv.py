@@ -5,10 +5,33 @@ vectors share the row distribution (paper §3).  The halo exchange replays a
 static :class:`~repro.core.node_aware.ExchangePlan` — gather → ppermute →
 scatter rounds — then the local SpMBV runs on [own rows ‖ halo rows].
 
+Two orthogonal execution levers, both fixed at setup time:
+
+* ``backend="jnp" | "pallas"`` — the local SpMBV formulation.  ``jnp`` is the
+  scalar-gather CSR ``segment_sum`` reference; ``pallas`` converts each
+  rank's local [own ‖ halo] CSR block to Block-ELL once (see
+  ``repro.kernels.bsr_spmbv``) so every local product is a pipeline of dense
+  (br x bc) @ (bc x t) MXU matmuls.  The one-time conversion cost is
+  O(nnz log nnz) host work plus a kmax/nnz_tile densification factor in
+  device memory — amortized over all solver iterations.
+* ``overlap=True`` — comm/compute overlap.  At partition time local rows are
+  split into *interior* rows (no halo-column dependence) and *boundary* rows
+  (see :func:`repro.sparse.partition.interior_boundary_split`).  The device
+  program then issues the interior SpMBV with **no data dependence on the
+  ppermute rounds**, so XLA's latency-hiding scheduler can run it while the
+  inter-node messages of the ExchangePlan are in flight; only the boundary
+  rows wait on the halo.  This is the node-aware analogue of the paper's
+  pipeline: the exchange latency is hidden behind |interior|/|local| of the
+  SpMBV flops.
+
 This module also provides the distributed ECG wrapper: the same iteration
 body as :func:`repro.core.ecg.ecg_solve` with `psum` reductions, executed
 entirely inside one shard_map (so the two fused allreduces of §3.1 appear as
-exactly two psums per iteration in the lowered HLO).
+exactly two psums per iteration in the lowered HLO).  With
+``backend="pallas"`` the packed gram product runs through
+``kernels/fused_gram`` and the X/R/Z tail through
+``kernels/block_update.ecg_tail`` — per-device Pallas kernels feeding the
+same two psums.
 """
 
 from __future__ import annotations
@@ -23,26 +46,53 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.sparse.csr import CSRMatrix
-from repro.sparse.partition import PartitionedMatrix, partition_csr
+from repro.sparse.partition import (
+    PartitionedMatrix,
+    interior_boundary_split,
+    partition_csr,
+)
 from repro.core.node_aware import ExchangePlan, ExchangeStep, build_exchange_plan
+from repro.kernels.bsr_spmbv.ops import (
+    bsr_spmbv,
+    count_block_ell_tiles,
+    csr_arrays_to_block_ell,
+)
+from repro.kernels.fused_gram.ops import fused_gram
+from repro.kernels.block_update.ops import ecg_tail
 
 
 @dataclasses.dataclass
 class DistributedSpMBV:
-    """Device-ready distributed SpMBV operator."""
+    """Device-ready distributed SpMBV operator.
+
+    ``backend`` selects the local SpMBV formulation (CSR segment-sum vs the
+    Block-ELL Pallas kernel); ``overlap`` selects the split interior/boundary
+    schedule that hides the halo exchange behind interior compute.  The
+    corresponding device arrays live in ``ell`` (pallas, blocking) and
+    ``split`` (either backend, overlapped); see ``make_distributed_spmbv``.
+    """
 
     mesh: Mesh
     plan: ExchangePlan
     n: int                 # true global rows
     rmax: int              # padded rows per device
     starts: np.ndarray     # (p+1,) partition row offsets (true global ids)
-    # stacked per-device CSR (sharded on axis 0 at call time)
-    indptr: jax.Array      # (p, rmax + 1)
-    indices: jax.Array     # (p, nnz_max)  — local ids; halo ids offset by rmax
-    data: jax.Array        # (p, nnz_max)
+    # stacked per-device CSR (sharded on axis 0 at call time); None when the
+    # selected (backend, overlap) mode never reads it — only the matrix
+    # representation the device program actually consumes is device_put
+    indptr: jax.Array | None   # (p, rmax + 1)
+    indices: jax.Array | None  # (p, nnz_max) — local ids; halo ids offset by rmax
+    data: jax.Array | None     # (p, nnz_max)
     # stacked per-step exchange arrays
     gathers: list[jax.Array]
     scatters: list[jax.Array]
+    backend: str = "jnp"
+    overlap: bool = False
+    ell_block: int = 8
+    # pallas blocking path: Block-ELL of the full [own ‖ halo] local block
+    ell: dict = dataclasses.field(default_factory=dict)
+    # overlap path: interior/boundary structures (CSR or Block-ELL per backend)
+    split: dict = dataclasses.field(default_factory=dict)
 
     @property
     def p(self) -> int:
@@ -112,30 +162,79 @@ class DistributedSpMBV:
                 stage = stage.at[s_pos].set(buf)
         return halo[: plan.halo_size]
 
-    def _local_spmbv(self, x_local, halo, indptr, indices, data):
-        """CSR SpMBV over [own ‖ halo] rows; returns (rmax, t)."""
-        xfull = jnp.concatenate([x_local, halo], axis=0)
+    # -------------------------------------------------------- local kernels
+    def _csr_rows_spmbv(self, xfull, indptr, indices, data, n_rows: int):
+        """CSR SpMBV over a (possibly gathered) row set; returns (n_rows, t)."""
         rows = jnp.repeat(
-            jnp.arange(self.rmax, dtype=jnp.int32),
+            jnp.arange(n_rows, dtype=jnp.int32),
             jnp.diff(indptr),
             total_repeat_length=indices.shape[0],
         )
         prod = data[:, None] * xfull[indices]
-        return jax.ops.segment_sum(prod, rows, num_segments=self.rmax)
+        return jax.ops.segment_sum(prod, rows, num_segments=n_rows)
+
+    def _local_spmbv(self, x_local, halo, indptr, indices, data):
+        """CSR SpMBV over [own ‖ halo] rows; returns (rmax, t)."""
+        xfull = jnp.concatenate([x_local, halo], axis=0)
+        return self._csr_rows_spmbv(xfull, indptr, indices, data, self.rmax)
+
+    def _ell_spmbv(self, xfull, blocks, indices):
+        """Block-ELL SpMBV; pads xfull to the tile grid the blocks index."""
+        bc = blocks.shape[-1]
+        m_pad = (xfull.shape[0] + bc - 1) // bc * bc
+        vp = jnp.pad(xfull, ((0, m_pad - xfull.shape[0]), (0, 0)))
+        return bsr_spmbv(blocks, indices, vp)
 
     # ------------------------------------------------------------------ api
     def matvec_fn(self):
         """Returns f(V_sharded (n_padded, t)) -> (n_padded, t), jit-able."""
         plan = self.plan
+        k = len(plan.steps)
 
-        def per_device(v, indptr, indices, data, *exchange_arrays):
-            k = len(plan.steps)
+        def per_device(v, csr, ell, split, *exchange_arrays):
             gathers = [a[0] for a in exchange_arrays[:k]]
             scatters = [a[0] for a in exchange_arrays[k:]]
+            shape = v.shape
             v = v.reshape(self.rmax, -1)
-            halo = self._exchange(v, gathers, scatters)
-            w = self._local_spmbv(v, halo, indptr[0], indices[0], data[0])
-            return w.reshape(v.shape)
+            t = v.shape[1]
+            if not self.overlap:
+                halo = self._exchange(v, gathers, scatters)
+                if self.backend == "pallas":
+                    xfull = jnp.concatenate([v, halo], axis=0)
+                    w = self._ell_spmbv(xfull, ell["blocks"][0], ell["indices"][0])
+                    w = w[: self.rmax]
+                else:
+                    w = self._local_spmbv(
+                        v, halo, csr["indptr"][0], csr["indices"][0], csr["data"][0]
+                    )
+            else:
+                sp = {key: arr[0] for key, arr in split.items()}
+                n_int = sp["int_rows"].shape[0]
+                n_bnd = sp["bnd_rows"].shape[0]
+                w = jnp.zeros((self.rmax + 1, t), v.dtype)  # +1 = dump row
+                # Interior SpMBV reads only own rows — no data dependence on
+                # the ppermute rounds below, so it overlaps the exchange.
+                if n_int:
+                    if self.backend == "pallas":
+                        w_int = self._ell_spmbv(v, sp["int_blocks"], sp["int_idx"])[:n_int]
+                    else:
+                        w_int = self._csr_rows_spmbv(
+                            v, sp["int_indptr"], sp["int_indices"], sp["int_data"], n_int
+                        )
+                    w = w.at[sp["int_rows"]].add(w_int)
+                halo = self._exchange(v, gathers, scatters)
+                # Only the boundary rows wait on the halo.
+                if n_bnd:
+                    xfull = jnp.concatenate([v, halo], axis=0)
+                    if self.backend == "pallas":
+                        w_bnd = self._ell_spmbv(xfull, sp["bnd_blocks"], sp["bnd_idx"])[:n_bnd]
+                    else:
+                        w_bnd = self._csr_rows_spmbv(
+                            xfull, sp["bnd_indptr"], sp["bnd_indices"], sp["bnd_data"], n_bnd
+                        )
+                    w = w.at[sp["bnd_rows"]].add(w_bnd)
+                w = w[: self.rmax]
+            return w.reshape(shape)
 
         dev_specs = P(("node", "proc"),)
         smapped = shard_map(
@@ -148,7 +247,14 @@ class DistributedSpMBV:
         )
 
         def apply(v):
-            return smapped(v, self.indptr, self.indices, self.data, *self.gathers, *self.scatters)
+            csr = (
+                {}
+                if self.indptr is None
+                else {"indptr": self.indptr, "indices": self.indices, "data": self.data}
+            )
+            return smapped(
+                v, csr, self.ell, self.split, *self.gathers, *self.scatters
+            )
 
         return apply
 
@@ -163,6 +269,57 @@ def _perm(step: ExchangeStep, plan: ExchangePlan):
     return [(i, (i + step.offset) % n) for i in range(n)]
 
 
+def _gather_csr_rows(ptr, ix, dat, rows):
+    """Extract the CSR rows ``rows`` as a compact (len(rows), ·) CSR triple."""
+    counts = np.diff(ptr)[rows]
+    gptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    if len(rows):
+        gix = np.concatenate([ix[ptr[r] : ptr[r + 1]] for r in rows])
+        gdat = np.concatenate([dat[ptr[r] : ptr[r + 1]] for r in rows])
+    else:
+        gix = np.zeros(0, dtype=np.int64)
+        gdat = np.zeros(0, dtype=dat.dtype)
+    return gptr, gix, gdat
+
+
+def _stack_gathered_csr(per_rank, n_rows_max, rmax, dtype):
+    """Stack per-rank gathered CSR triples + scatter row ids into (p, ·) arrays.
+
+    per_rank: list of (rows, gptr, gix, gdat); scatter ids pad with the dump
+    row ``rmax``; nnz pads with index 0 / value 0 (contribute nothing).
+    """
+    p = len(per_rank)
+    nnz_max = max((int(g[1][-1]) for g in per_rank), default=0)
+    rows_ids = np.full((p, n_rows_max), rmax, np.int32)
+    indptr = np.zeros((p, n_rows_max + 1), np.int32)
+    indices = np.zeros((p, nnz_max), np.int32)
+    data = np.zeros((p, nnz_max), dtype)
+    for r, (rows, gptr, gix, gdat) in enumerate(per_rank):
+        rows_ids[r, : len(rows)] = rows
+        indptr[r, : len(gptr)] = gptr
+        indptr[r, len(gptr) :] = gptr[-1]
+        indices[r, : len(gix)] = gix
+        data[r, : len(gdat)] = gdat
+    return rows_ids, indptr, indices, data
+
+
+def _stack_block_ell(per_rank, n_rows_max, n_cols, br, bc, dtype):
+    """Convert per-rank gathered CSR triples to one stacked Block-ELL array."""
+    p = len(per_rank)
+    nbr = max(1, (n_rows_max + br - 1) // br)
+    kmax = max(
+        [count_block_ell_tiles(g[1], g[2], len(g[0]), n_cols, br, bc) for g in per_rank]
+        + [1]
+    )
+    blocks = np.zeros((p, nbr, kmax, br, bc), dtype)
+    idx = np.zeros((p, nbr, kmax), np.int32)
+    for r, (rows, gptr, gix, gdat) in enumerate(per_rank):
+        blocks[r], idx[r] = csr_arrays_to_block_ell(
+            gptr, gix, gdat, len(rows), n_cols, br, bc, nbr, kmax
+        )
+    return blocks, idx
+
+
 def make_distributed_spmbv(
     a: CSRMatrix,
     mesh: Mesh,
@@ -170,30 +327,90 @@ def make_distributed_spmbv(
     t: int = 1,
     machine=None,
     pm: PartitionedMatrix | None = None,
+    backend: str = "jnp",
+    overlap: bool = False,
+    ell_block: int = 8,
 ) -> DistributedSpMBV:
-    """Partition ``a`` over ``mesh`` and build the device-ready operator."""
+    """Partition ``a`` over ``mesh`` and build the device-ready operator.
+
+    backend="pallas" additionally converts each rank's local [own ‖ halo]
+    CSR block to Block-ELL here (one-time host cost, see module docstring);
+    overlap=True splits rows into interior/boundary sets so the device
+    program hides the exchange rounds behind interior compute.
+    """
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
     n_nodes, ppn = mesh.devices.shape
     p = n_nodes * ppn
     pm = pm or partition_csr(a, p)
     plan = build_exchange_plan(pm, n_nodes, ppn, strategy, t=t, machine=machine)
 
     rmax = pm.part.max_local_rows
-    nnz_max = max(len(ix) for ix in pm.local_indices)
-    indptr = np.zeros((p, rmax + 1), np.int32)
-    indices = np.zeros((p, nnz_max), np.int32)
-    data = np.zeros((p, nnz_max), np.asarray(pm.local_data[0]).dtype)
+    val_dtype = np.asarray(pm.local_data[0]).dtype
+    rebased = []  # per-rank (indptr, indices-with-halo-at-rmax, data, n_local)
     for r in range(p):
         lo, hi = pm.part.local_range(r)
         n_local = hi - lo
-        ptr = pm.local_indptr[r]
-        indptr[r, : n_local + 1] = ptr
-        indptr[r, n_local + 1 :] = ptr[-1]
-        k = len(pm.local_indices[r])
         # halo ids were n_local-based; re-base to rmax so x can be padded
         ix = pm.local_indices[r].astype(np.int64)
         ix = np.where(ix >= n_local, ix - n_local + rmax, ix)
-        indices[r, :k] = ix
-        data[r, :k] = pm.local_data[r]
+        rebased.append((pm.local_indptr[r], ix, pm.local_data[r], n_local))
+
+    # the full stacked CSR is only consumed by the blocking jnp path; don't
+    # ship a second copy of the matrix to devices in the other modes
+    indptr = indices = data = None
+    if backend == "jnp" and not overlap:
+        nnz_max = max(len(ix) for ix in pm.local_indices)
+        indptr = np.zeros((p, rmax + 1), np.int32)
+        indices = np.zeros((p, nnz_max), np.int32)
+        data = np.zeros((p, nnz_max), val_dtype)
+        for r, (ptr, ix, dat, n_local) in enumerate(rebased):
+            indptr[r, : n_local + 1] = ptr
+            indptr[r, n_local + 1 :] = ptr[-1]
+            indices[r, : len(ix)] = ix
+            data[r, : len(dat)] = dat
+
+    n_cols_full = rmax + plan.halo_size
+    br = bc = ell_block
+
+    ell = {}
+    if backend == "pallas" and not overlap:
+        per_rank = [
+            (np.arange(n_local), ptr, ix, dat) for ptr, ix, dat, n_local in rebased
+        ]
+        blocks, idx = _stack_block_ell(per_rank, rmax, n_cols_full, br, bc, val_dtype)
+        ell = {"blocks": blocks, "indices": idx}
+
+    split = {}
+    if overlap:
+        io = interior_boundary_split(pm)
+        n_int_max = max(len(i) for i, _ in io)
+        n_bnd_max = max(len(b) for _, b in io)
+        int_per_rank, bnd_per_rank = [], []
+        for (ptr, ix, dat, n_local), (int_rows, bnd_rows) in zip(rebased, io):
+            gi = _gather_csr_rows(ptr, ix, dat, int_rows)
+            gb = _gather_csr_rows(ptr, ix, dat, bnd_rows)
+            int_per_rank.append((int_rows,) + gi)
+            bnd_per_rank.append((bnd_rows,) + gb)
+        int_ids, int_ptr, int_ix, int_dat = _stack_gathered_csr(
+            int_per_rank, n_int_max, rmax, val_dtype
+        )
+        bnd_ids, bnd_ptr, bnd_ix, bnd_dat = _stack_gathered_csr(
+            bnd_per_rank, n_bnd_max, rmax, val_dtype
+        )
+        split = {"int_rows": int_ids, "bnd_rows": bnd_ids}
+        if backend == "pallas":
+            split["int_blocks"], split["int_idx"] = _stack_block_ell(
+                int_per_rank, n_int_max, rmax, br, bc, val_dtype
+            )
+            split["bnd_blocks"], split["bnd_idx"] = _stack_block_ell(
+                bnd_per_rank, n_bnd_max, n_cols_full, br, bc, val_dtype
+            )
+        else:
+            split.update(
+                int_indptr=int_ptr, int_indices=int_ix, int_data=int_dat,
+                bnd_indptr=bnd_ptr, bnd_indices=bnd_ix, bnd_data=bnd_dat,
+            )
 
     dev_sharding = NamedSharding(mesh, P(("node", "proc")))
     put = lambda arr: jax.device_put(jnp.asarray(arr), dev_sharding)
@@ -203,11 +420,16 @@ def make_distributed_spmbv(
         n=a.shape[0],
         rmax=rmax,
         starts=pm.part.starts,
-        indptr=put(indptr),
-        indices=put(indices),
-        data=put(data),
+        indptr=put(indptr) if indptr is not None else None,
+        indices=put(indices) if indices is not None else None,
+        data=put(data) if data is not None else None,
         gathers=[put(s.gather_idx) for s in plan.steps],
         scatters=[put(s.scatter_pos) for s in plan.steps],
+        backend=backend,
+        overlap=overlap,
+        ell_block=ell_block,
+        ell={k2: put(v) for k2, v in ell.items()},
+        split={k2: put(v) for k2, v in split.items()},
     )
 
 
@@ -223,15 +445,25 @@ def distributed_ecg(
     tol: float = 1e-8,
     max_iters: int = 500,
     machine=None,
+    backend: str = "jnp",
+    overlap: bool = False,
+    ell_block: int = 8,
 ):
     """Distributed ECG solve with the selected node-aware SpMBV strategy.
 
     Runs the whole while_loop inside jit with the distributed operator; the
-    two fused reductions appear as psums over ("node", "proc").
+    two fused reductions appear as psums over ("node", "proc").  With
+    ``backend="pallas"`` the per-device local work (SpMBV, packed gram, X/R/Z
+    tail) runs through the Pallas kernel suite — the collective structure
+    (two psums per iteration) is unchanged.  ``overlap=True`` additionally
+    hides the halo-exchange rounds behind interior SpMBV compute.
     """
     from repro.core.ecg import ecg_solve
 
-    op = make_distributed_spmbv(a, mesh, strategy, t=t, machine=machine)
+    op = make_distributed_spmbv(
+        a, mesh, strategy, t=t, machine=machine,
+        backend=backend, overlap=overlap, ell_block=ell_block,
+    )
     apply_a = op.matvec_fn()
     b_sh = op.shard_vector(b)
     n_pad = op.n_padded
@@ -246,15 +478,32 @@ def distributed_ecg(
         out_specs=P(None, None),
         check_rep=False,
     )
-    gram2 = shard_map(
-        lambda pp, rr, ap, apo: jax.lax.psum(
-            jnp.concatenate([pp.T @ rr, ap.T @ ap, apo.T @ ap], axis=1), axes
-        ),
-        mesh=mesh,
-        in_specs=(vspec,) * 4,
-        out_specs=P(None, None),
-        check_rep=False,
-    )
+    if backend == "pallas":
+        gram2 = shard_map(
+            lambda pp, rr, ap, apo: jax.lax.psum(fused_gram(pp, rr, ap, apo), axes),
+            mesh=mesh,
+            in_specs=(vspec,) * 4,
+            out_specs=P(None, None),
+            check_rep=False,
+        )
+        tail = shard_map(
+            lambda x, r, pp, ap, po, c, d, do: ecg_tail(x, r, pp, ap, po, c, d, do),
+            mesh=mesh,
+            in_specs=(vspec,) * 5 + (P(None, None),) * 3,
+            out_specs=(vspec, vspec, vspec),
+            check_rep=False,
+        )
+    else:
+        gram2 = shard_map(
+            lambda pp, rr, ap, apo: jax.lax.psum(
+                jnp.concatenate([pp.T @ rr, ap.T @ ap, apo.T @ ap], axis=1), axes
+            ),
+            mesh=mesh,
+            in_specs=(vspec,) * 4,
+            out_specs=P(None, None),
+            check_rep=False,
+        )
+        tail = None
     sqnorm = shard_map(
         lambda v: jax.lax.psum(jnp.vdot(v, v), axes),
         mesh=mesh,
@@ -286,5 +535,7 @@ def distributed_ecg(
         gram1=gram1,
         gram2=gram2,
         sqnorm=sqnorm,
+        tail=tail,
+        backend=backend,
     )
     return result, op

@@ -11,8 +11,8 @@ from repro.kernels.bsr_spmbv.ref import bsr_spmbv_ref
 from repro.kernels.bsr_spmbv.ops import bsr_to_block_ell
 from repro.kernels.fused_gram.kernel import fused_gram_pallas
 from repro.kernels.fused_gram.ref import fused_gram_ref
-from repro.kernels.block_update.kernel import block_update_pallas
-from repro.kernels.block_update.ref import block_update_ref
+from repro.kernels.block_update.kernel import block_update_pallas, ecg_tail_pallas
+from repro.kernels.block_update.ref import block_update_ref, ecg_tail_ref
 
 
 def tol_for(dtype):
@@ -81,3 +81,60 @@ class TestBlockUpdate:
         xw, rw = block_update_ref(x, r, p, ap, c)
         np.testing.assert_allclose(np.asarray(xo, np.float32), np.asarray(xw, np.float32), **tol_for(dtype))
         np.testing.assert_allclose(np.asarray(ro, np.float32), np.asarray(rw, np.float32), **tol_for(dtype))
+
+
+# ---------------------------------------------------------------------------
+# hot-path sweeps: interpret-mode Pallas vs oracle over {f32, f64} x t {2,4,8}
+# (the dtypes and widths the solver backend switch actually runs)
+# ---------------------------------------------------------------------------
+SWEEP_DTYPES = [jnp.float32, jnp.float64]
+SWEEP_T = [2, 4, 8]
+
+
+def sweep_tol(dtype):
+    return dict(rtol=1e-12, atol=1e-12) if dtype == jnp.float64 else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestHotPathSweeps:
+    @pytest.mark.parametrize("dtype", SWEEP_DTYPES)
+    @pytest.mark.parametrize("t", SWEEP_T)
+    def test_bsr_spmbv_sweep(self, rng, t, dtype):
+        a = dg_laplace_2d((4, 3), block=8, dtype=jnp.float32)
+        blocks, indices = bsr_to_block_ell(csr_to_bsr(a, 8, 8))
+        blocks = blocks.astype(dtype)
+        v = jnp.asarray(rng.standard_normal((a.shape[1], t)), dtype)
+        got = bsr_spmbv_pallas(blocks, indices, v, interpret=True)
+        want = bsr_spmbv_ref(blocks, indices, v)
+        assert got.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(got, np.float64), np.asarray(want, np.float64), **sweep_tol(dtype)
+        )
+
+    @pytest.mark.parametrize("dtype", SWEEP_DTYPES)
+    @pytest.mark.parametrize("t", SWEEP_T)
+    def test_fused_gram_sweep(self, rng, t, dtype):
+        mats = [jnp.asarray(rng.standard_normal((300, t)), dtype) for _ in range(4)]
+        got = fused_gram_pallas(*mats, block_rows=64, interpret=True)
+        want = fused_gram_ref(*mats)
+        assert got.shape == (t, 3 * t) and got.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(got, np.float64), np.asarray(want, np.float64),
+            **(dict(rtol=1e-12, atol=1e-11) if dtype == jnp.float64
+               else dict(rtol=1e-4, atol=1e-3)),
+        )
+
+    @pytest.mark.parametrize("dtype", SWEEP_DTYPES)
+    @pytest.mark.parametrize("t", SWEEP_T)
+    def test_ecg_tail_sweep(self, rng, t, dtype):
+        n = 210
+        x, r, p, ap, po = (
+            jnp.asarray(rng.standard_normal((n, t)), dtype) for _ in range(5)
+        )
+        c, d, do = (jnp.asarray(rng.standard_normal((t, t)), dtype) for _ in range(3))
+        got = ecg_tail_pallas(x, r, p, ap, po, c, d, do, block_rows=64, interpret=True)
+        want = ecg_tail_ref(x, r, p, ap, po, c, d, do)
+        for g, w in zip(got, want):
+            assert g.shape == (n, t) and g.dtype == dtype
+            np.testing.assert_allclose(
+                np.asarray(g, np.float64), np.asarray(w, np.float64), **sweep_tol(dtype)
+            )

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.sparse import fd_laplace_2d, partition_csr, suite_surrogate
 from repro.sparse.matrices import example_2_1_graph

@@ -3,7 +3,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.sparse import (
     CSRMatrix,
@@ -147,3 +147,22 @@ class TestPartition:
         sizes = [pm.part.local_range(r)[1] - pm.part.local_range(r)[0] for r in range(4)]
         assert sum(sizes) == 49
         assert max(sizes) - min(sizes) <= 1
+
+    @pytest.mark.parametrize("p", [2, 4, 6])
+    def test_interior_boundary_split(self, p):
+        """Interior/boundary sets partition the local rows, and interior rows
+        reference no halo column (the invariant the overlap schedule needs)."""
+        from repro.sparse.partition import interior_boundary_split
+
+        a = fd_laplace_2d(11)
+        pm = partition_csr(a, p)
+        for r, (interior, boundary) in enumerate(interior_boundary_split(pm)):
+            lo, hi = pm.part.local_range(r)
+            n_local = hi - lo
+            assert len(interior) + len(boundary) == n_local
+            assert not set(interior) & set(boundary)
+            ptr, ix = pm.local_indptr[r], pm.local_indices[r]
+            for row in interior:
+                assert (ix[ptr[row] : ptr[row + 1]] < n_local).all()
+            for row in boundary:
+                assert (ix[ptr[row] : ptr[row + 1]] >= n_local).any()
