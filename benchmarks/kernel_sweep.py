@@ -1,8 +1,10 @@
 """Kernel-vs-oracle and overlap-vs-blocking benchmark sweep (8 host devices).
 
-    PYTHONPATH=src python benchmarks/kernel_sweep.py [filter]
+    PYTHONPATH=src python benchmarks/kernel_sweep.py [filter] [--json PATH]
 
-Prints ``name,us_per_call,derived`` CSV:
+Prints ``name,us_per_call,derived`` CSV and writes the same rows as
+machine-readable JSON (default ``BENCH_kernel_sweep.json``) so the perf
+trajectory is tracked across PRs:
   * ``spmbv/<strategy>_t<t>_<backend>_<blocking|overlap>`` — distributed
     SpMBV wall time for all four exchange strategies at t in {4, 8}, with
     the CSR jnp backend and the Block-ELL kernel backend, blocking vs
@@ -14,8 +16,9 @@ XLA_FLAGS is set before jax import so the sweep runs on a (2 nodes x 4
 procs) mesh anywhere; pre-set XLA_FLAGS wins (e.g. a real TPU topology).
 """
 
+import argparse
+import json
 import os
-import sys
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
@@ -24,11 +27,15 @@ import numpy as np
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("filter", nargs="?", default=None)
+    ap.add_argument("--json", default="BENCH_kernel_sweep.json")
+    args = ap.parse_args()
+
     jax.config.update("jax_enable_x64", True)
     from repro.analysis.ecg_bench import kernel_vs_oracle, overlap_vs_blocking_sweep
     from repro.sparse import dg_laplace_2d
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
     n_dev = len(jax.devices())
     assert n_dev >= 8, f"need >= 8 devices, got {n_dev}"
     mesh = jax.sharding.Mesh(
@@ -39,9 +46,14 @@ def main() -> None:
     print("name,us_per_call,derived")
     rows = overlap_vs_blocking_sweep(a, mesh, ts=(4, 8)) + kernel_vs_oracle()
     for r in rows:
-        if only and only not in r["name"]:
+        if args.filter and args.filter not in r["name"]:
             continue
         print(f"{r['name']},{r['us']:.1f},{r['derived']}", flush=True)
+    # the JSON always carries the full sweep (the filter only trims stdout),
+    # so cross-PR trajectory comparisons never see partial files
+    with open(args.json, "w") as fh:
+        json.dump(dict(benchmark="kernel_sweep", rows=rows), fh, indent=2)
+    print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,11 @@ entry point (it must force 8 host devices before importing jax):
 
 import sys
 import time
+from pathlib import Path
+
+# make `benchmarks.*` importable when invoked as `python benchmarks/run.py`
+# (sys.path[0] is the script dir, not the repo root)
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:

@@ -1,0 +1,105 @@
+"""Model-predicted vs measured winners over the tuner grid (8 host devices).
+
+    PYTHONPATH=src python benchmarks/tuner_sweep.py [--t 4 8] [--json PATH]
+
+For every (strategy x tile x schedule) config at each t, prints the measured
+wall microseconds of one distributed SpMBV application next to the
+model-predicted microseconds, then a per-t summary naming the measured
+winner, the model winner, and the *gap*: how much slower the model's pick
+runs than the measured best.  The gap is the acceptance gauge for
+``tune="model"`` — it should stay within ~10% on a machine whose
+:class:`~repro.core.machines.MachineParams` constants are calibrated (on
+forced host devices, where ppermute is a memcpy, expect the model's comm
+terms to overstate; ``--machine`` selects the parameter set).
+
+Writes machine-readable ``BENCH_tuner_sweep.json`` so the perf trajectory
+(and the model-vs-measured gap) is tracked across PRs.
+"""
+
+import argparse
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--t", type=int, nargs="+", default=[4, 8])
+    ap.add_argument("--tiles", default="4x4,8x8,16x16")
+    ap.add_argument("--machine", default="BlueWaters")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json", default="BENCH_tuner_sweep.json")
+    args = ap.parse_args()
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.comm_graph import build_comm_graph
+    from repro.core.machines import MACHINES
+    from repro.core.models import STRATEGIES
+    from repro.sparse import dg_laplace_2d, partition_csr
+    from repro.tune import measure_config, predict_config, tile_stats, tune
+
+    n_dev = len(jax.devices())
+    assert n_dev >= 8, f"need >= 8 devices, got {n_dev}"
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:8]).reshape(2, 4), ("node", "proc")
+    )
+    a = dg_laplace_2d((16, 12), block=8)  # 1536 rows over 8 ranks
+    pm = partition_csr(a, 8)
+    g = build_comm_graph(pm, ppn=4)
+    machine = MACHINES[args.machine].with_ppn(4)
+    tiles = [tuple(map(int, s.split("x"))) for s in args.tiles.split(",")]
+
+    rows, summary = [], {}
+    print("name,us_per_call,model_us")
+    for t in args.t:
+        stats = {tl: tile_stats(pm, *tl) for tl in tiles}
+        for strategy in STRATEGIES:
+            for tl in tiles:
+                for overlap in (False, True):
+                    mode = "overlap" if overlap else "blocking"
+                    name = f"tuner/{strategy}_{tl[0]}x{tl[1]}_{mode}_t{t}"
+                    us = measure_config(
+                        a, mesh, t, strategy, tl, overlap, backend="pallas",
+                        machine=machine, pm=pm, repeats=args.repeats,
+                    )
+                    model_us = 1e6 * predict_config(
+                        pm, g, t, machine, strategy, stats[tl], overlap, "pallas"
+                    )
+                    rows.append(dict(
+                        name=name, us=us, model_us=model_us, t=t,
+                        strategy=strategy, tile=f"{tl[0]}x{tl[1]}", overlap=overlap,
+                    ))
+                    print(f"{name},{us:.1f},{model_us:.2f}", flush=True)
+        sub = [r for r in rows if r["t"] == t]
+        meas_best = min(sub, key=lambda r: r["us"])
+        model_best = min(sub, key=lambda r: r["model_us"])
+        gap = model_best["us"] / meas_best["us"] - 1.0
+        cfg = tune(a, t=t, machine=machine, mesh=mesh, backend="pallas",
+                   tiles=tiles, pm=pm)
+        summary[f"t{t}"] = dict(
+            measured_winner=meas_best["name"],
+            model_winner=model_best["name"],
+            tune_model_pick=(
+                f"{cfg.strategy}/{cfg.br}x{cfg.bc}/"
+                f"{'overlap' if cfg.overlap else 'blocking'}"
+            ),
+            model_pick_gap=gap,
+            within_10pct=bool(gap <= 0.10),
+        )
+        print(
+            f"# t={t}: measured winner={meas_best['name']} "
+            f"model winner={model_best['name']} gap={gap:+.1%}",
+            flush=True,
+        )
+
+    with open(args.json, "w") as fh:
+        json.dump(dict(benchmark="tuner_sweep", rows=rows, summary=summary), fh, indent=2)
+    print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -75,6 +75,7 @@ def ecg_solve(
     sqnorm: Callable | None = None,
     tail: Callable | None = None,
     backend: str = "jnp",
+    tuned: object | None = None,
 ) -> SolveResult:
     """Solve A x = b with ECG using enlarging factor ``t``.
 
@@ -94,7 +95,15 @@ def ecg_solve(
     tail:      (X, R, P, AP, P_old, c, d, d_old) -> (X, R, Z) — the local
                block-vector updates; defaults per ``backend``.
     backend:   "jnp" | "pallas" — see module docstring.
+    tuned:     optional :class:`repro.tune.TunedConfig` (duck-typed, so core
+               stays import-cycle-free): adopts its ``backend``.  The SpMBV
+               itself is owned by the caller via ``a_apply`` — build it from
+               the same config (``make_distributed_spmbv(..., tune=cfg)`` or
+               ``make_block_ell_apply(a, block=cfg.ell_block)``) so the
+               kernel-side choices match.
     """
+    if tuned is not None:
+        backend = getattr(tuned, "backend", backend)
     if backend not in ("jnp", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
     if gram1 is None:

@@ -24,6 +24,7 @@ class MachineParams:
     gamma: float        # seconds per flop (inverse per-core flop rate)
     eager_cutoff: int   # rendezvous-protocol switch (B) — §4.3 cutoff
     f: int = 8          # bytes per float
+    R_mem: float = 0.0  # local memory bandwidth (B/s) per process; 0 = flop-bound model
 
     def with_ppn(self, ppn: int) -> "MachineParams":
         return dataclasses.replace(self, ppn=ppn)
@@ -40,6 +41,7 @@ BLUE_WATERS = MachineParams(
     ppn=16,
     gamma=1.0 / 10.4e9,  # ~10.4 GF/s/core sustained (Interlagos)
     eager_cutoff=8192,
+    R_mem=4.0e9,         # per-core share of DDR3 stream bandwidth
 )
 
 #: IBM Power9 + EDR InfiniBand (paper §4.3).
@@ -53,6 +55,7 @@ LASSEN = MachineParams(
     ppn=40,
     gamma=1.0 / 15.0e9,
     eager_cutoff=16384,
+    R_mem=8.0e9,         # per-core share of Power9 stream bandwidth
 )
 
 #: TPU v5e mapping of the paper's hierarchy: chip ↔ process, pod (ICI domain)
@@ -68,6 +71,7 @@ TPU_V5E_POD = MachineParams(
     gamma=1.0 / 197e12,  # bf16 peak per chip
     eager_cutoff=65536,
     f=4,             # f32 solver data on TPU
+    R_mem=819e9,     # HBM bandwidth per chip
 )
 
 MACHINES = {m.name: m for m in (BLUE_WATERS, LASSEN, TPU_V5E_POD)}

@@ -18,6 +18,20 @@ Round semantics, per device d with local vector x (rows it owns):
     dst buffer  = dst.at[scatter_pos[d]].set(buf)     (halo | stage)
 Padding rows use gather index 0 and scatter into a trailing dump slot, so
 every device executes identical static shapes.
+
+Wide-halo payload splitting (``col_split``): with enlarging factor t each
+halo row is a t·f-byte payload, so for large t a single row can exceed the
+§4.3 chunking granularity.  The nodal-optimal strategy may therefore compile
+its plan in *column segments*: every row is split into ``col_split`` equal
+column slices, indices address (row, segment) slots, and the executor
+reshapes ``(rows, t) -> (rows·col_split, t/col_split)`` around the exchange.
+Sub-row chunks of one wide buffer then ride different fast-tier senders —
+the same byte model that splits large messages, applied inside a row.  The
+choice of strategy (and of ``col_split``, tile shape, overlap) is automated
+by the setup-time autotuner in :mod:`repro.tune`.
+
+:func:`simulate_plan` replays any plan on the host in numpy — the bit-exact
+oracle used by the tests and docs.
 """
 
 from __future__ import annotations
@@ -52,15 +66,26 @@ class ExchangePlan:
     n_nodes: int
     ppn: int
     steps: list[ExchangeStep]
-    halo_size: int   # max halo slots over devices (excl. dump slot)
-    stage_size: int  # max stage slots over devices (excl. dump slot)
+    halo_size: int   # max halo slots over devices (excl. dump slot), in segments
+    stage_size: int  # max stage slots over devices (excl. dump slot), in segments
+    col_split: int = 1  # column segments per row (1 = whole-row exchange)
 
     @property
     def p(self) -> int:
         return self.n_nodes * self.ppn
 
+    @property
+    def halo_rows(self) -> int:
+        """Halo size in *row* units (halo_size counts column segments)."""
+        return self.halo_size // self.col_split
+
     def comm_rows(self) -> dict[str, int]:
-        """Rows moved per tier (for tests vs CommGraph invariants)."""
+        """Rows moved per tier (for tests vs CommGraph invariants).
+
+        Counts are in row units: segment moves of a col-split plan are
+        divided back by ``col_split`` (totals per tier are always whole rows
+        even when an individual split chunk carries partial rows).
+        """
         inter = intra = 0
         for s in self.steps:
             if s.offset == 0:
@@ -77,7 +102,8 @@ class ExchangePlan:
                 per_dev = (s.scatter_pos < self._dump(s)).sum(axis=1)
                 inter += int(per_dev[crosses].sum())
                 intra += int(per_dev[~crosses].sum())
-        return dict(inter=inter, intra=intra)
+        cs = self.col_split
+        return dict(inter=int(round(inter / cs)), intra=int(round(intra / cs)))
 
     def _dump(self, s: ExchangeStep) -> int:
         return self.halo_size if s.dst == "halo" else self.stage_size
@@ -170,6 +196,44 @@ def _compile_phase(
     return steps
 
 
+def to_node_rows(pm: PartitionedMatrix, ppn: int) -> list[dict[int, np.ndarray]]:
+    """Per owner process, the dedup'd row sets destined for each *other* node
+    — the 2-step message units that drive every node-aware strategy and the
+    §4.3 byte model (also consumed by ``repro.tune``)."""
+    node_of = lambda d: d // ppn
+    out: list[dict[int, np.ndarray]] = []
+    for i in range(pm.p):
+        acc: dict[int, set] = defaultdict(set)
+        for q, rows in pm.comms[i].send_rows.items():
+            if node_of(q) != node_of(i):
+                acc[node_of(q)].update(rows.tolist())
+        out.append({b: np.array(sorted(s), dtype=np.int64) for b, s in acc.items()})
+    return out
+
+
+def _auto_col_split(to_node, t: int, machine: MachineParams, ppn: int) -> int:
+    """§4.3 byte model at sub-row granularity.
+
+    A (owner proc → dst node) unit larger than the rendezvous cutoff is split
+    into ~cutoff-sized chunks across the fast tier; with row granularity the
+    smallest chunk is one t·f-byte row, so a unit with few-but-wide rows may
+    have fewer rows than its chunk target.  Return the smallest column-split
+    factor (a divisor of t) that restores enough grains for every unit.
+    """
+    unit = t * machine.f
+    cs = 1
+    for d in to_node:
+        for rows in d.values():
+            size = len(rows) * unit
+            if len(rows) and size >= machine.eager_cutoff:
+                n_chunks = min(math.ceil(size / machine.eager_cutoff), ppn)
+                cs = max(cs, math.ceil(n_chunks / len(rows)))
+    cs = min(cs, t)
+    while t % cs:
+        cs += 1
+    return cs
+
+
 def build_exchange_plan(
     pm: PartitionedMatrix,
     n_nodes: int,
@@ -177,11 +241,14 @@ def build_exchange_plan(
     strategy: str = "standard",
     t: int = 1,
     machine: MachineParams | None = None,
+    col_split: int | None = None,
 ) -> ExchangePlan:
     """Compile the halo exchange of ``pm`` into rounds for ``strategy``.
 
     ``t`` and ``machine`` matter only for the nodal-optimal strategy (its
-    conglomerate/split cutoff is byte-based, per §4.3).
+    conglomerate/split cutoff is byte-based, per §4.3).  ``col_split``
+    overrides the byte-model decision to split every t-wide row into column
+    segments (nodal-optimal only; must divide t; ``None`` = automatic).
     """
     p = pm.p
     assert p == n_nodes * ppn, (p, n_nodes, ppn)
@@ -191,11 +258,32 @@ def build_exchange_plan(
     starts = pm.part.starts
     halo_sources = pm.halo_sources
 
-    def local_index(dev, row):
-        return int(row - starts[dev])
+    # dedup'd (owner proc -> dst node) row sets — drives both the node-aware
+    # message construction and the col-split byte model (standard needs none)
+    to_node = to_node_rows(pm, ppn) if strategy != "standard" else []
 
-    def halo_slot(dev, row):
-        return int(np.searchsorted(halo_sources[dev], row))
+    cs = 1
+    if strategy == "optimal":
+        machine = machine or _default_machine()
+        cs = col_split if col_split else _auto_col_split(to_node, t, machine, ppn)
+        assert t % cs == 0, f"col_split {cs} must divide t={t}"
+
+    # All indices are in *segment* units: global row r splits into segments
+    # r·cs + j, j in [0, cs); contiguous segments of a row stay adjacent in
+    # the halo so the executor can reshape back to rows.  cs == 1 degenerates
+    # to the plain row-granular plan.
+    def expand(rows) -> np.ndarray:
+        rows = np.asarray(rows, dtype=np.int64)
+        if cs == 1:
+            return rows
+        return (rows[:, None] * cs + np.arange(cs, dtype=np.int64)).reshape(-1)
+
+    def local_index(dev, seg):
+        return int(seg - starts[dev] * cs)
+
+    def halo_slot(dev, seg):
+        r, j = divmod(int(seg), cs)
+        return int(np.searchsorted(halo_sources[dev], r)) * cs + j
 
     stage_maps: list[dict] = [dict() for _ in range(p)]
 
@@ -223,16 +311,7 @@ def build_exchange_plan(
         for i in range(p):
             for q, rows in pm.comms[i].send_rows.items():
                 if node_of(q) == node_of(i):
-                    onnode.append(_Msg(i, q, "x", "halo", rows))
-
-        # dedup'd (owner proc -> dst node) row sets
-        to_node: list[dict[int, np.ndarray]] = []
-        for i in range(p):
-            acc: dict[int, set] = defaultdict(set)
-            for q, rows in pm.comms[i].send_rows.items():
-                if node_of(q) != node_of(i):
-                    acc[node_of(q)].update(rows.tolist())
-            to_node.append({b: np.array(sorted(s), dtype=np.int64) for b, s in acc.items()})
+                    onnode.append(_Msg(i, q, "x", "halo", expand(rows)))
 
         # which procs on node B need row r (for final redistribution)
         def dest_procs(b_node, row, owner):
@@ -306,30 +385,32 @@ def build_exchange_plan(
             phases = [("proc", onnode), ("proc", gather_msgs), ("node", inter), ("proc", redist)]
 
         elif strategy == "optimal":
-            machine = machine or _default_machine()
             cutoff = machine.eager_cutoff
-            unit = t * machine.f
+            unit = t * machine.f // cs  # bytes per column segment
             gather_msgs, inter, redist = [], [], []
             for a in range(n_nodes):
                 procs = list(range(a * ppn, (a + 1) * ppn))
-                # 2-step units: (owner, dst node, rows)
+                # 2-step units in segment grains: (owner, dst node, segs)
                 units = [
-                    (i, b, to_node[i][b]) for i in procs for b in to_node[i]
+                    (i, b, expand(to_node[i][b])) for i in procs for b in to_node[i]
                 ]
                 by_dst: dict[int, list[tuple[int, np.ndarray]]] = defaultdict(list)
-                for i, b, rows in units:
-                    by_dst[b].append((i, rows))
-                buffers = []  # (size_bytes, dst_node, [(owner, rows)])
+                for i, b, segs in units:
+                    by_dst[b].append((i, segs))
+                buffers = []  # (size_bytes, dst_node, [(owner, segs)])
                 for b, owners in by_dst.items():
-                    small = [(i, r) for i, r in owners if len(r) * unit < cutoff]
-                    large = [(i, r) for i, r in owners if len(r) * unit >= cutoff]
+                    small = [(i, s) for i, s in owners if len(s) * unit < cutoff]
+                    large = [(i, s) for i, s in owners if len(s) * unit >= cutoff]
                     if small:
                         buffers.append(
-                            (sum(len(r) for _, r in small) * unit, b, small)
+                            (sum(len(s) for _, s in small) * unit, b, small)
                         )
-                    for i, r in large:
-                        n_chunks = min(math.ceil(len(r) * unit / cutoff), ppn)
-                        for ch in np.array_split(r, n_chunks):
+                    for i, s in large:
+                        # split across ~cutoff-sized chunks; with cs > 1 the
+                        # grains are sub-row, so chunks of one wide buffer
+                        # ride different fast-tier senders
+                        n_chunks = min(math.ceil(len(s) * unit / cutoff), ppn)
+                        for ch in np.array_split(s, n_chunks):
                             if len(ch):
                                 buffers.append((len(ch) * unit, b, [(i, ch)]))
                 buffers.sort(key=lambda x: -x[0])
@@ -340,32 +421,29 @@ def build_exchange_plan(
                     loads[s_dev] += size
                     counts[s_dev] += 1
                     g_dev = b * ppn + lrank(s_dev)  # paired receiver (Fig 4.8 step 2)
-                    rows_all, owners = [], []
-                    for i, rr in parts:
-                        rows_all.extend(int(x) for x in rr)
-                        owners.extend([i] * len(rr))
-                    keys = [("o", b, r) for r in rows_all]
+                    segs_all, owners = [], []
+                    for i, ss in parts:
+                        segs_all.extend(int(x) for x in ss)
+                        owners.extend([i] * len(ss))
+                    keys = [("o", b, s) for s in segs_all]
                     per_owner: dict[int, tuple[list, list]] = defaultdict(lambda: ([], []))
-                    for r, o, k in zip(rows_all, owners, keys):
-                        per_owner[o][0].append(r)
+                    for s, o, k in zip(segs_all, owners, keys):
+                        per_owner[o][0].append(s)
                         per_owner[o][1].append(k)
-                    for o, (rr, kk) in per_owner.items():
-                        if o == s_dev:
-                            # still stage locally (offset-0 round, no comm)
-                            gather_msgs.append(_Msg(o, s_dev, "x", "stage", np.array(rr), stage_keys=kk))
-                        else:
-                            gather_msgs.append(_Msg(o, s_dev, "x", "stage", np.array(rr), stage_keys=kk))
-                    keys_r = [("r", r) for r in rows_all]
+                    for o, (ss, kk) in per_owner.items():
+                        # owner == s_dev stages locally (offset-0 round, no comm)
+                        gather_msgs.append(_Msg(o, s_dev, "x", "stage", np.array(ss), stage_keys=kk))
+                    keys_r = [("r", s) for s in segs_all]
                     inter.append(
-                        _Msg(s_dev, g_dev, "stage", "stage", np.array(rows_all), stage_keys=list(zip(keys, keys_r)))
+                        _Msg(s_dev, g_dev, "stage", "stage", np.array(segs_all), stage_keys=list(zip(keys, keys_r)))
                     )
                     per_dst: dict[int, tuple[list, list]] = defaultdict(lambda: ([], []))
-                    for r, o in zip(rows_all, owners):
-                        for q in dest_procs(b, r, o):
-                            per_dst[q][0].append(r)
-                            per_dst[q][1].append(("r", r))
-                    for q, (rr, kk) in per_dst.items():
-                        redist.append(_Msg(g_dev, q, "stage", "halo", np.array(rr), stage_keys=kk))
+                    for s, o in zip(segs_all, owners):
+                        for q in dest_procs(b, s // cs, o):
+                            per_dst[q][0].append(s)
+                            per_dst[q][1].append(("r", s))
+                    for q, (ss, kk) in per_dst.items():
+                        redist.append(_Msg(g_dev, q, "stage", "halo", np.array(ss), stage_keys=kk))
             phases = [("proc", onnode), ("proc", gather_msgs), ("node", inter), ("proc", redist)]
         else:
             raise ValueError(f"unknown strategy {strategy!r}")
@@ -383,7 +461,7 @@ def build_exchange_plan(
             )
         )
 
-    halo_size = max((len(h) for h in halo_sources), default=0)
+    halo_size = max((len(h) for h in halo_sources), default=0) * cs
     stage_size = max((len(m) for m in stage_maps), default=0)
     # fix dump slots: scatter_pos == -1 -> dump index
     for s in steps:
@@ -396,6 +474,7 @@ def build_exchange_plan(
         steps=steps,
         halo_size=halo_size,
         stage_size=stage_size,
+        col_split=cs,
     )
 
 
@@ -464,6 +543,60 @@ def _compile_phase_stage_aware(msgs, axis, n_nodes, ppn, local_index, halo_slot,
             )
         )
     return steps
+
+
+def simulate_plan(
+    plan: ExchangePlan, pm: PartitionedMatrix, x: np.ndarray
+) -> list[np.ndarray]:
+    """Host-side numpy replay of an ExchangePlan — the bit-exact oracle.
+
+    ``x`` is the global ``(n,)`` or ``(n, t)`` array being exchanged.
+    Returns, per device, the halo block ``(len(halo_sources[d]), t)`` the
+    device executor's gather → permute → scatter rounds would deliver; a
+    correct plan satisfies ``out[d] == x[pm.halo_sources[d]]`` exactly.
+    Handles col-split plans (the reshape the executor performs around the
+    exchange) and runs without any devices, so tests can verify plans for
+    meshes larger than the host.
+    """
+    x = np.asarray(x)
+    if x.ndim == 1:
+        x = x[:, None]
+    p, cs = plan.p, plan.col_split
+    rmax = pm.part.max_local_rows
+    t = x.shape[1]
+    tp = -(-t // cs) * cs  # pad width up to a multiple of cs
+    w = tp // cs
+    xs = np.zeros((p, rmax * cs, w), x.dtype)
+    for d in range(p):
+        lo, hi = pm.part.local_range(d)
+        xl = np.zeros((rmax, tp), x.dtype)
+        xl[: hi - lo, :t] = x[lo:hi]
+        xs[d] = xl.reshape(rmax * cs, w)
+    halo = np.zeros((p, plan.halo_size + 1, w), x.dtype)
+    stage = np.zeros((p, plan.stage_size + 1, w), x.dtype)
+    ppn, n_nodes = plan.ppn, plan.n_nodes
+    for step in plan.steps:
+        src = xs if step.src == "x" else stage
+        buf = np.stack([src[d][step.gather_idx[d]] for d in range(p)])
+        if step.offset:
+            recv = np.empty_like(buf)
+            for d in range(p):  # device d receives from its rotation source
+                if step.axis == "proc":
+                    s_dev = (d // ppn) * ppn + (d % ppn - step.offset) % ppn
+                elif step.axis == "node":
+                    s_dev = ((d // ppn - step.offset) % n_nodes) * ppn + d % ppn
+                else:
+                    s_dev = (d - step.offset) % p
+                recv[d] = buf[s_dev]
+            buf = recv
+        dst = halo if step.dst == "halo" else stage
+        for d in range(p):
+            dst[d][step.scatter_pos[d]] = buf[d]
+    out = []
+    for d in range(p):
+        h = halo[d][: plan.halo_size].reshape(-1, tp)[:, :t]
+        out.append(h[: len(pm.halo_sources[d])])
+    return out
 
 
 def _default_machine():

@@ -100,14 +100,19 @@ def csr_arrays_to_block_ell(
     return blocks, ell_idx
 
 
-def make_block_ell_apply(a: CSRMatrix, block: int = 8, use_pallas: bool | None = None):
+def make_block_ell_apply(
+    a: CSRMatrix, block: int | tuple[int, int] = 8, use_pallas: bool | None = None
+):
     """Build the sequential solver's SpMBV closure over the Block-ELL kernel.
 
     Converts ``a`` once (CSR -> BSR -> Block-ELL) and returns
     ``apply(V: (n, t)) -> (n, t)`` that pads V to the tile grid, runs
-    :func:`bsr_spmbv`, and slices back to true rows.
+    :func:`bsr_spmbv`, and slices back to true rows.  ``block`` is an int
+    for square tiles or an explicit (br, bc) pair — e.g. the
+    ``ell_block`` a :class:`repro.tune.TunedConfig` selected.
     """
-    b = csr_to_bsr(a, block, block)
+    br, bc = (block, block) if isinstance(block, int) else block
+    b = csr_to_bsr(a, br, bc)
     blocks, indices = bsr_to_block_ell(b)
     n = a.shape[0]
     m_pad = b.shape[1]

@@ -1,11 +1,16 @@
 """ECG solve driver (single- or multi-device).
 
     PYTHONPATH=src python -m repro.launch.solve --matrix dg --t 8 \
-        --strategy tuned [--devices 8] [--backend pallas] [--overlap]
+        --strategy tuned [--devices 8] [--backend pallas] [--tune model]
 
 --backend pallas routes the SpMBV through the Block-ELL Pallas kernel and
-the gram/tail updates through the fused kernels (oracles on CPU); --overlap
-enables the interior/boundary comm-hiding schedule in the distributed solver.
+the gram/tail updates through the fused kernels (oracles on CPU).
+
+--tune model (the default with --strategy tuned) hands strategy, Block-ELL
+tile shape, and blocking-vs-overlap to the setup-time autotuner
+(repro.tune); --tune measure calibrates with microbenchmarks on the real
+mesh instead of the models; --tune off keeps the explicit --strategy /
+--ell-block / --overlap flags.
 """
 
 from __future__ import annotations
@@ -31,7 +36,12 @@ def main():
     ap.add_argument("--overlap", action="store_true",
                     help="hide halo exchange behind interior SpMBV compute")
     ap.add_argument("--ell-block", type=int, default=8, help="Block-ELL tile size")
+    ap.add_argument("--tune", default=None, choices=["model", "measure", "off"],
+                    help="autotune strategy/tile/overlap (default: model when "
+                         "--strategy tuned, else off)")
     args = ap.parse_args()
+    if args.tune is None:
+        args.tune = "model" if args.strategy == "tuned" else "off"
 
     if args.devices and "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
         os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={args.devices}"
@@ -56,15 +66,23 @@ def main():
     print(f"matrix: {a.shape[0]} rows, {a.nnz} nnz; t={args.t}")
 
     if args.strategy == "sequential" or not args.devices:
+        tuned = None
+        block = args.ell_block
+        if args.backend == "pallas" and args.tune != "off":
+            from repro.tune import tune as run_tune
+
+            tuned = run_tune(a, t=args.t, n_nodes=1, ppn=1, backend="pallas")
+            block = tuned.ell_block
+            print(f"tuned tile: {block} kmax={tuned.kmax}")
         if args.backend == "pallas":
             from repro.kernels import make_block_ell_apply
 
-            apply_a = make_block_ell_apply(a, block=args.ell_block)
+            apply_a = make_block_ell_apply(a, block=block)
         else:
             apply_a = lambda V: csr_spmbv(a, V)
         t0 = time.time()
         res = ecg_solve(apply_a, jnp.asarray(b), t=args.t, tol=args.tol, max_iters=5000,
-                        backend=args.backend)
+                        backend=args.backend, tuned=tuned)
         print(f"sequential ECG[{args.backend}]: iters={res.n_iters} "
               f"converged={res.converged} {time.time()-t0:.1f}s")
         res_cg = cg_solve(lambda v: csr_spmbv(a, v[:, None])[:, 0], jnp.asarray(b), tol=args.tol, max_iters=20000)
@@ -72,28 +90,30 @@ def main():
         return
 
     from repro.sparse.spmbv import distributed_ecg
-    from repro.sparse.partition import partition_csr
-    from repro.core.comm_graph import build_comm_graph
-    from repro.core.models import tune_strategy
 
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev // args.ppn, args.ppn), ("node", "proc"))
-    strategy = args.strategy
-    if strategy == "tuned":
-        pm = partition_csr(a, n_dev)
-        g = build_comm_graph(pm, ppn=args.ppn)
-        strategy, times = tune_strategy(g, args.t, TPU_V5E_POD.with_ppn(args.ppn))
-        print("tuned strategy:", strategy, {k: f"{v*1e6:.0f}us" for k, v in times.items()})
+    strategy = args.strategy if args.strategy != "tuned" else "standard"
     t0 = time.time()
     res, op = distributed_ecg(a, b, mesh, t=args.t, strategy=strategy, tol=args.tol,
                               max_iters=5000, backend=args.backend,
-                              overlap=args.overlap, ell_block=args.ell_block)
+                              overlap=args.overlap, ell_block=args.ell_block,
+                              machine=TPU_V5E_POD.with_ppn(args.ppn),
+                              tune=args.tune)
+    if op.tuned is not None:
+        cfg = op.tuned
+        strategy = cfg.strategy
+        print(f"tuned[{cfg.mode}]: strategy={cfg.strategy} tile={cfg.ell_block} "
+              f"kmax={cfg.kmax} overlap={cfg.overlap} col_split={cfg.col_split}")
+        if "p2p" in cfg.predicted:
+            print("  p2p model:",
+                  {k: f"{v*1e6:.0f}us" for k, v in cfg.predicted["p2p"].items()})
     x = op.unshard(res.x)
     relres = np.linalg.norm(np.asarray(a.todense(), np.float64) @ x - b) / np.linalg.norm(b) \
         if a.shape[0] <= 8192 else float("nan")
     print(
         f"distributed ECG[{strategy}/{args.backend}"
-        f"{'/overlap' if args.overlap else ''}] on {n_dev} devices: "
+        f"{'/overlap' if op.overlap else ''}] on {n_dev} devices: "
         f"iters={res.n_iters} converged={res.converged} relres={relres:.2e} "
         f"{time.time()-t0:.1f}s"
     )

@@ -61,6 +61,7 @@ class ProcessComm:
     rank: int
     recv_rows: dict[int, np.ndarray]
     send_rows: dict[int, np.ndarray]
+    dtype: np.dtype = np.dtype(np.float64)  # value dtype of the matrix/vectors
 
     @property
     def n_recv_msgs(self) -> int:
@@ -70,8 +71,13 @@ class ProcessComm:
     def n_send_msgs(self) -> int:
         return len(self.send_rows)
 
-    def send_bytes(self, t: int = 1, f: int = 8) -> int:
-        """Total bytes this process sends for a block vector of width t."""
+    def send_bytes(self, t: int = 1, f: int | None = None) -> int:
+        """Total bytes this process sends for a block vector of width t.
+
+        ``f`` (bytes per scalar) defaults to the itemsize of the partitioned
+        matrix's value dtype, so f32 solves are not billed at f64 rates.
+        """
+        f = self.dtype.itemsize if f is None else f
         return sum(len(v) for v in self.send_rows.values()) * t * f
 
 
@@ -93,7 +99,9 @@ class PartitionedMatrix:
         return self.part.p
 
 
-def interior_boundary_split(pm: "PartitionedMatrix") -> list[tuple[np.ndarray, np.ndarray]]:
+def interior_boundary_split(
+    pm: "PartitionedMatrix", block_row: int = 1
+) -> list[tuple[np.ndarray, np.ndarray]]:
     """Per rank, (interior_rows, boundary_rows) — local row ids in [0, n_local).
 
     A row is *interior* when every nonzero column is on-process (< n_local in
@@ -102,6 +110,15 @@ def interior_boundary_split(pm: "PartitionedMatrix") -> list[tuple[np.ndarray, n
     behind the comm/compute-overlap schedule in ``repro.sparse.spmbv``: the
     interior SpMBV is issued with no data dependence on the exchange rounds,
     so it runs while the inter-node messages are in flight.
+
+    ``block_row > 1`` classifies whole *block rows* (groups of ``block_row``
+    consecutive local rows, aligned to local row 0): a block row is boundary
+    as soon as any of its rows touches the halo.  This keeps the split
+    aligned with the Block-ELL tile rows the ``backend="pallas"`` path just
+    built, so gathering the interior/boundary subsets never re-fragments
+    tiles (ROADMAP: block-row-granularity split).  The two sets still
+    partition [0, n_local) exactly; the block-row split is a conservative
+    coarsening of the row split (interior ⊆ row-granular interior).
     """
     out = []
     for r in range(pm.p):
@@ -112,7 +129,33 @@ def interior_boundary_split(pm: "PartitionedMatrix") -> list[tuple[np.ndarray, n
         has_halo = np.zeros(n_local, dtype=bool)
         rows_of_nnz = np.repeat(np.arange(n_local, dtype=np.int64), np.diff(ptr))
         np.logical_or.at(has_halo, rows_of_nnz, ix >= n_local)
+        if block_row > 1 and n_local:
+            blocks = np.arange(n_local) // block_row
+            block_has_halo = np.zeros(int(blocks[-1]) + 1, dtype=bool)
+            np.logical_or.at(block_has_halo, blocks, has_halo)
+            has_halo = block_has_halo[blocks]
         out.append((np.nonzero(~has_halo)[0], np.nonzero(has_halo)[0]))
+    return out
+
+
+def rebased_local_csr(
+    pm: "PartitionedMatrix",
+) -> list[tuple[np.ndarray, np.ndarray, np.ndarray, int]]:
+    """Per rank, (indptr, indices, data, n_local) with halo columns rebased
+    from n_local-relative to rmax-relative ids — the [own ‖ halo] operand
+    layout the distributed executor pads vectors to, shared by the Block-ELL
+    conversion in ``repro.sparse.spmbv`` and the tile cost model in
+    ``repro.tune`` (which must see the exact same layout)."""
+    rmax = pm.part.max_local_rows
+    out = []
+    for r in range(pm.p):
+        lo, hi = pm.part.local_range(r)
+        n_local = hi - lo
+        ix = np.asarray(pm.local_indices[r], dtype=np.int64)
+        ix = np.where(ix >= n_local, ix - n_local + rmax, ix)
+        out.append(
+            (np.asarray(pm.local_indptr[r]), ix, np.asarray(pm.local_data[r]), n_local)
+        )
     return out
 
 
@@ -163,8 +206,14 @@ def partition_csr(a: CSRMatrix, p: int) -> PartitionedMatrix:
         for q, rows in recv_rows_per_rank[r].items():
             send_rows_per_rank[q][r] = rows
 
+    val_dtype = np.dtype(np.asarray(data).dtype)
     comms = [
-        ProcessComm(rank=r, recv_rows=recv_rows_per_rank[r], send_rows=send_rows_per_rank[r])
+        ProcessComm(
+            rank=r,
+            recv_rows=recv_rows_per_rank[r],
+            send_rows=send_rows_per_rank[r],
+            dtype=val_dtype,
+        )
         for r in range(p)
     ]
     return PartitionedMatrix(

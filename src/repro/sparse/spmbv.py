@@ -5,7 +5,9 @@ vectors share the row distribution (paper §3).  The halo exchange replays a
 static :class:`~repro.core.node_aware.ExchangePlan` — gather → ppermute →
 scatter rounds — then the local SpMBV runs on [own rows ‖ halo rows].
 
-Two orthogonal execution levers, both fixed at setup time:
+Three orthogonal execution levers, all fixed at setup time (and all
+selectable by the :mod:`repro.tune` autotuner via ``tune="model"|"measure"``
+instead of by hand):
 
 * ``backend="jnp" | "pallas"`` — the local SpMBV formulation.  ``jnp`` is the
   scalar-gather CSR ``segment_sum`` reference; ``pallas`` converts each
@@ -14,15 +16,25 @@ Two orthogonal execution levers, both fixed at setup time:
   (br x bc) @ (bc x t) MXU matmuls.  The one-time conversion cost is
   O(nnz log nnz) host work plus a kmax/nnz_tile densification factor in
   device memory — amortized over all solver iterations.
+* ``ell_block=(br, bc)`` — the Block-ELL tile shape for the pallas backend.
+  The right shape trades zero-fill flops against MXU/sublane utilization and
+  depends on t and the matrix's block structure; the tuner picks it from the
+  block-structure histogram (see ``repro.tune``).
 * ``overlap=True`` — comm/compute overlap.  At partition time local rows are
   split into *interior* rows (no halo-column dependence) and *boundary* rows
-  (see :func:`repro.sparse.partition.interior_boundary_split`).  The device
-  program then issues the interior SpMBV with **no data dependence on the
-  ppermute rounds**, so XLA's latency-hiding scheduler can run it while the
-  inter-node messages of the ExchangePlan are in flight; only the boundary
-  rows wait on the halo.  This is the node-aware analogue of the paper's
-  pipeline: the exchange latency is hidden behind |interior|/|local| of the
-  SpMBV flops.
+  (see :func:`repro.sparse.partition.interior_boundary_split`; with the
+  pallas backend the split is block-row-granular so it never re-fragments
+  the tiles).  The device program then issues the interior SpMBV with **no
+  data dependence on the ppermute rounds**, so XLA's latency-hiding
+  scheduler can run it while the inter-node messages of the ExchangePlan are
+  in flight; only the boundary rows wait on the halo.  This is the
+  node-aware analogue of the paper's pipeline: the exchange latency is
+  hidden behind |interior|/|local| of the SpMBV flops.
+
+Col-split plans (wide-halo payload splitting, nodal-optimal strategy) are
+transparent here: the executor reshapes ``(rmax, t) -> (rmax·cs, t/cs)``
+around the exchange rounds and reassembles whole halo rows afterwards — see
+``repro.core.node_aware``.
 
 This module also provides the distributed ECG wrapper: the same iteration
 body as :func:`repro.core.ecg.ecg_solve` with `psum` reductions, executed
@@ -50,6 +62,7 @@ from repro.sparse.partition import (
     PartitionedMatrix,
     interior_boundary_split,
     partition_csr,
+    rebased_local_csr,
 )
 from repro.core.node_aware import ExchangePlan, ExchangeStep, build_exchange_plan
 from repro.kernels.bsr_spmbv.ops import (
@@ -88,11 +101,13 @@ class DistributedSpMBV:
     scatters: list[jax.Array]
     backend: str = "jnp"
     overlap: bool = False
-    ell_block: int = 8
+    ell_block: int | tuple[int, int] = 8  # Block-ELL tile shape (br, bc)
     # pallas blocking path: Block-ELL of the full [own ‖ halo] local block
     ell: dict = dataclasses.field(default_factory=dict)
     # overlap path: interior/boundary structures (CSR or Block-ELL per backend)
     split: dict = dataclasses.field(default_factory=dict)
+    # TunedConfig when the operator was built via tune= (None otherwise)
+    tuned: object = None
 
     @property
     def p(self) -> int:
@@ -145,14 +160,29 @@ class DistributedSpMBV:
 
     # ------------------------------------------------------------- exchange
     def _exchange(self, x_local: jax.Array, gathers, scatters) -> jax.Array:
-        """Per-device halo exchange.  x_local: (rmax, t) block rows."""
+        """Per-device halo exchange.  x_local: (rmax, t) block rows; returns
+        the halo block in row units, (plan.halo_rows, t).
+
+        Col-split plans index (row, column-segment) slots: the executor
+        reshapes ``(rmax, t) -> (rmax·cs, t/cs)`` around the rounds (padding
+        t up to a multiple of cs when the applied width differs from the
+        width the plan was tuned for, e.g. the width-1 initial residual)."""
         t = x_local.shape[-1]
         plan = self.plan
-        halo = jnp.zeros((plan.halo_size + 1, t), x_local.dtype)
-        stage = jnp.zeros((plan.stage_size + 1, t), x_local.dtype)
+        cs = plan.col_split
+        if cs > 1:
+            tp = -(-t // cs) * cs
+            if tp != t:
+                x_local = jnp.pad(x_local, ((0, 0), (0, tp - t)))
+            xs = x_local.reshape(self.rmax * cs, tp // cs)
+        else:
+            xs = x_local
+        w = xs.shape[-1]
+        halo = jnp.zeros((plan.halo_size + 1, w), x_local.dtype)
+        stage = jnp.zeros((plan.stage_size + 1, w), x_local.dtype)
         for step, g_idx, s_pos in zip(plan.steps, gathers, scatters):
-            src = x_local if step.src == "x" else stage
-            buf = src[g_idx]  # (c, t)
+            src = xs if step.src == "x" else stage
+            buf = src[g_idx]  # (c, w)
             if step.offset:
                 axis = ("node", "proc") if step.axis == "flat" else step.axis
                 buf = jax.lax.ppermute(buf, axis, _perm(step, plan))
@@ -160,7 +190,10 @@ class DistributedSpMBV:
                 halo = halo.at[s_pos].set(buf)
             else:
                 stage = stage.at[s_pos].set(buf)
-        return halo[: plan.halo_size]
+        halo = halo[: plan.halo_size]
+        if cs > 1:
+            halo = halo.reshape(plan.halo_rows, -1)[:, :t]
+        return halo
 
     # -------------------------------------------------------- local kernels
     def _csr_rows_spmbv(self, xfull, indptr, indices, data, n_rows: int):
@@ -329,32 +362,65 @@ def make_distributed_spmbv(
     pm: PartitionedMatrix | None = None,
     backend: str = "jnp",
     overlap: bool = False,
-    ell_block: int = 8,
+    ell_block: int | tuple[int, int] = 8,
+    tune: str | object = "off",
+    col_split: int | None = None,
 ) -> DistributedSpMBV:
     """Partition ``a`` over ``mesh`` and build the device-ready operator.
 
     backend="pallas" additionally converts each rank's local [own ‖ halo]
     CSR block to Block-ELL here (one-time host cost, see module docstring);
     overlap=True splits rows into interior/boundary sets so the device
-    program hides the exchange rounds behind interior compute.
+    program hides the exchange rounds behind interior compute; ``ell_block``
+    is the Block-ELL tile shape — an int for square (b, b) tiles or an
+    explicit (br, bc) pair.
+
+    ``tune`` hands those three knobs to the setup-time autotuner
+    (:mod:`repro.tune`): ``"model"`` selects (strategy, tile, overlap) from
+    the paper's performance models, ``"measure"`` from setup-time
+    microbenchmarks on ``mesh``, and a :class:`repro.tune.TunedConfig`
+    applies a previously computed choice.  ``"off"`` (default) keeps the
+    explicit arguments.  ``col_split`` overrides the nodal-optimal wide-halo
+    splitting factor (must divide t; ``None`` = §4.3 byte model).
     """
     if backend not in ("jnp", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
     n_nodes, ppn = mesh.devices.shape
     p = n_nodes * ppn
     pm = pm or partition_csr(a, p)
-    plan = build_exchange_plan(pm, n_nodes, ppn, strategy, t=t, machine=machine)
+
+    tuned = None
+    if not (tune is None or tune == "off"):
+        from repro.tune import TunedConfig, tune as run_tune
+
+        if isinstance(tune, TunedConfig):
+            tuned = tune
+        elif tune in ("model", "measure"):
+            tuned = run_tune(
+                a, t=t, machine=machine, n_nodes=n_nodes, ppn=ppn,
+                pm=pm, backend=backend, mode=tune, mesh=mesh,
+            )
+        else:
+            raise ValueError(f"unknown tune mode {tune!r}")
+        strategy = tuned.strategy
+        overlap = tuned.overlap
+        ell_block = (tuned.br, tuned.bc)
+        # keep the built plan consistent with the config's byte-model
+        # decisions: the tuner's dtype-resolved machine wins over the raw
+        # caller argument it was derived from
+        machine = tuned.machine or machine
+        if col_split is None and tuned.col_split > 1:
+            col_split = tuned.col_split
+
+    plan = build_exchange_plan(
+        pm, n_nodes, ppn, strategy, t=t, machine=machine, col_split=col_split
+    )
 
     rmax = pm.part.max_local_rows
     val_dtype = np.asarray(pm.local_data[0]).dtype
-    rebased = []  # per-rank (indptr, indices-with-halo-at-rmax, data, n_local)
-    for r in range(p):
-        lo, hi = pm.part.local_range(r)
-        n_local = hi - lo
-        # halo ids were n_local-based; re-base to rmax so x can be padded
-        ix = pm.local_indices[r].astype(np.int64)
-        ix = np.where(ix >= n_local, ix - n_local + rmax, ix)
-        rebased.append((pm.local_indptr[r], ix, pm.local_data[r], n_local))
+    # per-rank (indptr, indices-with-halo-at-rmax, data, n_local): halo ids
+    # were n_local-based, re-based to rmax so x can be padded
+    rebased = rebased_local_csr(pm)
 
     # the full stacked CSR is only consumed by the blocking jnp path; don't
     # ship a second copy of the matrix to devices in the other modes
@@ -370,8 +436,8 @@ def make_distributed_spmbv(
             indices[r, : len(ix)] = ix
             data[r, : len(dat)] = dat
 
-    n_cols_full = rmax + plan.halo_size
-    br = bc = ell_block
+    n_cols_full = rmax + plan.halo_rows
+    br, bc = (ell_block, ell_block) if isinstance(ell_block, int) else ell_block
 
     ell = {}
     if backend == "pallas" and not overlap:
@@ -383,7 +449,9 @@ def make_distributed_spmbv(
 
     split = {}
     if overlap:
-        io = interior_boundary_split(pm)
+        # pallas: classify whole (br-aligned) block rows so gathering the
+        # interior/boundary subsets preserves the Block-ELL tiles as built
+        io = interior_boundary_split(pm, block_row=br if backend == "pallas" else 1)
         n_int_max = max(len(i) for i, _ in io)
         n_bnd_max = max(len(b) for _, b in io)
         int_per_rank, bnd_per_rank = [], []
@@ -427,9 +495,10 @@ def make_distributed_spmbv(
         scatters=[put(s.scatter_pos) for s in plan.steps],
         backend=backend,
         overlap=overlap,
-        ell_block=ell_block,
+        ell_block=(br, bc),
         ell={k2: put(v) for k2, v in ell.items()},
         split={k2: put(v) for k2, v in split.items()},
+        tuned=tuned,
     )
 
 
@@ -447,7 +516,8 @@ def distributed_ecg(
     machine=None,
     backend: str = "jnp",
     overlap: bool = False,
-    ell_block: int = 8,
+    ell_block: int | tuple[int, int] = 8,
+    tune: str | object = "off",
 ):
     """Distributed ECG solve with the selected node-aware SpMBV strategy.
 
@@ -457,12 +527,20 @@ def distributed_ecg(
     tail) runs through the Pallas kernel suite — the collective structure
     (two psums per iteration) is unchanged.  ``overlap=True`` additionally
     hides the halo-exchange rounds behind interior SpMBV compute.
+
+    ``tune="model"|"measure"`` (or a precomputed ``TunedConfig``) delegates
+    the (strategy, tile shape, overlap) choice to :mod:`repro.tune` — see
+    :func:`make_distributed_spmbv`; ``strategy="tuned"`` is shorthand for
+    ``tune="model"``.
     """
     from repro.core.ecg import ecg_solve
 
+    if strategy == "tuned" and (tune is None or tune == "off"):
+        tune = "model"
     op = make_distributed_spmbv(
-        a, mesh, strategy, t=t, machine=machine,
-        backend=backend, overlap=overlap, ell_block=ell_block,
+        a, mesh, strategy if strategy != "tuned" else "standard", t=t,
+        machine=machine, backend=backend, overlap=overlap,
+        ell_block=ell_block, tune=tune,
     )
     apply_a = op.matvec_fn()
     b_sh = op.shard_vector(b)

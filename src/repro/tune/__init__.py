@@ -1,0 +1,44 @@
+"""Setup-time autotuner for the distributed ECG hot path.
+
+The paper's thesis (§4.3) is that the right point-to-point strategy is
+*predictable from a byte model*; this package extends that discipline to all
+three t-dependent execution knobs of ``repro.sparse.spmbv``:
+
+* exchange strategy in {standard, 2step, 3step, optimal} — Table-1 message
+  statistics + the §4.3 max-rate models (``repro.core.models``);
+* Block-ELL tile shape (br, bc) and the per-tile budget ``kmax`` — a
+  zero-fill/alignment cost model over the matrix's block-structure histogram;
+* blocking vs overlapped execution — the comm-hiding model
+  ``max(T_interior, T_exchange) + T_boundary`` vs ``T_exchange + T_local``.
+
+``tune(..., mode="model")`` evaluates the models only (pure host work, no
+devices); ``mode="measure"`` calibrates with setup-time microbenchmarks on a
+real mesh (``repro.tune.microbench``).  Both return a
+:class:`~repro.tune.autotune.TunedConfig` that
+``make_distributed_spmbv(..., tune=cfg)`` / ``distributed_ecg(..., tune=...)``
+apply verbatim.  See ``docs/tuning.md`` for the model inputs and worked
+examples.
+"""
+
+from repro.tune.autotune import (
+    DEFAULT_TILES,
+    TileStats,
+    TunedConfig,
+    predict_config,
+    tile_stats,
+    tile_time,
+    tune,
+)
+from repro.tune.microbench import measure_config, tune_measured
+
+__all__ = [
+    "DEFAULT_TILES",
+    "TileStats",
+    "TunedConfig",
+    "predict_config",
+    "tile_stats",
+    "tile_time",
+    "tune",
+    "measure_config",
+    "tune_measured",
+]

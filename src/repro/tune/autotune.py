@@ -1,0 +1,316 @@
+"""Model-driven joint selection of (strategy, tile shape, overlap).
+
+All quantities are derived at setup time from the partitioned matrix — the
+same host-side phase that builds the MPI-analogue communicator — so tuning
+adds no device work:
+
+* **Exchange strategy** — ``repro.core.models.t_p2p`` over the exact Table-1
+  communication statistics of :class:`repro.core.comm_graph.CommGraph`,
+  including the §4.3 nodal-optimal byte model.
+* **Block-ELL tile** — for each candidate (br, bc), the block-structure
+  histogram of the per-rank [own ‖ halo] CSR gives the stacked kernel's grid
+  (nbr x kmax).  The model charges every stored tile, sublane-padded to the
+  hardware's 8-element granularity, so it captures both failure modes: small
+  tiles waste alignment padding, large tiles waste zero fill.
+* **Overlap** — the busiest rank's nonzeros split into interior/boundary at
+  block-row granularity; overlap wins when hiding the exchange behind the
+  interior product (``max(T_int, T_exch) + T_bnd + overhead``) beats the
+  blocking schedule (``T_exch + T_local``).
+
+The selection is a joint argmin over the full (strategy x tile x overlap)
+grid — the interaction matters because a faster exchange shrinks the window
+the interior compute must cover.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.comm_graph import CommGraph, build_comm_graph
+from repro.core.machines import MachineParams, TPU_V5E_POD
+from repro.core.models import STRATEGIES, t_p2p
+from repro.kernels.bsr_spmbv.ops import count_block_ell_tiles
+from repro.sparse.partition import (
+    PartitionedMatrix,
+    interior_boundary_split,
+    partition_csr,
+)
+
+#: Candidate Block-ELL tile shapes swept by default.  (8, 8) is the DG/FE
+#: sweet spot; rectangular shapes trade MXU feed width against fill.
+DEFAULT_TILES = ((4, 4), (8, 8), (16, 16), (8, 16), (16, 8), (32, 32))
+
+
+def _pad8(x: int) -> int:
+    """Sublane-align a tile dimension (8-element granularity on TPU)."""
+    return -(-x // 8) * 8
+
+
+@dataclasses.dataclass(frozen=True)
+class TileStats:
+    """Stacked-kernel geometry for one candidate (br, bc) tile shape."""
+
+    br: int
+    bc: int
+    nbr: int   # block rows in the per-rank grid (rmax, padded)
+    kmax: int  # tiles per block row the stacked layout must budget
+    nnz: int   # true nonzeros of the busiest rank's local block
+
+    @property
+    def stored(self) -> int:
+        """Elements the stacked kernel multiplies per rank, with each tile
+        dimension sublane-padded — the zero-fill x alignment cost."""
+        return self.nbr * self.kmax * _pad8(self.br) * _pad8(self.bc)
+
+    @property
+    def fill(self) -> float:
+        """stored / nnz — 1.0 is a perfectly tiled matrix."""
+        return self.stored / max(self.nnz, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """A jointly selected (strategy, tile, overlap) execution config."""
+
+    strategy: str
+    br: int
+    bc: int
+    kmax: int        # per-tile budget the Block-ELL stacking will use
+    overlap: bool
+    backend: str
+    t: int
+    mode: str        # "model" | "measure"
+    col_split: int = 1  # §4.3 wide-halo split factor (nodal-optimal only)
+    # the resolved MachineParams the decision was made with — forwarded to
+    # the plan builder so the applied plan matches the modeled one
+    machine: object = dataclasses.field(default=None, compare=False, repr=False)
+    predicted: dict = dataclasses.field(
+        default_factory=dict, compare=False, repr=False
+    )
+
+    @property
+    def ell_block(self) -> tuple[int, int]:
+        return (self.br, self.bc)
+
+
+# --------------------------------------------------------------- tile model
+def _rebased_local(pm: PartitionedMatrix):
+    """Per-rank (indptr, indices, n_local) with halo columns rebased to rmax
+    — exactly the operand ``make_distributed_spmbv`` converts to Block-ELL
+    (same helper, so the layouts cannot drift apart)."""
+    from repro.sparse.partition import rebased_local_csr
+
+    return [(ptr, ix, n_local) for ptr, ix, _dat, n_local in rebased_local_csr(pm)]
+
+
+def tile_stats(pm: PartitionedMatrix, br: int, bc: int) -> TileStats:
+    """Block-structure histogram of the per-rank [own ‖ halo] blocks for one
+    candidate tile shape; mirrors the stacked Block-ELL conversion, so
+    ``TileStats.kmax`` equals the kmax ``make_distributed_spmbv`` will pad to.
+    """
+    rmax = pm.part.max_local_rows
+    halo_max = max((len(h) for h in pm.halo_sources), default=0)
+    n_cols = rmax + halo_max
+    nbr = max(1, (rmax + br - 1) // br)
+    kmax, nnz_max = 1, 0
+    for ptr, ix, n_local in _rebased_local(pm):
+        kmax = max(kmax, count_block_ell_tiles(ptr, ix, n_local, n_cols, br, bc))
+        nnz_max = max(nnz_max, len(ix))
+    return TileStats(br=br, bc=bc, nbr=nbr, kmax=kmax, nnz=nnz_max)
+
+
+def tile_time(ts: TileStats, t: int, machine: MachineParams) -> float:
+    """Modeled seconds for one local Block-ELL SpMBV on the busiest rank.
+
+    Flop term: 2·stored·t at the machine's γ.  Memory term (when the machine
+    declares ``R_mem``): one pass over the stored tiles, one (bc, t) slice of
+    V per tile, one output write — the kernel's streaming traffic.
+    """
+    t_flop = machine.gamma * 2.0 * ts.stored * t
+    if machine.R_mem:
+        f = machine.f
+        nbytes = (
+            ts.stored * f
+            + ts.nbr * ts.kmax * _pad8(ts.bc) * t * f
+            + ts.nbr * _pad8(ts.br) * t * f
+        )
+        return max(t_flop, nbytes / machine.R_mem)
+    return t_flop
+
+
+def _csr_time(nnz_max: int, t: int, machine: MachineParams) -> float:
+    """Modeled seconds for the scalar-gather CSR local SpMBV (jnp backend):
+    2·nnz·t flops; per-nonzero traffic of one value, one int32 index, and one
+    t-wide gathered row."""
+    t_flop = machine.gamma * 2.0 * nnz_max * t
+    if machine.R_mem:
+        nbytes = nnz_max * (machine.f + 4 + t * machine.f)
+        return max(t_flop, nbytes / machine.R_mem)
+    return t_flop
+
+
+# ------------------------------------------------------------ overlap model
+def _interior_fraction(pm: PartitionedMatrix, block_row: int) -> float:
+    """Interior share of the busiest rank's nonzeros under the block-row
+    split the overlapped schedule will actually use.  Cached on the
+    partition: the grid argmin probes each block_row many times and the
+    split is O(p·nnz) host work."""
+    cache = pm.__dict__.setdefault("_interior_frac_cache", {})
+    if block_row in cache:
+        return cache[block_row]
+    io = interior_boundary_split(pm, block_row=block_row)
+    worst_nnz, worst_frac = -1, 1.0
+    for r, (int_rows, _bnd_rows) in enumerate(io):
+        counts = np.diff(np.asarray(pm.local_indptr[r]))
+        nnz = int(counts.sum())
+        frac = float(counts[int_rows].sum()) / max(nnz, 1)
+        if nnz > worst_nnz:
+            worst_nnz, worst_frac = nnz, frac
+    cache[block_row] = worst_frac
+    return worst_frac
+
+
+def _split_overhead(pm: PartitionedMatrix, t: int, machine: MachineParams) -> float:
+    """Cost of the interior/boundary schedule itself: the output block vector
+    is assembled through two scatter-adds instead of one contiguous write,
+    plus one extra kernel-launch latency."""
+    rmax = pm.part.max_local_rows
+    extra = 2.0 * machine.alpha_l
+    if machine.R_mem:
+        extra += 2.0 * rmax * t * machine.f / machine.R_mem
+    return extra
+
+
+# --------------------------------------------------------------- prediction
+def predict_config(
+    pm: PartitionedMatrix,
+    g: CommGraph,
+    t: int,
+    machine: MachineParams,
+    strategy: str,
+    ts: TileStats,
+    overlap: bool,
+    backend: str = "pallas",
+) -> float:
+    """Modeled seconds for one distributed SpMBV under a full config."""
+    t_exch = t_p2p(g, t, machine, strategy)
+    if backend == "pallas":
+        t_local = tile_time(ts, t, machine)
+        block_row = ts.br
+    else:
+        t_local = _csr_time(ts.nnz, t, machine)
+        block_row = 1
+    if not overlap:
+        return t_exch + t_local
+    frac = _interior_fraction(pm, block_row)
+    t_int, t_bnd = t_local * frac, t_local * (1.0 - frac)
+    return max(t_int, t_exch) + t_bnd + _split_overhead(pm, t, machine)
+
+
+def _resolve_machine(
+    machine: MachineParams | None, ppn: int, dtype: np.dtype | None
+) -> MachineParams:
+    machine = machine or TPU_V5E_POD
+    updates: dict = {"ppn": ppn}
+    if dtype is not None:
+        updates["f"] = np.dtype(dtype).itemsize
+    return dataclasses.replace(machine, **updates)
+
+
+def tune(
+    a,
+    t: int,
+    machine: MachineParams | None = None,
+    n_nodes: int | None = None,
+    ppn: int | None = None,
+    *,
+    pm: PartitionedMatrix | None = None,
+    mesh=None,
+    backend: str = "pallas",
+    mode: str = "model",
+    tiles=DEFAULT_TILES,
+    dtype=None,
+) -> TunedConfig:
+    """Jointly select (strategy, tile shape, overlap) for ``a`` at width t.
+
+    ``mode="model"`` is pure host work over the paper's performance models;
+    ``mode="measure"`` times the candidate configs on ``mesh`` (required)
+    with setup-time microbenchmarks — the calibration path when the machine
+    constants are in doubt.  ``machine`` defaults to the TPU-v5e parameter
+    set; its byte width ``f`` is re-derived from the matrix dtype.
+    """
+    if mesh is not None and (n_nodes is None or ppn is None):
+        n_nodes, ppn = mesh.devices.shape
+    if n_nodes is None or ppn is None:
+        raise ValueError("tune() needs a mesh or explicit (n_nodes, ppn)")
+    p = n_nodes * ppn
+    pm = pm or partition_csr(a, p)
+    if dtype is None:
+        dtype = pm.comms[0].dtype if pm.comms else None
+    machine = _resolve_machine(machine, ppn, dtype)
+
+    if mode == "measure":
+        from repro.tune.microbench import tune_measured
+
+        if mesh is None:
+            raise ValueError('tune(mode="measure") needs a mesh to time on')
+        return tune_measured(
+            a, mesh, t, backend=backend, tiles=tiles, machine=machine, pm=pm
+        )
+    if mode != "model":
+        raise ValueError(f"unknown tune mode {mode!r}")
+
+    g = build_comm_graph(pm, ppn=ppn)
+    rmax = pm.part.max_local_rows
+    if backend == "pallas":
+        cand_tiles = [(br, bc) for br, bc in tiles if br <= rmax and bc <= rmax]
+        cand_tiles = cand_tiles or [(8, 8)]
+    else:
+        cand_tiles = [(8, 8)]  # tile shape is irrelevant for the CSR backend
+    stats = {tile: tile_stats(pm, *tile) for tile in cand_tiles}
+
+    grid: dict[str, float] = {}
+    best, best_time = None, math.inf
+    for strategy in STRATEGIES:
+        for tile in cand_tiles:
+            for overlap in (False, True):
+                sec = predict_config(
+                    pm, g, t, machine, strategy, stats[tile], overlap, backend
+                )
+                grid[f"{strategy}/{tile[0]}x{tile[1]}/"
+                     f"{'overlap' if overlap else 'blocking'}"] = sec
+                if sec < best_time:
+                    best, best_time = (strategy, tile, overlap), sec
+    strategy, tile, overlap = best
+
+    col_split = 1
+    if strategy == "optimal":
+        from repro.core.node_aware import _auto_col_split, to_node_rows
+
+        col_split = _auto_col_split(to_node_rows(pm, ppn), t, machine, ppn)
+
+    predicted = {
+        "p2p": {s: t_p2p(g, t, machine, s) for s in STRATEGIES},
+        "local": {
+            f"{br}x{bc}": tile_time(st, t, machine)
+            for (br, bc), st in stats.items()
+        },
+        "grid": grid,
+        "best": best_time,
+    }
+    return TunedConfig(
+        strategy=strategy,
+        br=tile[0],
+        bc=tile[1],
+        kmax=stats[tile].kmax,
+        overlap=overlap,
+        backend=backend,
+        t=t,
+        mode="model",
+        col_split=col_split,
+        machine=machine,
+        predicted=predicted,
+    )

@@ -1,0 +1,34 @@
+"""Docs contract: intra-repo links resolve and code snippets are real.
+
+The fast test checks links and snippet syntax on every run; the slow test
+executes every ``python`` fence exactly as written (8 forced host devices,
+subprocess-isolated — same harness the CI docs job runs via
+``tools/check_docs.py``).
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+CHECKER = ROOT / "tools" / "check_docs.py"
+
+
+def _run(*args, timeout):
+    return subprocess.run(
+        [sys.executable, str(CHECKER), *args],
+        capture_output=True, text=True, timeout=timeout,
+    )
+
+
+def test_links_and_snippet_syntax():
+    proc = _run("--syntax-only", timeout=120)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+
+
+@pytest.mark.slow
+def test_snippets_execute():
+    proc = _run(timeout=1800)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
