@@ -1,0 +1,62 @@
+"""Adaptive ECG: breakdown-safe factorization, dynamic width reduction, and
+automatic enlarging-factor selection.
+
+Three layers, each usable on its own, all plugging into the existing solver
+stack without touching the Pallas kernels or the two-allreduce invariant:
+
+* :mod:`repro.adaptive.rankrev` — pivoted, rank-revealing Cholesky of the
+  Gram matrix G = ZᵀAZ; reveals the numerical rank and a column mask so the
+  solver drops dependent directions instead of propagating NaNs.
+* :mod:`repro.adaptive.reduce` — the jit-compatible reduction controller
+  (static shapes, zero-masked columns): stagnation drops per the
+  flexible-ECG criterion, optional re-enlarge/restart on residual plateau.
+* :mod:`repro.adaptive.select_t` — ``t="auto"``: an iterations-to-convergence
+  model (probe- or condition-calibrated) composed with :mod:`repro.tune`'s
+  per-iteration cost model to rank candidate widths at setup time.
+
+Entry points: ``ecg_solve(..., adaptive="reduce")``,
+``ecg_solve(..., t="auto", matrix=a)``, ``distributed_ecg(..., t="auto",
+adaptive=...)``, and ``python -m repro.launch.solve --t auto``.
+"""
+
+from repro.adaptive.rankrev import (
+    default_rank_rtol,
+    pivoted_cholesky,
+    rank_revealing_apply,
+)
+from repro.adaptive.reduce import (
+    POLICIES,
+    ReductionPolicy,
+    plateau_update,
+    resolve_policy,
+    stagnation_mask,
+)
+from repro.adaptive.select_t import (
+    DEFAULT_CANDIDATES,
+    TSelection,
+    estimate_condition,
+    iteration_cost,
+    iters_from_condition,
+    probe_decay_rate,
+    resolve_auto_t,
+    select_t,
+)
+
+__all__ = [
+    "default_rank_rtol",
+    "pivoted_cholesky",
+    "rank_revealing_apply",
+    "POLICIES",
+    "ReductionPolicy",
+    "plateau_update",
+    "resolve_policy",
+    "stagnation_mask",
+    "DEFAULT_CANDIDATES",
+    "TSelection",
+    "estimate_condition",
+    "iteration_cost",
+    "iters_from_condition",
+    "probe_decay_rate",
+    "resolve_auto_t",
+    "select_t",
+]

@@ -1,0 +1,121 @@
+"""Dynamic search-direction reduction for ECG (flexible-ECG controller).
+
+The paper's central trade-off is that enlarging factor t buys fewer
+iterations at the price of t²-sized reductions and denser messages.  Mid-
+solve, two things erode the value of a large t:
+
+* **rank deficiency** — the t residual columns become numerically dependent
+  (detected by the pivoted factorization in :mod:`repro.adaptive.rankrev`);
+* **stagnation** — a direction stops contributing to the error decrease.
+  With P A-orthonormal, the A-norm² error drop of one iteration is ‖c‖²_F
+  (c = PᵀR), and direction i's share is ‖c_{i,:}‖².  The flexible-ECG
+  criterion retires direction i when ‖c_{i,:}‖ falls below ``drop_tol``
+  relative to the current residual norm.
+
+The controller is jit-compatible with **static shapes**: arrays stay (n, t)
+and inactive directions are zero-masked columns.  A zero column flows
+through the Pallas ``fused_gram``/``ecg_tail`` kernels and both psums
+unchanged (zeros contribute zeros), so the §3.1 two-allreduce invariant and
+the kernel suite are untouched.  Masking is self-propagating: a zeroed Z
+column yields a zero G row/column, which the rank-revealing factorization
+keeps dead — no mask needs to be carried across iterations, only the active
+count for the trace.
+
+An optional re-enlarge/restart rebuilds the full t-wide splitting from the
+current residual when convergence plateaus with a reduced block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ReductionPolicy:
+    """Configuration of the in-solve width controller.
+
+    rank_rtol:      pivot threshold of the rank-revealing factorization
+                    (None = dtype default, see ``rankrev.default_rank_rtol``).
+    drop_tol:       stagnation threshold τ — direction i is retired when
+                    ‖c_{i,:}‖ ≤ τ·‖r‖ (None = sqrt(eps) of the solve dtype;
+                    0.0 disables stagnation drops, keeping rank-only masking).
+    min_t:          floor on the active width; stagnation drops never reduce
+                    the block below it (rank deficiency still can — a
+                    dependent direction is unusable at any floor).
+    restart:        re-enlarge to the full t-wide splitting of the current
+                    residual when the residual plateaus with a reduced block.
+    plateau_window: iterations without sufficient progress that count as a
+                    plateau.
+    plateau_ratio:  progress means rn < plateau_ratio · best_rn.
+    """
+
+    rank_rtol: float | None = None
+    drop_tol: float | None = None
+    min_t: int = 1
+    restart: bool = False
+    plateau_window: int = 25
+    plateau_ratio: float = 0.99
+
+    def resolved_drop_tol(self, dtype) -> float:
+        if self.drop_tol is not None:
+            return float(self.drop_tol)
+        return math.sqrt(float(jnp.finfo(dtype).eps))
+
+
+#: ``adaptive=`` string shorthands accepted by the solvers.
+POLICIES = {
+    "rankrev": ReductionPolicy(drop_tol=0.0),
+    "reduce": ReductionPolicy(),
+    "reduce+restart": ReductionPolicy(restart=True),
+}
+
+
+def resolve_policy(adaptive) -> ReductionPolicy | None:
+    """Map the solver's ``adaptive`` argument to a policy (or None = off)."""
+    if adaptive is None or adaptive == "off":
+        return None
+    if isinstance(adaptive, ReductionPolicy):
+        return adaptive
+    if isinstance(adaptive, str):
+        try:
+            return POLICIES[adaptive]
+        except KeyError:
+            raise ValueError(
+                f"unknown adaptive mode {adaptive!r}; expected one of "
+                f"{sorted(POLICIES)}, 'off', None, or a ReductionPolicy"
+            ) from None
+    raise TypeError(f"adaptive must be str/None/ReductionPolicy, got {type(adaptive)}")
+
+
+def stagnation_mask(c, rn, active, policy: ReductionPolicy):
+    """Apply the flexible-ECG drop criterion; returns the shrunk column mask.
+
+    c:      (t, t) step coefficients PᵀR of this iteration (rows = directions,
+            in the same pivot order as the ``active`` mask).
+    rn:     residual norm the scores are compared against.
+    active: (t,) bool mask from the rank-revealing factorization.
+
+    Jit-compatible, static shapes.  At most ``n_active − min_t`` directions
+    are dropped per iteration (the lowest-scoring ones first).
+    """
+    tau = policy.resolved_drop_tol(c.dtype)
+    if tau == 0.0:
+        return active
+    scores = jnp.sum(c * c, axis=1)  # ΔE_A² attributable to direction i
+    stagnant = scores <= jnp.asarray(tau, c.dtype) ** 2 * rn * rn
+    max_drops = jnp.maximum(jnp.sum(active) - policy.min_t, 0)
+    # ascending rank of each direction's score among the active ones;
+    # inactive directions sort last and are never "dropped" again
+    order = jnp.argsort(jnp.where(active, scores, jnp.inf))
+    pos = jnp.argsort(order)
+    drop = active & stagnant & (pos < max_drops)
+    return active & ~drop
+
+
+def plateau_update(rn, best_rn, since_best, policy: ReductionPolicy):
+    """Track progress for the restart trigger; returns (best_rn, since_best)."""
+    improved = rn < policy.plateau_ratio * best_rn
+    return jnp.minimum(best_rn, rn), jnp.where(improved, 0, since_best + 1)

@@ -1,0 +1,282 @@
+"""Automatic enlarging-factor selection (``t="auto"``).
+
+The paper's central trade-off — more search directions buy fewer iterations
+at a higher per-iteration cost — is closed here at setup time:
+
+    total_cost(t)  =  iters(t) · T_iter(t)
+
+* **iters(t)** — an iterations-to-convergence model.  ``mode="probe"``
+  calibrates it from a few real ECG iterations per candidate (geometric fit
+  of the observed residual decay); ``mode="kappa"`` uses the CG bound
+  ``½·√(κ/t)·ln(2·r₀/tol)`` with a power-iteration condition estimate —
+  no solver probes, but cruder.
+* **T_iter(t)** — composed from :mod:`repro.tune`'s per-iteration cost
+  models: the tuner's best (strategy × tile × overlap) SpMBV time at this t,
+  the §3.1 collective model (t² + 3t² floats), and the γ-weighted local
+  flops of eq. (3.3) minus the SpMBV term the tuner already covers.
+
+``select_t`` ranks the candidate widths and returns a :class:`TSelection`;
+the solvers accept ``t="auto"`` and record the selection on
+``SolveResult.selection`` (and ``TunedConfig.selection`` for the tuned
+distributed path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+# NOTE: repro.core.ecg / repro.tune are imported lazily inside the functions
+# below — core.ecg imports repro.adaptive for the rank-revealing path, so a
+# module-level import here would be circular.
+
+#: Candidate enlarging factors ranked by default.
+DEFAULT_CANDIDATES = (1, 2, 4, 8, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class TSelection:
+    """Result of automatic t selection.
+
+    table maps each candidate t to
+    ``{"rate", "est_iters", "iter_cost_s", "total_cost_s"}`` —
+    the calibrated per-iteration residual decay, the modeled iterations to
+    ``tol``, the modeled per-iteration seconds, and their product.
+    """
+
+    t: int
+    candidates: tuple
+    table: dict
+    tol: float
+    mode: str          # "probe" | "kappa"
+    probe_iters: int = 0
+    configs: dict = dataclasses.field(default_factory=dict, compare=False, repr=False)
+
+    @property
+    def total_cost(self) -> float:
+        return self.table[self.t]["total_cost_s"]
+
+    def summary(self) -> str:
+        lines = [f"t=auto[{self.mode}] -> t={self.t} (tol={self.tol:g})"]
+        for t in self.candidates:
+            row = self.table[t]
+            mark = " <-- chosen" if t == self.t else ""
+            lines.append(
+                f"  t={t:>2}: rate={row['rate']:.4f} iters~{row['est_iters']:>5} "
+                f"iter={row['iter_cost_s']*1e6:8.1f}us "
+                f"total={row['total_cost_s']*1e3:8.2f}ms{mark}"
+            )
+        return "\n".join(lines)
+
+
+# ------------------------------------------------------- iterations models
+def probe_decay_rate(
+    a_apply, b, t: int, probe_iters: int = 8, mapping: str = "contiguous"
+) -> tuple[float, float]:
+    """Run ``probe_iters`` real ECG iterations at width t and fit a geometric
+    per-iteration residual decay rate ρ; returns (ρ, r₀ norm).
+
+    The probe runs with ``adaptive="rankrev"`` so a rank-deficient splitting
+    (e.g. t exceeding the number of nonzero subdomains) degrades gracefully
+    instead of poisoning the calibration with NaNs.
+    """
+    from repro.core.ecg import ecg_solve
+
+    res = ecg_solve(
+        a_apply, b, t=t, tol=0.0, max_iters=probe_iters,
+        mapping=mapping, adaptive="rankrev",
+    )
+    h = np.asarray(res.res_hist, dtype=np.float64)
+    h = h[np.isfinite(h)]
+    h = h[h > 0.0]
+    if len(h) < 2:
+        return 1e-8, float(h[0]) if len(h) else 0.0  # converged inside the probe
+    rho = (h[-1] / h[0]) ** (1.0 / (len(h) - 1))
+    return float(np.clip(rho, 1e-8, 1.0 - 1e-12)), float(h[0])
+
+
+def estimate_condition(a_apply, n: int, iters: int = 50, seed: int = 0) -> float:
+    """Power-iteration estimate of κ(A) for SPD A (λmax, then λmax of
+    λmax·I − A for λmin).  A coarse but probe-free calibration input."""
+    rng = np.random.default_rng(seed)
+
+    def lam_max(apply_fn):
+        v = jnp.asarray(rng.standard_normal(n))
+        v = v / jnp.linalg.norm(v)
+        lam = 1.0
+        for _ in range(iters):
+            w = apply_fn(v)
+            lam = float(jnp.vdot(v, w))
+            nw = jnp.linalg.norm(w)
+            v = w / jnp.maximum(nw, 1e-300)
+        return max(lam, 0.0)
+
+    a_vec = lambda v: a_apply(v[:, None])[:, 0]
+    lmax = lam_max(a_vec)
+    if lmax == 0.0:
+        return 1.0
+    lmin = lmax - lam_max(lambda v: lmax * v - a_vec(v))
+    return lmax / max(lmin, lmax * 1e-14)
+
+
+def iters_from_condition(kappa: float, t: int, tol_ratio: float) -> float:
+    """CG bound ½·√κ_eff·ln(2/tol_ratio) with the enlarged effective
+    condition κ_eff ≈ κ/t (the paper's Fig 3.2 regime: iteration count
+    shrinks roughly like √t)."""
+    tol_ratio = min(max(tol_ratio, 1e-300), 1.0)
+    return 0.5 * math.sqrt(kappa / max(t, 1)) * math.log(2.0 / tol_ratio) + 1.0
+
+
+# ------------------------------------------------------ per-iteration cost
+def iteration_cost(
+    a,
+    t: int,
+    machine=None,
+    n_nodes: int = 1,
+    ppn: int = 1,
+    pm=None,
+    backend: str = "jnp",
+):
+    """Modeled seconds for one ECG iteration at width t: the tuner's best
+    SpMBV config + the §3.1 collective model + γ·(local non-SpMBV flops).
+
+    Returns ``(seconds, TunedConfig)`` — the config is the same object
+    ``make_distributed_spmbv(..., tune=cfg)`` would apply, so a ``t="auto"``
+    choice and the executed plan can never drift apart.
+    """
+    from repro.core.ecg import ECGOperationCounts
+    from repro.core.models import t_collective
+    from repro.tune import tune as run_tune
+
+    cfg = run_tune(
+        a, t=t, machine=machine, n_nodes=n_nodes, ppn=ppn,
+        pm=pm, backend=backend, mode="model",
+    )
+    machine = cfg.machine
+    p = n_nodes * ppn
+    spmbv = cfg.predicted["best"]
+    counts = ECGOperationCounts(n=a.shape[0], nnz=a.nnz, p=p, t=t)
+    local_flops = counts.total_flops - counts.spmbv_flops
+    collective = t_collective(p, t, machine) if p > 1 else 0.0
+    return spmbv + machine.gamma * local_flops + collective, cfg
+
+
+# --------------------------------------------------------------- selection
+def select_t(
+    a,
+    b=None,
+    candidates=DEFAULT_CANDIDATES,
+    tol: float = 1e-8,
+    machine=None,
+    n_nodes: int = 1,
+    ppn: int = 1,
+    pm=None,
+    backend: str = "jnp",
+    mode: str = "probe",
+    probe_iters: int = 8,
+    mapping: str = "contiguous",
+    a_apply=None,
+) -> TSelection:
+    """Rank candidate enlarging factors and pick the modeled-cheapest one.
+
+    a:        CSRMatrix (drives the tuner's cost model and default probes).
+    b:        right-hand side — required for ``mode="probe"``.
+    mode:     "probe" calibrates iters(t) from ``probe_iters`` real ECG
+              iterations per candidate; "kappa" from a condition estimate.
+    a_apply:  optional SpMBV override for the probes (defaults to the
+              sequential CSR product — the iteration *count* does not depend
+              on the execution backend, only on the math).
+    """
+    from repro.sparse.csr import csr_spmbv
+
+    n = a.shape[0]
+    cands = sorted({int(t) for t in candidates if 1 <= int(t) <= n})
+    if not cands:
+        raise ValueError(f"no valid candidates in {candidates!r} for n={n}")
+    if mode not in ("probe", "kappa"):
+        raise ValueError(f"unknown selection mode {mode!r}")
+    if mode == "probe" and b is None:
+        raise ValueError('select_t(mode="probe") needs the right-hand side b')
+    if a_apply is None:
+        a_apply = lambda v: csr_spmbv(a, v)
+
+    if mode == "kappa":
+        kappa = estimate_condition(a_apply, n)
+        rn0 = float(jnp.linalg.norm(jnp.asarray(b))) if b is not None else 1.0
+
+    table, configs = {}, {}
+    best_t, best_cost = cands[0], math.inf
+    for t in cands:
+        if mode == "probe":
+            rate, rn0 = probe_decay_rate(
+                a_apply, jnp.asarray(b), t, probe_iters=probe_iters, mapping=mapping
+            )
+            est = _iters_to_tol(rate, rn0, tol, n)
+        else:
+            rate = math.exp(-1.0 / max(iters_from_condition(kappa, t, 1.0 / math.e), 1.0))
+            est = min(int(math.ceil(iters_from_condition(kappa, t, tol / max(rn0, tol)))), n)
+        cost, cfg = iteration_cost(
+            a, t, machine=machine, n_nodes=n_nodes, ppn=ppn, pm=pm, backend=backend
+        )
+        total = est * cost
+        table[t] = dict(
+            rate=rate, est_iters=est, iter_cost_s=cost, total_cost_s=total
+        )
+        configs[t] = cfg
+        if total < best_cost:
+            best_t, best_cost = t, total
+    return TSelection(
+        t=best_t, candidates=tuple(cands), table=table, tol=tol, mode=mode,
+        probe_iters=probe_iters if mode == "probe" else 0, configs=configs,
+    )
+
+
+def resolve_auto_t(
+    t: str,
+    adaptive,
+    *,
+    a=None,
+    b=None,
+    select: TSelection | None = None,
+    candidates=DEFAULT_CANDIDATES,
+    tol: float = 1e-8,
+    machine=None,
+    n_nodes: int = 1,
+    ppn: int = 1,
+    backend: str = "jnp",
+):
+    """Shared ``t="auto"`` resolution for the solvers.
+
+    Validates the string, runs :func:`select_t` unless a precomputed
+    ``select`` is supplied, and defaults ``adaptive`` to ``"rankrev"`` (an
+    explicit ``"off"`` is honored) — one implementation so the sequential
+    and distributed solvers cannot drift apart.  Returns
+    ``(t, selection, adaptive)``.
+    """
+    if t != "auto":
+        raise ValueError(f"t must be an int or 'auto', got {t!r}")
+    if select is None:
+        if a is None:
+            raise ValueError(
+                "t='auto' needs matrix= (the CSRMatrix behind a_apply) "
+                "or select= (a precomputed TSelection)"
+            )
+        select = select_t(
+            a, b, candidates=candidates, tol=tol, machine=machine,
+            n_nodes=n_nodes, ppn=ppn, backend=backend,
+        )
+    if adaptive is None:
+        adaptive = "rankrev"  # auto-t implies breakdown safety
+    return int(select.t), select, adaptive
+
+
+def _iters_to_tol(rate: float, rn0: float, tol: float, n: int) -> int:
+    """Iterations for rn0·rateᵏ ≤ tol, clipped to [1, n] (CG terminates in at
+    most n exact-arithmetic steps; the enlarged method in fewer)."""
+    if rn0 <= tol or rn0 == 0.0:
+        return 1
+    k = math.log(tol / rn0) / math.log(rate)
+    return int(min(max(math.ceil(k), 1), n))

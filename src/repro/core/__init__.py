@@ -2,7 +2,7 @@
 
 from repro.core.cg import cg_solve, SolveResult
 from repro.core.ecg import ecg_solve, ECGOperationCounts
-from repro.core.enlarging import split_residual, collapse
+from repro.core.enlarging import split_residual, split_rank, collapse
 
 __all__ = [
     "cg_solve",
@@ -10,5 +10,6 @@ __all__ = [
     "SolveResult",
     "ECGOperationCounts",
     "split_residual",
+    "split_rank",
     "collapse",
 ]

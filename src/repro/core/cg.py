@@ -15,9 +15,59 @@ class SolveResult:
     n_iters: int
     res_hist: jax.Array  # (max_iters + 1,), padded with NaN past convergence
     converged: bool
+    # --- breakdown / adaptive metadata (defaults keep old call sites valid)
+    breakdown: bool = False          # a non-finite iterate was produced; the
+    #                                  state (x, residual norm) froze at the
+    #                                  last finite iteration instead of NaNs
+    t: int | None = None             # enlarging factor used (ECG; via t="auto")
+    active_hist: jax.Array | None = None  # (max_iters + 1,) active block width
+    #                                  per iteration — the reduction trace
+    #                                  (adaptive ECG only, -1 past the end)
+    restarts: int = 0                # re-enlarge events (adaptive ECG)
+    selection: object = None         # TSelection when t was chosen by "auto"
 
-    def __iter__(self):  # convenient unpacking
+    def __iter__(self):  # convenient unpacking (historical 4-tuple)
         return iter((self.x, self.n_iters, self.res_hist, self.converged))
+
+    def reduction_events(self) -> list[tuple[int, int, int]]:
+        """[(iteration, width_before, width_after)] from the reduction trace
+        — every iteration where the active block width changed."""
+        if self.active_hist is None:
+            return []
+        import numpy as np
+
+        h = np.asarray(self.active_hist[: self.n_iters + 1]).tolist()
+        return [
+            (k, h[k - 1], h[k])
+            for k in range(1, len(h))
+            if h[k] != h[k - 1] and h[k] >= 0 and h[k - 1] >= 0
+        ]
+
+
+def _guarded_while(cond_extra, body_fn, init: dict):
+    """``lax.while_loop`` with a breakdown guard.
+
+    ``body_fn`` computes the next carry; if it produces a non-finite residual
+    norm (singular Gram matrix, zero curvature, ...), the previous — last
+    finite — carry is kept and the ``bd`` flag is raised, terminating the
+    loop.  The returned state is therefore always finite, and callers report
+    ``breakdown=True`` with the last finite residual instead of NaN garbage.
+    """
+
+    def cond(carry):
+        return (~carry["bd"]) & cond_extra(carry)
+
+    def body(carry):
+        new = body_fn(carry)
+        ok = jnp.isfinite(new["rn"])
+        merged = jax.tree_util.tree_map(
+            lambda old, cur: jnp.where(ok, cur, old), carry, new
+        )
+        merged["bd"] = carry["bd"] | ~ok
+        return merged
+
+    init = dict(init, bd=~jnp.isfinite(init["rn"]))
+    return jax.lax.while_loop(cond, body, init)
 
 
 def cg_solve(
@@ -33,12 +83,8 @@ def cg_solve(
     rn0 = jnp.linalg.norm(r0)
     hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=b.dtype).at[0].set(rn0)
 
-    def cond(carry):
-        _, r, _, _, k, rn, _ = carry
-        return (rn > tol) & (k < max_iters)
-
     def body(carry):
-        x, r, p, rz, k, _, hist = carry
+        x, r, p, rz, k = carry["x"], carry["r"], carry["p"], carry["rz"], carry["k"]
         ap = a_apply(p)
         alpha = rz / (p @ ap)
         x = x + alpha * p
@@ -47,10 +93,19 @@ def cg_solve(
         beta = rz_new / rz
         p = r + beta * p
         rn = jnp.sqrt(rz_new)
-        hist = hist.at[k + 1].set(rn)
-        return x, r, p, rz_new, k + 1, rn, hist
+        hist = carry["hist"].at[k + 1].set(rn)
+        return dict(x=x, r=r, p=p, rz=rz_new, k=k + 1, rn=rn, hist=hist, bd=carry["bd"])
 
-    x, r, p, rz, k, rn, hist = jax.lax.while_loop(
-        cond, body, (x0, r0, r0, r0 @ r0, jnp.int32(0), rn0, hist0)
+    out = _guarded_while(
+        lambda c: (c["rn"] > tol) & (c["k"] < max_iters),
+        body,
+        dict(x=x0, r=r0, p=r0, rz=r0 @ r0, k=jnp.int32(0), rn=rn0, hist=hist0),
     )
-    return SolveResult(x=x, n_iters=int(k), res_hist=hist, converged=bool(rn <= tol))
+    breakdown = bool(out["bd"])
+    return SolveResult(
+        x=out["x"],
+        n_iters=int(out["k"]),
+        res_hist=out["hist"],
+        converged=bool(out["rn"] <= tol) and not breakdown,
+        breakdown=breakdown,
+    )

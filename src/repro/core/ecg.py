@@ -29,6 +29,18 @@ pure-jnp oracles, so the switch is always safe to flip; the SpMBV itself is
 owned by the caller via ``a_apply`` (see
 ``repro.kernels.make_block_ell_apply`` and the ``backend`` argument of
 ``make_distributed_spmbv``).
+
+Adaptivity (:mod:`repro.adaptive`): ``adaptive="rankrev"`` replaces the bare
+Cholesky with a pivoted, rank-revealing factorization so a singular Gram
+matrix drops the dependent directions (zero-masked columns, static shapes)
+instead of poisoning the solve with NaNs; ``adaptive="reduce"`` additionally
+retires stagnant directions per the flexible-ECG criterion, and
+``"reduce+restart"`` re-enlarges on a residual plateau.  ``t="auto"``
+(requires ``matrix=`` or a precomputed ``select=``) picks the enlarging
+factor from the iterations-vs-cost model of
+:mod:`repro.adaptive.select_t`.  Every solve is breakdown-guarded: a
+non-finite iterate freezes the state at the last finite iteration and sets
+``SolveResult.breakdown``.
 """
 
 from __future__ import annotations
@@ -39,7 +51,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.cg import SolveResult
+from repro.adaptive.rankrev import rank_revealing_apply
+from repro.adaptive.reduce import plateau_update, resolve_policy, stagnation_mask
+from repro.core.cg import SolveResult, _guarded_while
 from repro.core.enlarging import split_residual
 from repro.kernels.block_update.ops import ecg_tail
 from repro.kernels.fused_gram.ops import fused_gram
@@ -62,7 +76,7 @@ def _chol_inv_apply(g: jax.Array, *mats: jax.Array, eps: float = 0.0):
 def ecg_solve(
     a_apply: Callable[[jax.Array], jax.Array],
     b: jax.Array,
-    t: int,
+    t: int | str,
     x0: jax.Array | None = None,
     tol: float = 1e-8,
     max_iters: int = 1000,
@@ -76,12 +90,21 @@ def ecg_solve(
     tail: Callable | None = None,
     backend: str = "jnp",
     tuned: object | None = None,
+    adaptive: object = None,
+    matrix: object = None,
+    select: object = None,
+    t_candidates: tuple = (1, 2, 4, 8, 16),
+    machine: object = None,
 ) -> SolveResult:
     """Solve A x = b with ECG using enlarging factor ``t``.
 
     a_apply:   SpMBV — maps (n, t) block vectors to (n, t) block vectors
                (applied column-wise to A).  For the distributed solver this is
                the node-aware halo-exchange SpMBV.
+    t:         enlarging factor, or ``"auto"`` to pick one from the
+               iterations-vs-cost model (needs ``matrix=`` — the CSRMatrix
+               behind ``a_apply`` — or a precomputed ``select=`` TSelection;
+               ``t_candidates``/``machine`` parameterize the model).
     allreduce: reduction applied to every *local* t x t (or packed t x 3t)
                gram product; identity when running single-shard.
     gram1:     (Z, AZ) -> ZᵀAZ, globally reduced     (allreduce #1, t²)
@@ -101,7 +124,28 @@ def ecg_solve(
                the same config (``make_distributed_spmbv(..., tune=cfg)`` or
                ``make_block_ell_apply(a, block=cfg.ell_block)``) so the
                kernel-side choices match.
+    adaptive:  None/"off" (exact historical behavior), "rankrev" (breakdown-
+               safe rank-revealing factorization, drop dependent directions),
+               "reduce" (+ flexible-ECG stagnation drops),
+               "reduce+restart" (+ re-enlarge on plateau), or a
+               :class:`repro.adaptive.ReductionPolicy`.
     """
+    selection = select
+    if isinstance(t, str):
+        from repro.adaptive.select_t import resolve_auto_t
+
+        t, selection, adaptive = resolve_auto_t(
+            t, adaptive, a=matrix, b=b, select=select,
+            candidates=t_candidates, tol=tol, machine=machine, backend=backend,
+        )
+    policy = resolve_policy(adaptive)
+    if policy is not None and chol_eps:
+        raise ValueError(
+            "chol_eps regularization and adaptive= are mutually exclusive: the "
+            "rank-revealing factorization handles near-singular G structurally "
+            "(tune ReductionPolicy.rank_rtol instead of eps-jitter)"
+        )
+
     if tuned is not None:
         backend = getattr(tuned, "backend", backend)
     if backend not in ("jnp", "pallas"):
@@ -124,28 +168,35 @@ def ecg_solve(
             tail = lambda x, r, p, ap, po, c, d, do: (
                 x + p @ c, r - ap @ c, ap - p @ d - po @ do
             )
+    split_fn = split if split is not None else (
+        lambda r_, t_: split_residual(r_, t_, mapping)
+    )
 
     x0 = jnp.zeros_like(b) if x0 is None else x0
     r0 = b - _apply_vec(a_apply, x0, t)  # initial SpMV (Alg 3 line 1)
-    big_r0 = split(r0, t) if split is not None else split_residual(r0, t, mapping)
+    big_r0 = split_fn(r0, t)
     n = b.shape[0]
     dtype = b.dtype
     zeros_nt = jnp.zeros((n, t), dtype)
     rn0 = jnp.sqrt(sqnorm(r0))
     hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=dtype).at[0].set(rn0)
 
-    def cond(carry):
-        k, rn = carry["k"], carry["rn"]
-        return (rn > tol) & (k < max_iters)
-
-    def body(carry):
+    def iterate(carry):
         big_x, big_r, z = carry["X"], carry["R"], carry["Z"]
         p_old, ap_old = carry["P"], carry["AP"]
         k, hist = carry["k"], carry["hist"]
 
         az = a_apply(z)  # SpMBV  [p2p]
         g = gram1(z, az)  # allreduce #1: t² floats
-        p, ap = _chol_inv_apply(g, z, az, eps=chol_eps)  # local chol + TRSMs
+        if policy is None:
+            p, ap = _chol_inv_apply(g, z, az, eps=chol_eps)  # local chol + TRSMs
+            active = None
+        else:
+            # pivoted rank-revealing factorization: dependent directions come
+            # out as zero-masked columns instead of NaNs (local, no comm)
+            (p, ap), _rank, active = rank_revealing_apply(
+                g, z, az, rtol=policy.rank_rtol
+            )
 
         # fused block inner products: one packed reduction of 3t² floats
         packed = gram2(p, big_r, ap, ap_old)  # allreduce #2: 3t² floats
@@ -153,17 +204,68 @@ def ecg_solve(
 
         # fused tail: X += Pc, R -= APc, Z = AP − Pd − P_old d_old
         big_x, big_r, z_new = tail(big_x, big_r, p, ap, p_old, c, d, d_old)
+        if policy is not None:
+            # flexible-ECG stagnation drops; a zeroed Z column stays dead
+            # (its G row/column is zero next iteration), so no mask is
+            # carried — the block vectors themselves are the mask.
+            active = stagnation_mask(c, carry["rn"], active, policy)
+            z_new = z_new * active.astype(z_new.dtype)[None, :]
         rsum = big_r.sum(axis=1)
         rn = jnp.sqrt(sqnorm(rsum))
         hist = hist.at[k + 1].set(rn)
-        return dict(X=big_x, R=big_r, Z=z_new, P=p, AP=ap, k=k + 1, rn=rn, hist=hist)
+        out = dict(
+            X=big_x, R=big_r, Z=z_new, P=p, AP=ap, k=k + 1, rn=rn, hist=hist,
+            bd=carry["bd"],
+        )
+        if policy is not None:
+            n_active = jnp.sum(active).astype(jnp.int32)
+            best_rn, since = plateau_update(
+                rn, carry["best_rn"], carry["since"], policy
+            )
+            restarts = carry["restarts"]
+            if policy.restart:
+                # re-enlarge: rebuild the full t-wide splitting from the
+                # current residual when progress plateaus on a reduced block
+                do_rs = (since >= policy.plateau_window) & (n_active < t)
+                fresh = split_fn(rsum, t)
+                out["R"] = jnp.where(do_rs, fresh, out["R"])
+                out["Z"] = jnp.where(do_rs, fresh, out["Z"])
+                out["P"] = jnp.where(do_rs, jnp.zeros_like(p), out["P"])
+                out["AP"] = jnp.where(do_rs, jnp.zeros_like(ap), out["AP"])
+                n_active = jnp.where(do_rs, jnp.int32(t), n_active)
+                since = jnp.where(do_rs, 0, since)
+                best_rn = jnp.where(do_rs, rn, best_rn)
+                restarts = restarts + do_rs.astype(jnp.int32)
+            out.update(
+                best_rn=best_rn, since=since, restarts=restarts,
+                ahist=carry["ahist"].at[k + 1].set(n_active),
+            )
+        return out
 
     init = dict(X=zeros_nt, R=big_r0, Z=big_r0, P=zeros_nt, AP=zeros_nt,
                 k=jnp.int32(0), rn=rn0, hist=hist0)
-    out = jax.lax.while_loop(cond, body, init)
+    if policy is not None:
+        init.update(
+            best_rn=rn0,
+            since=jnp.int32(0),
+            restarts=jnp.int32(0),
+            ahist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(t),
+        )
+    out = _guarded_while(
+        lambda c: (c["rn"] > tol) & (c["k"] < max_iters), iterate, init
+    )
     x = x0 + out["X"].sum(axis=1)  # line 14: x = Σᵢ (X)ᵢ
+    breakdown = bool(out["bd"])
     return SolveResult(
-        x=x, n_iters=int(out["k"]), res_hist=out["hist"], converged=bool(out["rn"] <= tol)
+        x=x,
+        n_iters=int(out["k"]),
+        res_hist=out["hist"],
+        converged=bool(out["rn"] <= tol) and not breakdown,
+        breakdown=breakdown,
+        t=t,
+        active_hist=out["ahist"] if policy is not None else None,
+        restarts=int(out["restarts"]) if policy is not None else 0,
+        selection=selection,
     )
 
 

@@ -39,3 +39,15 @@ def split_residual(r: jax.Array, t: int, mapping: str = "contiguous") -> jax.Arr
 def collapse(block: jax.Array) -> jax.Array:
     """Inverse direction of (2.3): sum block-vector columns back to a vector."""
     return block.sum(axis=1)
+
+
+def split_rank(r: jax.Array, t: int, mapping: str = "contiguous") -> jax.Array:
+    """Number of nonzero columns of T_{r,t}(r).
+
+    The columns of the splitting have disjoint supports, so they are linearly
+    independent iff nonzero — this is the exact rank of the initial enlarged
+    block, i.e. the width a breakdown-safe solve (:mod:`repro.adaptive`)
+    reduces to on its first iteration when some subdomains carry no residual.
+    """
+    big = split_residual(r, t, mapping)
+    return jnp.sum(jnp.any(big != 0, axis=0))

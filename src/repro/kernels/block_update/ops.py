@@ -8,29 +8,24 @@ in the same row pass, so P and AP stream from HBM once per iteration.
 
 from __future__ import annotations
 
-import jax
-
 from repro.kernels.block_update.kernel import block_update_pallas, ecg_tail_pallas
 from repro.kernels.block_update.ref import block_update_ref, ecg_tail_ref
+from repro.kernels.dispatch import resolve_dispatch
 
 
 def block_update(x, r, p, ap, c, use_pallas: bool | None = None, block_rows: int = 512):
-    on_tpu = jax.default_backend() == "tpu"
-    if use_pallas is None:
-        use_pallas = on_tpu
+    use_pallas, interpret = resolve_dispatch("block_update", use_pallas)
     if use_pallas:
-        return block_update_pallas(x, r, p, ap, c, block_rows=block_rows, interpret=not on_tpu)
+        return block_update_pallas(x, r, p, ap, c, block_rows=block_rows, interpret=interpret)
     return block_update_ref(x, r, p, ap, c)
 
 
 def ecg_tail(x, r, p, ap, p_old, c, d, d_old, use_pallas: bool | None = None,
              block_rows: int = 512):
     """Fused tail of one ECG iteration; see :func:`ecg_tail_ref` for the math."""
-    on_tpu = jax.default_backend() == "tpu"
-    if use_pallas is None:
-        use_pallas = on_tpu
+    use_pallas, interpret = resolve_dispatch("ecg_tail", use_pallas)
     if use_pallas:
         return ecg_tail_pallas(
-            x, r, p, ap, p_old, c, d, d_old, block_rows=block_rows, interpret=not on_tpu
+            x, r, p, ap, p_old, c, d, d_old, block_rows=block_rows, interpret=interpret
         )
     return ecg_tail_ref(x, r, p, ap, p_old, c, d, d_old)

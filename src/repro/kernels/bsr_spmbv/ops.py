@@ -16,12 +16,12 @@ conversion machinery that puts the kernel on the solver hot path:
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.sparse.csr import BSRMatrix, CSRMatrix, csr_to_bsr
 from repro.kernels.bsr_spmbv.kernel import bsr_spmbv_pallas
 from repro.kernels.bsr_spmbv.ref import bsr_spmbv_ref
+from repro.kernels.dispatch import resolve_dispatch
 
 
 def bsr_to_block_ell(b: BSRMatrix, kmax: int | None = None):
@@ -127,10 +127,10 @@ def make_block_ell_apply(
 
 def bsr_spmbv(blocks, indices, v, use_pallas: bool | None = None):
     """W = A @ V.  Pallas kernel on TPU; interpret-mode Pallas or the jnp
-    oracle elsewhere (``use_pallas=True`` forces interpret-mode validation)."""
-    on_tpu = jax.default_backend() == "tpu"
-    if use_pallas is None:
-        use_pallas = on_tpu
+    oracle elsewhere (``use_pallas=True`` forces interpret-mode validation).
+    GPU hosts fall back to the oracle with an explicit warn-once (see
+    :mod:`repro.kernels.dispatch`)."""
+    use_pallas, interpret = resolve_dispatch("bsr_spmbv", use_pallas)
     if use_pallas:
-        return bsr_spmbv_pallas(blocks, indices, v, interpret=not on_tpu)
+        return bsr_spmbv_pallas(blocks, indices, v, interpret=interpret)
     return bsr_spmbv_ref(blocks, indices, v)

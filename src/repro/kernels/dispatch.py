@@ -1,0 +1,58 @@
+"""Shared platform dispatch for the kernel ops (first slice of GPU support).
+
+Every public kernel op (``bsr_spmbv``, ``fused_gram``, ``block_update``,
+``ecg_tail``) dispatches Pallas-compiled on TPU and the pure-jnp oracle
+elsewhere.  Historically the check was a bare ``backend == "tpu"`` that
+silently lumped GPU hosts with CPU; this module makes the GPU case explicit:
+the op still falls back to the oracle (the Triton/Mosaic-GPU lowering is a
+ROADMAP item), but says so — once per op — when ``REPRO_KERNEL_VERBOSE`` is
+set, so a GPU user who flipped ``backend="pallas"`` expecting a kernel can
+see what actually ran.
+"""
+
+from __future__ import annotations
+
+import os
+import warnings
+
+import jax
+
+#: op names that already emitted their GPU-fallback warning this process
+_warned: set[str] = set()
+
+
+def verbose() -> bool:
+    """True when REPRO_KERNEL_VERBOSE is set to a truthy value."""
+    return os.environ.get("REPRO_KERNEL_VERBOSE", "") not in ("", "0", "false", "False")
+
+
+def warn_gpu_fallback(op_name: str) -> None:
+    """Warn (once per op, gated on REPRO_KERNEL_VERBOSE) that a kernel op is
+    running its jnp oracle on a GPU host."""
+    if op_name in _warned or not verbose():
+        return
+    _warned.add(op_name)
+    warnings.warn(
+        f"repro.kernels.{op_name}: no Pallas GPU lowering yet — dispatching "
+        "to the pure-jnp oracle on platform 'gpu' (functionally identical, "
+        "but not the fused kernel; unset REPRO_KERNEL_VERBOSE to silence)",
+        RuntimeWarning,
+        stacklevel=3,
+    )
+
+
+def resolve_dispatch(op_name: str, use_pallas: bool | None) -> tuple[bool, bool]:
+    """Resolve a kernel op's ``use_pallas`` argument against the platform.
+
+    Returns ``(use_pallas, interpret)``: compiled Pallas on TPU; on GPU the
+    jnp oracle with an explicit warn-once (see module docstring) instead of
+    the old silent CPU-style fallback; interpret-mode Pallas everywhere else
+    when the caller forces ``use_pallas=True`` (the validation path).
+    """
+    platform = jax.default_backend()
+    on_tpu = platform == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+        if platform == "gpu":
+            warn_gpu_fallback(op_name)
+    return use_pallas, not on_tpu

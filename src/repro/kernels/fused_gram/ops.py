@@ -8,16 +8,13 @@ shard_map ``gram2``, feeding exactly one psum (the 3t² payload of §3.1).
 
 from __future__ import annotations
 
-import jax
-
+from repro.kernels.dispatch import resolve_dispatch
 from repro.kernels.fused_gram.kernel import fused_gram_pallas
 from repro.kernels.fused_gram.ref import fused_gram_ref
 
 
 def fused_gram(p, r, ap, ap_old, use_pallas: bool | None = None, block_rows: int = 512):
-    on_tpu = jax.default_backend() == "tpu"
-    if use_pallas is None:
-        use_pallas = on_tpu
+    use_pallas, interpret = resolve_dispatch("fused_gram", use_pallas)
     if use_pallas:
-        return fused_gram_pallas(p, r, ap, ap_old, block_rows=block_rows, interpret=not on_tpu)
+        return fused_gram_pallas(p, r, ap, ap_old, block_rows=block_rows, interpret=interpret)
     return fused_gram_ref(p, r, ap, ap_old)

@@ -1,7 +1,8 @@
 """ECG solve driver (single- or multi-device).
 
     PYTHONPATH=src python -m repro.launch.solve --matrix dg --t 8 \
-        --strategy tuned [--devices 8] [--backend pallas] [--tune model]
+        --strategy tuned [--devices 8] [--backend pallas] [--tune model] \
+        [--adaptive reduce] [--t auto]
 
 --backend pallas routes the SpMBV through the Block-ELL Pallas kernel and
 the gram/tail updates through the fused kernels (oracles on CPU).
@@ -11,6 +12,14 @@ tile shape, and blocking-vs-overlap to the setup-time autotuner
 (repro.tune); --tune measure calibrates with microbenchmarks on the real
 mesh instead of the models; --tune off keeps the explicit --strategy /
 --ell-block / --overlap flags.
+
+--t auto picks the enlarging factor from the iterations-vs-cost model
+(repro.adaptive.select_t) — it composes the tuner's per-iteration cost with
+probe-calibrated convergence rates, so it requires the cost models and is
+rejected together with an explicit --tune off.  --adaptive enables the
+in-solve width controller (rank-revealing breakdown safety, flexible-ECG
+stagnation drops, optional plateau restart); the run summary prints the
+chosen t and every reduction event.
 """
 
 from __future__ import annotations
@@ -21,12 +30,43 @@ import sys
 import time
 
 
+def _parse_t(value: str) -> int | str:
+    if value == "auto":
+        return "auto"
+    try:
+        t = int(value)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"--t must be a positive int or 'auto', got {value!r}")
+    if t < 1:
+        raise argparse.ArgumentTypeError(f"--t must be >= 1, got {t}")
+    return t
+
+
+def _print_adaptive_summary(res) -> None:
+    """Chosen t, selection table, and reduction events for the run summary."""
+    if res.selection is not None:
+        print(res.selection.summary())
+    events = res.reduction_events()
+    if events:
+        for k, before, after in events:
+            kind = "re-enlarged" if after > before else "reduced"
+            print(f"  iter {k}: active width {kind} {before} -> {after}")
+        if res.restarts:
+            print(f"  restarts: {res.restarts}")
+    elif res.active_hist is not None:
+        print(f"  active width constant at t={res.t}")
+    if res.breakdown:
+        print("  BREAKDOWN: solver stopped at the last finite iterate")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--matrix", default="dg", choices=["dg", "fd", "random"])
     ap.add_argument("--elements", type=int, default=16)
     ap.add_argument("--block", type=int, default=16)
-    ap.add_argument("--t", type=int, default=8)
+    ap.add_argument("--t", type=_parse_t, default=8,
+                    help="enlarging factor, or 'auto' to pick it from the "
+                         "iterations-vs-cost model")
     ap.add_argument("--tol", type=float, default=1e-8)
     ap.add_argument("--strategy", default="tuned",
                     choices=["sequential", "standard", "2step", "3step", "optimal", "tuned"])
@@ -38,10 +78,26 @@ def main():
     ap.add_argument("--ell-block", type=int, default=8, help="Block-ELL tile size")
     ap.add_argument("--tune", default=None, choices=["model", "measure", "off"],
                     help="autotune strategy/tile/overlap (default: model when "
-                         "--strategy tuned, else off)")
+                         "--strategy tuned or --t auto, else off)")
+    ap.add_argument("--adaptive", default=None,
+                    choices=["off", "rankrev", "reduce", "reduce+restart"],
+                    help="in-solve width controller: breakdown-safe rank "
+                         "reveal / flexible-ECG reduction / plateau restart "
+                         "(default: off, except --t auto implies rankrev; an "
+                         "explicit 'off' is honored even with --t auto)")
     args = ap.parse_args()
+    if args.t == "auto" and args.tune == "off":
+        ap.error("--t auto composes the tuner's cost models and cannot run "
+                 "with --tune off; use --tune model (or --tune measure — the "
+                 "t ranking itself is always model-based, measured "
+                 "calibration applies to the operator tuning)")
+    if args.t == "auto" and args.tune == "measure":
+        print("note: --t auto ranks candidates with the model-mode cost; "
+              "--tune measure calibrates the distributed operator tuning only")
     if args.tune is None:
-        args.tune = "model" if args.strategy == "tuned" else "off"
+        args.tune = "model" if (args.strategy == "tuned" or args.t == "auto") else "off"
+    # None = solver defaults (auto-t turns on rankrev); explicit "off" sticks
+    adaptive = args.adaptive
 
     if args.devices and "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
         os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={args.devices}"
@@ -68,7 +124,19 @@ def main():
     if args.strategy == "sequential" or not args.devices:
         tuned = None
         block = args.ell_block
-        if args.backend == "pallas" and args.tune != "off":
+        sel = None
+        if args.t == "auto":
+            # resolve the selection *before* building the operator so the
+            # executed tile is the one the candidate costs were modeled with
+            from repro.adaptive import select_t
+
+            sel = select_t(a, b, tol=args.tol, n_nodes=1, ppn=1,
+                           backend=args.backend)
+            if args.backend == "pallas":
+                tuned = sel.configs[sel.t]
+                block = tuned.ell_block
+                print(f"tuned tile: {block} kmax={tuned.kmax}")
+        elif args.backend == "pallas" and args.tune != "off":
             from repro.tune import tune as run_tune
 
             tuned = run_tune(a, t=args.t, n_nodes=1, ppn=1, backend="pallas")
@@ -82,9 +150,11 @@ def main():
             apply_a = lambda V: csr_spmbv(a, V)
         t0 = time.time()
         res = ecg_solve(apply_a, jnp.asarray(b), t=args.t, tol=args.tol, max_iters=5000,
-                        backend=args.backend, tuned=tuned)
-        print(f"sequential ECG[{args.backend}]: iters={res.n_iters} "
+                        backend=args.backend, tuned=tuned, adaptive=adaptive,
+                        matrix=a, select=sel)
+        print(f"sequential ECG[{args.backend}] t={res.t}: iters={res.n_iters} "
               f"converged={res.converged} {time.time()-t0:.1f}s")
+        _print_adaptive_summary(res)
         res_cg = cg_solve(lambda v: csr_spmbv(a, v[:, None])[:, 0], jnp.asarray(b), tol=args.tol, max_iters=20000)
         print(f"reference CG:  iters={res_cg.n_iters}")
         return
@@ -99,7 +169,7 @@ def main():
                               max_iters=5000, backend=args.backend,
                               overlap=args.overlap, ell_block=args.ell_block,
                               machine=TPU_V5E_POD.with_ppn(args.ppn),
-                              tune=args.tune)
+                              tune=args.tune, adaptive=adaptive)
     if op.tuned is not None:
         cfg = op.tuned
         strategy = cfg.strategy
@@ -113,10 +183,11 @@ def main():
         if a.shape[0] <= 8192 else float("nan")
     print(
         f"distributed ECG[{strategy}/{args.backend}"
-        f"{'/overlap' if op.overlap else ''}] on {n_dev} devices: "
+        f"{'/overlap' if op.overlap else ''}] t={res.t} on {n_dev} devices: "
         f"iters={res.n_iters} converged={res.converged} relres={relres:.2e} "
         f"{time.time()-t0:.1f}s"
     )
+    _print_adaptive_summary(res)
 
 
 if __name__ == "__main__":

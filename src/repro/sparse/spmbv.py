@@ -509,7 +509,7 @@ def distributed_ecg(
     a: CSRMatrix,
     b: np.ndarray,
     mesh: Mesh,
-    t: int,
+    t: int | str,
     strategy: str = "standard",
     tol: float = 1e-8,
     max_iters: int = 500,
@@ -518,6 +518,8 @@ def distributed_ecg(
     overlap: bool = False,
     ell_block: int | tuple[int, int] = 8,
     tune: str | object = "off",
+    adaptive: object = None,
+    t_candidates: tuple = (1, 2, 4, 8, 16),
 ):
     """Distributed ECG solve with the selected node-aware SpMBV strategy.
 
@@ -532,11 +534,60 @@ def distributed_ecg(
     the (strategy, tile shape, overlap) choice to :mod:`repro.tune` — see
     :func:`make_distributed_spmbv`; ``strategy="tuned"`` is shorthand for
     ``tune="model"``.
+
+    ``t="auto"`` picks the enlarging factor at setup time from the
+    iterations-vs-cost model of :mod:`repro.adaptive.select_t` (iteration
+    probes run on the sequential CSR product — the iteration count depends
+    only on the math — and per-iteration cost on this mesh's (n_nodes, ppn)
+    via :mod:`repro.tune`); the :class:`TSelection` is recorded on both the
+    result and the applied ``TunedConfig``.  With the default ``tune="off"``
+    the solver then *executes the tuner config the choice was modeled with*
+    — explicit ``strategy``/``overlap``/``ell_block`` arguments are
+    overridden (with a warning when non-default), because a t optimized for
+    one config but run under another would make the selection meaningless;
+    pass a fixed ``t`` to force an explicit config, or ``tune="model"|
+    "measure"`` to re-tune at the chosen t.  ``adaptive`` selects the in-
+    solve width controller ("rankrev" | "reduce" | "reduce+restart" | a
+    :class:`repro.adaptive.ReductionPolicy`): the active-width mask lives in
+    the replicated t-wide coefficient space, so the per-device block vectors
+    stay (rmax, t) with zero-masked columns and the exchange plan, Pallas
+    kernels, and two-psum structure are untouched.
     """
     from repro.core.ecg import ecg_solve
 
     if strategy == "tuned" and (tune is None or tune == "off"):
         tune = "model"
+
+    selection = None
+    if isinstance(t, str):
+        from repro.adaptive.select_t import resolve_auto_t
+
+        n_nodes, ppn = mesh.devices.shape
+        t, selection, adaptive = resolve_auto_t(
+            t, adaptive, a=a, b=b, candidates=t_candidates, tol=tol,
+            machine=machine, n_nodes=n_nodes, ppn=ppn, backend=backend,
+        )
+        if tune is None or tune == "off":
+            # execute the exact config the choice was modeled with — without
+            # this, the chosen t would optimize a (strategy, tile, overlap)
+            # that never runs.  Explicit strategy/overlap/ell_block arguments
+            # are overridden (see docstring); warn when that actually
+            # discards a non-default request.
+            cfg = selection.configs.get(t)
+            if cfg is not None:
+                if strategy != "standard" or overlap or ell_block != 8:
+                    import warnings
+
+                    warnings.warn(
+                        "distributed_ecg(t='auto') executes the tuner config "
+                        f"its choice was modeled with ({cfg.strategy}/"
+                        f"{cfg.ell_block}/{'overlap' if cfg.overlap else 'blocking'}); "
+                        f"the explicit strategy={strategy!r}/overlap={overlap}/"
+                        f"ell_block={ell_block} arguments are ignored — pass a "
+                        "fixed t to force them",
+                        stacklevel=2,
+                    )
+                tune = cfg
     op = make_distributed_spmbv(
         a, mesh, strategy if strategy != "tuned" else "standard", t=t,
         machine=machine, backend=backend, overlap=overlap,
@@ -615,5 +666,10 @@ def distributed_ecg(
         sqnorm=sqnorm,
         tail=tail,
         backend=backend,
+        adaptive=adaptive,
     )
+    if selection is not None:
+        result.selection = selection
+        if op.tuned is not None:
+            op.tuned = dataclasses.replace(op.tuned, selection=selection)
     return result, op

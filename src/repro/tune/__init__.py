@@ -18,6 +18,12 @@ real mesh (``repro.tune.microbench``).  Both return a
 ``make_distributed_spmbv(..., tune=cfg)`` / ``distributed_ecg(..., tune=...)``
 apply verbatim.  See ``docs/tuning.md`` for the model inputs and worked
 examples.
+
+The enlarging factor itself is tuned one level up:
+:mod:`repro.adaptive.select_t` composes this package's per-iteration cost
+model with an iterations-to-convergence model to rank candidate t at setup
+(``t="auto"``); the chosen :class:`TSelection` is recorded on
+``TunedConfig.selection``.  See ``docs/adaptive.md``.
 """
 
 from repro.tune.autotune import (

@@ -90,6 +90,8 @@ class TunedConfig:
     predicted: dict = dataclasses.field(
         default_factory=dict, compare=False, repr=False
     )
+    # the TSelection when t itself was chosen by t="auto" (None otherwise)
+    selection: object = dataclasses.field(default=None, compare=False, repr=False)
 
     @property
     def ell_block(self) -> tuple[int, int]:

@@ -158,6 +158,114 @@ def check_tuned_and_col_split():
     print("tuned + col-split OK")
 
 
+def check_adaptive_and_auto_t():
+    """Adaptive ECG on the shard_map path: a rank-deficient splitting that
+    breaks fixed-t must converge with adaptive="reduce", and the reduction
+    trace must agree with the sequential solver (same math, same drops).
+    t="auto" end-to-end records the selection on result + TunedConfig."""
+    mesh = jax.make_mesh((2, 4), ("node", "proc"))
+    a = fd_laplace_2d(13)
+    n = a.shape[0]
+    ad = np.asarray(a.todense(), np.float64)
+    t, m = 4, 2
+    rng = np.random.default_rng(7)
+    b = np.zeros(n)
+    b[: (m * n) // t] = rng.standard_normal((m * n) // t)  # t−m zero subdomains
+
+    res_fixed, _ = distributed_ecg(a, b, mesh, t=t, strategy="3step", tol=1e-8)
+    assert res_fixed.breakdown and not res_fixed.converged, "fixed t should break down"
+
+    from repro.sparse.csr import csr_spmbv as seq_spmbv
+
+    seq = ecg_solve(lambda X: seq_spmbv(a, X), jnp.asarray(b), t=t, tol=1e-8,
+                    max_iters=300, adaptive="reduce")
+    res, op = distributed_ecg(a, b, mesh, t=t, strategy="3step", tol=1e-8,
+                              max_iters=300, adaptive="reduce")
+    assert seq.converged and res.converged
+    assert abs(res.n_iters - seq.n_iters) <= 2, (res.n_iters, seq.n_iters)
+    x = op.unshard(res.x)
+    relres = np.linalg.norm(ad @ x - b) / np.linalg.norm(b)
+    assert relres < 1e-6, relres
+    # reduction traces agree: the dependent directions drop at iteration 1 on
+    # both paths, and the active width histories match over the common prefix
+    k = min(res.n_iters, seq.n_iters) + 1
+    ah_d = np.asarray(res.active_hist)[:k]
+    ah_s = np.asarray(seq.active_hist)[:k]
+    assert ah_d[0] == t and ah_d[1] == m, ah_d[:2]
+    assert np.array_equal(ah_d, ah_s), (ah_d, ah_s)
+    h_d = np.asarray(res.res_hist)[:k]
+    h_s = np.asarray(seq.res_hist)[:k]
+    np.testing.assert_allclose(h_d, h_s, rtol=1e-5, atol=1e-10)
+
+    # t="auto" on the tuned distributed path
+    b_full = rng.standard_normal(n)
+    res_a, op_a = distributed_ecg(a, b_full, mesh, t="auto", strategy="tuned",
+                                  tol=1e-8, max_iters=300, t_candidates=(1, 2, 4))
+    assert res_a.converged
+    assert res_a.selection is not None and res_a.t == res_a.selection.t
+    assert op_a.tuned is not None and op_a.tuned.selection is res_a.selection
+    assert res_a.t in (1, 2, 4)
+    print("adaptive + auto-t OK")
+
+
+def check_adaptive_opcode_count():
+    """The §3.1 invariant under adaptivity: one full adaptive iteration body
+    (gram1 → rank-revealing factorization → packed gram2 → tail → norm)
+    lowers to exactly the same all-reduce count as the fixed-width body —
+    the pivoted factorization and masking run on replicated t x t data and
+    add NO collectives."""
+    mesh = jax.make_mesh((2, 4), ("node", "proc"))
+    a = dg_laplace_2d((4, 4), block=4)
+    op = make_distributed_spmbv(a, mesh, "3step", t=4, machine=BLUE_WATERS)
+    apply_a = op.matvec_fn()
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.core.ecg import _chol_inv_apply
+    from repro.adaptive import rank_revealing_apply, stagnation_mask
+    from repro.adaptive.reduce import ReductionPolicy
+
+    axes = ("node", "proc")
+    vspec = op.vec_spec
+    gram1 = shard_map(lambda z, az: jax.lax.psum(z.T @ az, axes), mesh=mesh,
+                      in_specs=(vspec, vspec), out_specs=P(None, None), check_rep=False)
+    gram2 = shard_map(
+        lambda pp, rr, ap, apo: jax.lax.psum(
+            jnp.concatenate([pp.T @ rr, ap.T @ ap, apo.T @ ap], axis=1), axes
+        ),
+        mesh=mesh, in_specs=(vspec,) * 4, out_specs=P(None, None), check_rep=False,
+    )
+    sqnorm = shard_map(lambda v: jax.lax.psum(jnp.vdot(v, v), axes), mesh=mesh,
+                       in_specs=P(axes), out_specs=P(), check_rep=False)
+    policy = ReductionPolicy()
+
+    def body(z, r, p_old, ap_old, rn, adaptive):
+        az = apply_a(z)
+        g = gram1(z, az)
+        if adaptive:
+            (p, ap), _rank, active = rank_revealing_apply(g, z, az)
+        else:
+            p, ap = _chol_inv_apply(g, z, az)
+        packed = gram2(p, r, ap, ap_old)
+        c, d, d_old = jnp.split(packed, 3, axis=1)
+        x2 = p @ c
+        r2 = r - ap @ c
+        z2 = ap - p @ d - p_old @ d_old
+        if adaptive:
+            active = stagnation_mask(c, rn, active, policy)
+            z2 = z2 * active.astype(z2.dtype)[None, :]
+        return x2, r2, z2, jnp.sqrt(sqnorm(r2.sum(axis=1)))
+
+    sds = jax.ShapeDtypeStruct((op.n_padded, 4), jnp.float64)
+    rn_sds = jax.ShapeDtypeStruct((), jnp.float64)
+    counts = {}
+    for adaptive in (False, True):
+        fn = jax.jit(lambda z, r, po, apo, rn, ad=adaptive: body(z, r, po, apo, rn, ad))
+        txt = fn.lower(sds, sds, sds, sds, rn_sds).compile().as_text()
+        counts[adaptive] = txt.count(" all-reduce(")
+    assert counts[False] == counts[True] == 3, counts  # gram1 + gram2 + norm
+    print(f"adaptive opcode count OK (all-reduce x{counts[True]} per iteration, unchanged)")
+
+
 def check_two_psums_per_iteration():
     """The §3.1 discipline: the iteration body must carry exactly 2 psums
     (plus the convergence-norm reduction) — inspect the lowered HLO.  Count
@@ -204,5 +312,7 @@ if __name__ == "__main__":
     check_distributed_ecg_matches_sequential()
     check_kernel_backend_ecg_parity()
     check_tuned_and_col_split()
+    check_adaptive_and_auto_t()
+    check_adaptive_opcode_count()
     check_two_psums_per_iteration()
     print("ALL DISTRIBUTED CHECKS PASSED")
