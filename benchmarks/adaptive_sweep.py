@@ -13,10 +13,15 @@ Three questions, one table:
 * **reduction on** — on a rank-deficient splitting (RHS supported on half
   the subdomains) fixed-t breaks down; ``adaptive="reduce"`` must converge,
   and its iteration count is reported next to the breakdown row.
+* **probe calibration** — predicted-vs-actual iterations for the probe
+  model on (scaled) suite surrogate matrices: for each matrix and candidate
+  t, the probe-estimated iteration count next to a full solve's observed
+  count, with the per-matrix median absolute relative error as the gauge
+  (``probe_calibration`` in the summary).
 
 Writes machine-readable ``BENCH_adaptive_sweep.json`` so the adaptive-solver
-trajectory is tracked across PRs; ``--smoke`` shrinks the problem for the CI
-smoke run.
+trajectory is tracked across PRs; ``--smoke`` shrinks the problems for the
+CI smoke run.
 """
 
 import argparse
@@ -117,6 +122,39 @@ def main() -> None:
     print(f"adaptive/deficient_reduce_t{t_def},{res_red.n_iters},{wall_red:.4f},nan,"
           f"{res_red.converged},{res_red.breakdown}")
 
+    # probe-model calibration on suite surrogates (ROADMAP follow-up): how
+    # well do the probe-estimated iteration counts predict full solves on
+    # matrices with suite structure (blocked / stencil / shuffled), not just
+    # the model problem above?
+    from repro.sparse.matrices import suite_surrogate
+
+    calib_specs = [("thermal2", 0.08), ("ldoor", 0.04)] if args.smoke else \
+                  [("thermal2", 0.15), ("ldoor", 0.08), ("audikw_1", 0.08)]
+    calib_t = [t for t in cands if t <= 8] or cands[:1]
+    calib = {}
+    for name, scale in calib_specs:
+        am = suite_surrogate(name, scale=scale)
+        nm = am.shape[0]
+        bm = np.random.default_rng(1).standard_normal(nm)
+        apply_m = lambda V, _a=am: csr_spmbv(_a, V)
+        sel_m = select_t(am, bm, candidates=calib_t, tol=args.tol)
+        per_t, errs = {}, []
+        for t in calib_t:
+            pred = sel_m.table[t]["est_iters"]
+            res_m = ecg_solve(apply_m, jnp.asarray(bm), t=t, tol=args.tol,
+                              max_iters=max_iters, adaptive="rankrev")
+            actual = res_m.n_iters
+            err = abs(pred - actual) / max(actual, 1)
+            errs.append(err)
+            per_t[str(t)] = dict(pred_iters=pred, actual_iters=actual,
+                                 rel_err=err, converged=res_m.converged)
+            print(f"calib/{name}_t{t},pred={pred},actual={actual},"
+                  f"rel_err={err:.2f}", flush=True)
+        calib[name] = dict(
+            rows=nm, scale=scale, per_t=per_t,
+            median_rel_err=float(np.median(errs)),
+        )
+
     # The gauge must not be tautological: sel.t is the argmin of the *a
     # priori* model (probe-estimated iterations), so comparing against the
     # same table could never fail.  Re-model each candidate ex post with the
@@ -139,6 +177,7 @@ def main() -> None:
         deficient_fixed_breakdown=bool(res_break.breakdown),
         deficient_reduce_converged=bool(res_red.converged),
         reduction_events=events,
+        probe_calibration=calib,
     )
     print(f"# auto t={sel.t} vs best fixed (observed iters x modeled iter cost) "
           f"t={best_fixed}: gap={auto_gap:+.1%} within_10pct={summary['within_10pct']}")

@@ -30,6 +30,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("filter", nargs="?", default=None)
     ap.add_argument("--json", default="BENCH_kernel_sweep.json")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="operand RNG seed (fixed so host-mode numbers "
+                         "reproduce run-to-run)")
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timing repeats per row; the median is reported")
     args = ap.parse_args()
 
     jax.config.update("jax_enable_x64", True)
@@ -44,7 +49,9 @@ def main() -> None:
 
     a = dg_laplace_2d((16, 12), block=8)  # 1536 rows over 8 ranks
     print("name,us_per_call,derived")
-    rows = overlap_vs_blocking_sweep(a, mesh, ts=(4, 8)) + kernel_vs_oracle()
+    rows = overlap_vs_blocking_sweep(
+        a, mesh, ts=(4, 8), seed=args.seed, repeats=args.repeats
+    ) + kernel_vs_oracle(seed=args.seed + 2, repeats=args.repeats)
     for r in rows:
         if args.filter and args.filter not in r["name"]:
             continue
@@ -52,7 +59,8 @@ def main() -> None:
     # the JSON always carries the full sweep (the filter only trims stdout),
     # so cross-PR trajectory comparisons never see partial files
     with open(args.json, "w") as fh:
-        json.dump(dict(benchmark="kernel_sweep", rows=rows), fh, indent=2)
+        json.dump(dict(benchmark="kernel_sweep", seed=args.seed,
+                       repeats=args.repeats, rows=rows), fh, indent=2)
     print(f"# wrote {args.json}")
 
 

@@ -31,7 +31,10 @@ def main() -> None:
     ap.add_argument("--t", type=int, nargs="+", default=[4, 8])
     ap.add_argument("--tiles", default="4x4,8x8,16x16")
     ap.add_argument("--machine", default="BlueWaters")
-    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timing repeats per config; the median is reported")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="operand RNG seed (fixed for run-to-run reproducibility)")
     ap.add_argument("--json", default="BENCH_tuner_sweep.json")
     args = ap.parse_args()
 
@@ -65,6 +68,7 @@ def main() -> None:
                     us = measure_config(
                         a, mesh, t, strategy, tl, overlap, backend="pallas",
                         machine=machine, pm=pm, repeats=args.repeats,
+                        seed=args.seed,
                     )
                     model_us = 1e6 * predict_config(
                         pm, g, t, machine, strategy, stats[tl], overlap, "pallas"
@@ -97,7 +101,9 @@ def main() -> None:
         )
 
     with open(args.json, "w") as fh:
-        json.dump(dict(benchmark="tuner_sweep", rows=rows, summary=summary), fh, indent=2)
+        json.dump(dict(benchmark="tuner_sweep", seed=args.seed,
+                       repeats=args.repeats, rows=rows, summary=summary),
+                  fh, indent=2)
     print(f"# wrote {args.json}")
 
 

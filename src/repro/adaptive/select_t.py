@@ -14,6 +14,15 @@ at a higher per-iteration cost — is closed here at setup time:
   models: the tuner's best (strategy × tile × overlap) SpMBV time at this t,
   the §3.1 collective model (t² + 3t² floats), and the γ-weighted local
   flops of eq. (3.3) minus the SpMBV term the tuner already covers.
+  ``tune_mode`` selects the tuner's exchange model — pass
+  ``"model:structural"`` on host/TPU backends so strategy ranking follows
+  the executor-structural cost (plan dispatches + moved bytes).
+
+Post-reduction byte savings: the probes run with the adaptive controller,
+so when a candidate's splitting loses directions mid-probe (rank drops or
+stagnation), the *observed average active width* discounts that candidate's
+exchange-byte term — the width-aware executor really will move fewer bytes
+after the reduction, and the ranking accounts for it.
 
 ``select_t`` ranks the candidate widths and returns a :class:`TSelection`;
 the solvers accept ``t="auto"`` and record the selection on
@@ -64,38 +73,54 @@ class TSelection:
         for t in self.candidates:
             row = self.table[t]
             mark = " <-- chosen" if t == self.t else ""
+            act = row.get("avg_active", t)
+            red = f" act~{act:.1f}" if act < t else ""
             lines.append(
                 f"  t={t:>2}: rate={row['rate']:.4f} iters~{row['est_iters']:>5} "
                 f"iter={row['iter_cost_s']*1e6:8.1f}us "
-                f"total={row['total_cost_s']*1e3:8.2f}ms{mark}"
+                f"total={row['total_cost_s']*1e3:8.2f}ms{red}{mark}"
             )
         return "\n".join(lines)
 
 
 # ------------------------------------------------------- iterations models
 def probe_decay_rate(
-    a_apply, b, t: int, probe_iters: int = 8, mapping: str = "contiguous"
-) -> tuple[float, float]:
+    a_apply,
+    b,
+    t: int,
+    probe_iters: int = 8,
+    mapping: str = "contiguous",
+    adaptive: object = "rankrev",
+) -> tuple[float, float, float]:
     """Run ``probe_iters`` real ECG iterations at width t and fit a geometric
-    per-iteration residual decay rate ρ; returns (ρ, r₀ norm).
+    per-iteration residual decay rate ρ; returns (ρ, r₀ norm, avg active
+    width observed over the probe).
 
-    The probe runs with ``adaptive="rankrev"`` so a rank-deficient splitting
-    (e.g. t exceeding the number of nonzero subdomains) degrades gracefully
-    instead of poisoning the calibration with NaNs.
+    The probe runs with the adaptive controller (default ``"rankrev"``) so a
+    rank-deficient splitting (e.g. t exceeding the number of nonzero
+    subdomains) degrades gracefully instead of poisoning the calibration
+    with NaNs — and so the observed reduction trace can discount the
+    exchange-byte cost of candidates that will not sustain the full width.
     """
     from repro.core.ecg import ecg_solve
 
     res = ecg_solve(
-        a_apply, b, t=t, tol=0.0, max_iters=probe_iters,
-        mapping=mapping, adaptive="rankrev",
+        a_apply, b, t=t, tol=0.0, max_iters=probe_iters, mapping=mapping,
+        # the probe always needs a controller: "off"/None would leave
+        # active_hist unset and a deficient splitting would NaN the fit
+        adaptive="rankrev" if adaptive in (None, "off") else adaptive,
     )
+    ah = np.asarray(res.active_hist)
+    ah = ah[ah >= 0]
+    avg_active = float(ah.mean()) if len(ah) else float(t)
     h = np.asarray(res.res_hist, dtype=np.float64)
     h = h[np.isfinite(h)]
     h = h[h > 0.0]
     if len(h) < 2:
-        return 1e-8, float(h[0]) if len(h) else 0.0  # converged inside the probe
+        # converged inside the probe
+        return 1e-8, float(h[0]) if len(h) else 0.0, avg_active
     rho = (h[-1] / h[0]) ** (1.0 / (len(h) - 1))
-    return float(np.clip(rho, 1e-8, 1.0 - 1e-12)), float(h[0])
+    return float(np.clip(rho, 1e-8, 1.0 - 1e-12)), float(h[0]), avg_active
 
 
 def estimate_condition(a_apply, n: int, iters: int = 50, seed: int = 0) -> float:
@@ -139,9 +164,13 @@ def iteration_cost(
     ppn: int = 1,
     pm=None,
     backend: str = "jnp",
+    tune_mode: str = "model",
 ):
     """Modeled seconds for one ECG iteration at width t: the tuner's best
     SpMBV config + the §3.1 collective model + γ·(local non-SpMBV flops).
+
+    ``tune_mode`` selects the tuner's exchange model (``"model"`` analytic
+    max-rate, ``"model:structural"`` plan dispatches + moved bytes).
 
     Returns ``(seconds, TunedConfig)`` — the config is the same object
     ``make_distributed_spmbv(..., tune=cfg)`` would apply, so a ``t="auto"``
@@ -153,7 +182,7 @@ def iteration_cost(
 
     cfg = run_tune(
         a, t=t, machine=machine, n_nodes=n_nodes, ppn=ppn,
-        pm=pm, backend=backend, mode="model",
+        pm=pm, backend=backend, mode=tune_mode,
     )
     machine = cfg.machine
     p = n_nodes * ppn
@@ -162,6 +191,28 @@ def iteration_cost(
     local_flops = counts.total_flops - counts.spmbv_flops
     collective = t_collective(p, t, machine) if p > 1 else 0.0
     return spmbv + machine.gamma * local_flops + collective, cfg
+
+
+def _reduced_p2p(cfg, t: int, avg_active: float) -> float:
+    """Exchange cost discounted to the probe-observed average active width.
+
+    The width-aware executor moves ``avg_active/t`` of the full-width bytes
+    after reduction events, so a candidate whose splitting cannot sustain
+    its width should not be charged full-width exchange bytes.  With the
+    structural model the byte and dispatch terms are separated exactly
+    (``predicted["plan_stats"]``); with the analytic model the whole p2p
+    term is scaled — its byte terms are linear in t, so this is first-order.
+    """
+    machine = cfg.machine
+    frac = min(max(avg_active / max(t, 1), 0.0), 1.0)
+    stats = cfg.predicted.get("plan_stats")
+    if stats is not None and cfg.strategy in stats:
+        st = stats[cfg.strategy]
+        disp = st["dispatches"] * machine.dispatch_overhead
+        return disp + frac * (
+            st["wire_bytes"] / machine.R_b + st["local_bytes"] / machine.R_bl
+        )
+    return cfg.predicted["p2p"][cfg.strategy] * frac
 
 
 # --------------------------------------------------------------- selection
@@ -179,6 +230,8 @@ def select_t(
     probe_iters: int = 8,
     mapping: str = "contiguous",
     a_apply=None,
+    tune_mode: str = "model",
+    adaptive: object = "rankrev",
 ) -> TSelection:
     """Rank candidate enlarging factors and pick the modeled-cheapest one.
 
@@ -189,6 +242,11 @@ def select_t(
     a_apply:  optional SpMBV override for the probes (defaults to the
               sequential CSR product — the iteration *count* does not depend
               on the execution backend, only on the math).
+    tune_mode: exchange model for the per-iteration cost ("model" analytic,
+              "model:structural" executor-structural).
+    adaptive: controller the probes run with; when the probe observes a
+              reduced average active width, the candidate's exchange-byte
+              cost is discounted to it (see :func:`_reduced_p2p`).
     """
     from repro.sparse.csr import csr_spmbv
 
@@ -211,19 +269,30 @@ def select_t(
     best_t, best_cost = cands[0], math.inf
     for t in cands:
         if mode == "probe":
-            rate, rn0 = probe_decay_rate(
-                a_apply, jnp.asarray(b), t, probe_iters=probe_iters, mapping=mapping
+            rate, rn0, avg_active = probe_decay_rate(
+                a_apply, jnp.asarray(b), t, probe_iters=probe_iters,
+                mapping=mapping, adaptive=adaptive,
             )
             est = _iters_to_tol(rate, rn0, tol, n)
         else:
+            avg_active = float(t)
             rate = math.exp(-1.0 / max(iters_from_condition(kappa, t, 1.0 / math.e), 1.0))
             est = min(int(math.ceil(iters_from_condition(kappa, t, tol / max(rn0, tol)))), n)
         cost, cfg = iteration_cost(
-            a, t, machine=machine, n_nodes=n_nodes, ppn=ppn, pm=pm, backend=backend
+            a, t, machine=machine, n_nodes=n_nodes, ppn=ppn, pm=pm,
+            backend=backend, tune_mode=tune_mode,
         )
+        if avg_active < t and n_nodes * ppn > 1 and not cfg.overlap:
+            # post-reduction byte savings: the width-aware exchange moves
+            # avg_active/t of the full-width bytes once directions retire
+            # (blocking schedules only — an overlapped exchange is already
+            # hidden behind interior compute, so there is nothing to save)
+            full_p2p = cfg.predicted["p2p"][cfg.strategy]
+            cost = cost - full_p2p + _reduced_p2p(cfg, t, avg_active)
         total = est * cost
         table[t] = dict(
-            rate=rate, est_iters=est, iter_cost_s=cost, total_cost_s=total
+            rate=rate, est_iters=est, iter_cost_s=cost, total_cost_s=total,
+            avg_active=avg_active,
         )
         configs[t] = cfg
         if total < best_cost:
@@ -247,14 +316,16 @@ def resolve_auto_t(
     n_nodes: int = 1,
     ppn: int = 1,
     backend: str = "jnp",
+    tune_mode: str = "model",
 ):
     """Shared ``t="auto"`` resolution for the solvers.
 
     Validates the string, runs :func:`select_t` unless a precomputed
-    ``select`` is supplied, and defaults ``adaptive`` to ``"rankrev"`` (an
-    explicit ``"off"`` is honored) — one implementation so the sequential
-    and distributed solvers cannot drift apart.  Returns
-    ``(t, selection, adaptive)``.
+    ``select`` is supplied (probes run with the requested ``adaptive``
+    controller so reduction-aware byte savings enter the ranking), and
+    defaults ``adaptive`` to ``"rankrev"`` (an explicit ``"off"`` is
+    honored) — one implementation so the sequential and distributed solvers
+    cannot drift apart.  Returns ``(t, selection, adaptive)``.
     """
     if t != "auto":
         raise ValueError(f"t must be an int or 'auto', got {t!r}")
@@ -264,9 +335,11 @@ def resolve_auto_t(
                 "t='auto' needs matrix= (the CSRMatrix behind a_apply) "
                 "or select= (a precomputed TSelection)"
             )
+        probe_adaptive = "rankrev" if adaptive in (None, "off") else adaptive
         select = select_t(
             a, b, candidates=candidates, tol=tol, machine=machine,
             n_nodes=n_nodes, ppn=ppn, backend=backend,
+            tune_mode=tune_mode, adaptive=probe_adaptive,
         )
     if adaptive is None:
         adaptive = "rankrev"  # auto-t implies breakdown safety

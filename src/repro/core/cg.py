@@ -25,6 +25,13 @@ class SolveResult:
     #                                  (adaptive ECG only, -1 past the end)
     restarts: int = 0                # re-enlarge events (adaptive ECG)
     selection: object = None         # TSelection when t was chosen by "auto"
+    comm_segments: list | None = None  # [(exchange width, iterations)] per
+    #                                  width segment of the re-sliced solve
+    #                                  (width-aware distributed ECG only)
+    final_carry: dict | None = dataclasses.field(default=None, repr=False)
+    #                                ^ loop carry at exit — the resume handle
+    #                                  the segmented solver threads between
+    #                                  width segments
 
     def __iter__(self):  # convenient unpacking (historical 4-tuple)
         return iter((self.x, self.n_iters, self.res_hist, self.converged))

@@ -95,6 +95,9 @@ def ecg_solve(
     select: object = None,
     t_candidates: tuple = (1, 2, 4, 8, 16),
     machine: object = None,
+    a_apply_masked: Callable | None = None,
+    exit_below_width: int | None = None,
+    resume_state: dict | None = None,
 ) -> SolveResult:
     """Solve A x = b with ECG using enlarging factor ``t``.
 
@@ -129,6 +132,19 @@ def ecg_solve(
                "reduce" (+ flexible-ECG stagnation drops),
                "reduce+restart" (+ re-enlarge on plateau), or a
                :class:`repro.adaptive.ReductionPolicy`.
+
+    Width-segmented execution (used by the width-aware distributed solver —
+    see ``distributed_ecg``): ``a_apply_masked`` is an
+    ``(V, active_mask) -> W`` operator that may exploit the (t,) bool mask
+    of live directions (e.g. compact the halo-exchange payload to the
+    active columns); when given (and a policy is on) it replaces ``a_apply``
+    inside the loop and the mask is carried across iterations.
+    ``exit_below_width`` additionally terminates the while-loop as soon as
+    the active width falls below it — the caller then re-slices its
+    operator at the shrunken width and *resumes* by passing
+    ``SolveResult.final_carry`` back in as ``resume_state`` (all counters,
+    histories, and block vectors continue; the maths is identical to the
+    monolithic loop because only the exchange payload changes).
     """
     selection = select
     if isinstance(t, str):
@@ -171,22 +187,22 @@ def ecg_solve(
     split_fn = split if split is not None else (
         lambda r_, t_: split_residual(r_, t_, mapping)
     )
+    use_mask = a_apply_masked is not None and policy is not None
 
     x0 = jnp.zeros_like(b) if x0 is None else x0
-    r0 = b - _apply_vec(a_apply, x0, t)  # initial SpMV (Alg 3 line 1)
-    big_r0 = split_fn(r0, t)
     n = b.shape[0]
     dtype = b.dtype
     zeros_nt = jnp.zeros((n, t), dtype)
-    rn0 = jnp.sqrt(sqnorm(r0))
-    hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=dtype).at[0].set(rn0)
 
     def iterate(carry):
         big_x, big_r, z = carry["X"], carry["R"], carry["Z"]
         p_old, ap_old = carry["P"], carry["AP"]
         k, hist = carry["k"], carry["hist"]
 
-        az = a_apply(z)  # SpMBV  [p2p]
+        if use_mask:
+            az = a_apply_masked(z, carry["act"])  # width-compacted SpMBV [p2p]
+        else:
+            az = a_apply(z)  # SpMBV  [p2p]
         g = gram1(z, az)  # allreduce #1: t² floats
         if policy is None:
             p, ap = _chol_inv_apply(g, z, az, eps=chol_eps)  # local chol + TRSMs
@@ -206,8 +222,10 @@ def ecg_solve(
         big_x, big_r, z_new = tail(big_x, big_r, p, ap, p_old, c, d, d_old)
         if policy is not None:
             # flexible-ECG stagnation drops; a zeroed Z column stays dead
-            # (its G row/column is zero next iteration), so no mask is
-            # carried — the block vectors themselves are the mask.
+            # (its G row/column is zero next iteration), so no mask needs
+            # carrying for the maths — the block vectors themselves are the
+            # mask.  The width-compacted exchange does carry it (``act``),
+            # to know which columns to pack.
             active = stagnation_mask(c, carry["rn"], active, policy)
             z_new = z_new * active.astype(z_new.dtype)[None, :]
         rsum = big_r.sum(axis=1)
@@ -217,6 +235,8 @@ def ecg_solve(
             X=big_x, R=big_r, Z=z_new, P=p, AP=ap, k=k + 1, rn=rn, hist=hist,
             bd=carry["bd"],
         )
+        if use_mask:
+            out["act"] = active
         if policy is not None:
             n_active = jnp.sum(active).astype(jnp.int32)
             best_rn, since = plateau_update(
@@ -242,18 +262,34 @@ def ecg_solve(
             )
         return out
 
-    init = dict(X=zeros_nt, R=big_r0, Z=big_r0, P=zeros_nt, AP=zeros_nt,
-                k=jnp.int32(0), rn=rn0, hist=hist0)
-    if policy is not None:
-        init.update(
-            best_rn=rn0,
-            since=jnp.int32(0),
-            restarts=jnp.int32(0),
-            ahist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(t),
-        )
-    out = _guarded_while(
-        lambda c: (c["rn"] > tol) & (c["k"] < max_iters), iterate, init
-    )
+    if resume_state is not None:
+        init = dict(resume_state)  # continue a width-segmented solve
+    else:
+        r0 = b - _apply_vec(a_apply, x0, t)  # initial SpMV (Alg 3 line 1)
+        big_r0 = split_fn(r0, t)
+        rn0 = jnp.sqrt(sqnorm(r0))
+        hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=dtype).at[0].set(rn0)
+        init = dict(X=zeros_nt, R=big_r0, Z=big_r0, P=zeros_nt, AP=zeros_nt,
+                    k=jnp.int32(0), rn=rn0, hist=hist0)
+        if policy is not None:
+            init.update(
+                best_rn=rn0,
+                since=jnp.int32(0),
+                restarts=jnp.int32(0),
+                ahist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(t),
+            )
+        if use_mask:
+            init["act"] = jnp.ones((t,), bool)
+
+    def cond(c):
+        go = (c["rn"] > tol) & (c["k"] < max_iters)
+        if exit_below_width is not None and use_mask:
+            # width-reduction event: hand control back so the caller can
+            # re-slice the exchange plan at the shrunken width and resume
+            go = go & (jnp.sum(c["act"]) >= exit_below_width)
+        return go
+
+    out = _guarded_while(cond, iterate, init)
     x = x0 + out["X"].sum(axis=1)  # line 14: x = Σᵢ (X)ᵢ
     breakdown = bool(out["bd"])
     return SolveResult(
@@ -266,6 +302,7 @@ def ecg_solve(
         active_hist=out["ahist"] if policy is not None else None,
         restarts=int(out["restarts"]) if policy is not None else 0,
         selection=selection,
+        final_carry=out,
     )
 
 

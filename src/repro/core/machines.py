@@ -25,6 +25,11 @@ class MachineParams:
     eager_cutoff: int   # rendezvous-protocol switch (B) — §4.3 cutoff
     f: int = 8          # bytes per float
     R_mem: float = 0.0  # local memory bandwidth (B/s) per process; 0 = flop-bound model
+    dispatch_overhead: float = 0.0  # seconds per executor dispatch (pack /
+    #                                 unpack / ppermute op) — drives the
+    #                                 executor-structural cost model, which
+    #                                 charges plan dispatches instead of the
+    #                                 MPI max-rate terms
 
     def with_ppn(self, ppn: int) -> "MachineParams":
         return dataclasses.replace(self, ppn=ppn)
@@ -42,6 +47,7 @@ BLUE_WATERS = MachineParams(
     gamma=1.0 / 10.4e9,  # ~10.4 GF/s/core sustained (Interlagos)
     eager_cutoff=8192,
     R_mem=4.0e9,         # per-core share of DDR3 stream bandwidth
+    dispatch_overhead=2.0e-6,
 )
 
 #: IBM Power9 + EDR InfiniBand (paper §4.3).
@@ -56,6 +62,7 @@ LASSEN = MachineParams(
     gamma=1.0 / 15.0e9,
     eager_cutoff=16384,
     R_mem=8.0e9,         # per-core share of Power9 stream bandwidth
+    dispatch_overhead=1.5e-6,
 )
 
 #: TPU v5e mapping of the paper's hierarchy: chip ↔ process, pod (ICI domain)
@@ -72,9 +79,28 @@ TPU_V5E_POD = MachineParams(
     eager_cutoff=65536,
     f=4,             # f32 solver data on TPU
     R_mem=819e9,     # HBM bandwidth per chip
+    dispatch_overhead=2.0e-6,  # XLA op issue cost inside the jitted loop
 )
 
-MACHINES = {m.name: m for m in (BLUE_WATERS, LASSEN, TPU_V5E_POD)}
+#: Forced-host-device executor (tests, CI, laptops): ppermute is a memcpy,
+#: so the max-rate network terms are meaningless — the structural model
+#: (dispatches x overhead + bytes / memcpy rate) is the one that ranks
+#: strategies correctly here.  Constants estimated from XLA-CPU op overheads.
+HOST = MachineParams(
+    name="Host",
+    alpha=5.0e-7,
+    alpha_l=2.0e-7,
+    R_N=8.0e9,
+    R_b=4.0e9,       # memcpy-through-buffer rate per "process"
+    R_bl=8.0e9,
+    ppn=4,
+    gamma=1.0 / 5.0e9,
+    eager_cutoff=8192,
+    R_mem=8.0e9,
+    dispatch_overhead=1.5e-5,  # XLA-CPU per-op dispatch (measured O(10us))
+)
+
+MACHINES = {m.name: m for m in (BLUE_WATERS, LASSEN, TPU_V5E_POD, HOST)}
 
 # Roofline hardware constants (per chip) — TPU v5e targets for §Roofline.
 V5E_PEAK_FLOPS = 197e12       # bf16 FLOP/s

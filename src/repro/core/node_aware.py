@@ -30,8 +30,29 @@ the same byte model that splits large messages, applied inside a row.  The
 choice of strategy (and of ``col_split``, tile shape, overlap) is automated
 by the setup-time autotuner in :mod:`repro.tune`.
 
+Width-aware slicing (``plan.at_width``): a plan is compiled for one block
+width t, but the adaptive solver (:mod:`repro.adaptive`) retires search
+directions mid-solve, so after a reduction event only ``t_active < t``
+columns carry data.  ``plan.at_width(t_active)`` returns a cached sub-plan
+whose row/column segments are recomputed for exactly ``t_active`` columns —
+the message payload shrinks to ``t_active·rows·f`` bytes instead of riding
+the full-width plan as zero columns.  Row-granular plans (``col_split == 1``)
+are width-agnostic, so the re-slice is free; col-split plans re-derive their
+segment expansion (not the partition or the communication pattern — the
+plan's message structure is reused, which is what makes the re-slice cheap
+relative to a full ``build_exchange_plan``).
+
+Phase grouping (``plan.phases``): consecutive steps sharing
+``(axis, src, dst)`` form one *phase* — the unit the packed-buffer executor
+dispatches.  Instead of gather → ppermute → scatter per step, the executor
+packs one contiguous send buffer per phase (``kernels/halo_pack``), runs one
+ppermute per nonzero rotation offset, and unpacks once — O(phases) gather/
+scatter dispatches instead of O(steps).  Grouping is validated at build
+time: within a phase no gathered slot is also written, so hoisting all
+gathers ahead of all scatters is always equivalent to the per-step replay.
+
 :func:`simulate_plan` replays any plan on the host in numpy — the bit-exact
-oracle used by the tests and docs.
+oracle used by the tests and docs (``at_width=`` verifies sliced sub-plans).
 """
 
 from __future__ import annotations
@@ -61,6 +82,29 @@ class ExchangeStep:
 
 
 @dataclasses.dataclass
+class ExchangePhase:
+    """Consecutive steps sharing (axis, src, dst) — one packed-buffer round.
+
+    The packed executor gathers all of a phase's segments into ONE contiguous
+    send buffer (``gather_idx``), ppermutes each step's slice (``bounds``
+    delimit them; ``offsets[i] == 0`` slices move locally), and scatters the
+    whole buffer once (``scatter_pos``).
+    """
+
+    axis: str
+    src: str
+    dst: str
+    offsets: tuple[int, ...]      # per constituent step
+    bounds: tuple[int, ...]       # cumulative widths; step i = [bounds[i], bounds[i+1])
+    gather_idx: np.ndarray        # (p, W) — concatenated step gathers
+    scatter_pos: np.ndarray       # (p, W) — concatenated step scatters
+
+    @property
+    def width(self) -> int:
+        return self.gather_idx.shape[1]
+
+
+@dataclasses.dataclass
 class ExchangePlan:
     strategy: str
     n_nodes: int
@@ -69,6 +113,14 @@ class ExchangePlan:
     halo_size: int   # max halo slots over devices (excl. dump slot), in segments
     stage_size: int  # max stage slots over devices (excl. dump slot), in segments
     col_split: int = 1  # column segments per row (1 = whole-row exchange)
+    t: int = 1          # block width the plan was compiled for
+    # width-slicing machinery: rebuild closure attached by build_exchange_plan
+    # (captures the partition-derived structures) + per-width sub-plan cache
+    _rebuild: object = dataclasses.field(default=None, repr=False, compare=False)
+    _width_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+    _phases: list = dataclasses.field(default=None, repr=False, compare=False)
 
     @property
     def p(self) -> int:
@@ -78,6 +130,136 @@ class ExchangePlan:
     def halo_rows(self) -> int:
         """Halo size in *row* units (halo_size counts column segments)."""
         return self.halo_size // self.col_split
+
+    # ----------------------------------------------------- width slicing
+    def at_width(self, t_active: int) -> "ExchangePlan":
+        """Bit-exact sub-plan for ``t_active`` active columns (cached).
+
+        Row/column segments are recomputed so one exchange moves exactly
+        ``t_active`` columns per halo row.  When the existing ``col_split``
+        divides ``t_active`` the index arrays are already exact at that
+        width and are shared (a re-slice is then just bookkeeping); otherwise
+        the segment expansion is re-derived at ``t_active`` via the rebuild
+        closure — reusing the partition structures, never re-partitioning.
+        """
+        t_active = int(t_active)
+        if t_active < 1:
+            raise ValueError(f"t_active must be >= 1, got {t_active}")
+        if t_active == self.t:
+            return self
+        hit = self._width_cache.get(t_active)
+        if hit is not None:
+            return hit
+        if t_active % self.col_split == 0:
+            # segments now carry t_active/col_split columns each; every
+            # gather/scatter index is unchanged, so share the step arrays
+            # (and the computed phases — executors detect the identity and
+            # reuse their device-resident copies)
+            sub = dataclasses.replace(
+                self, t=t_active, _rebuild=self._rebuild, _width_cache={},
+                _phases=self.phases,
+            )
+        elif self._rebuild is not None:
+            sub = self._rebuild(t_active)
+        else:
+            raise ValueError(
+                f"cannot slice a col_split={self.col_split} plan to width "
+                f"{t_active} without its rebuild closure (plan not built by "
+                "build_exchange_plan?)"
+            )
+        self._width_cache[t_active] = sub
+        return sub
+
+    # ----------------------------------------------------- phase grouping
+    @property
+    def phases(self) -> list[ExchangePhase]:
+        """Steps grouped into packed-buffer phases (computed once, validated).
+
+        Consecutive steps sharing (axis, src, dst) merge: their gather and
+        scatter arrays concatenate along the width axis.  Validation asserts
+        the within-phase hazard-freedom the packed executor relies on: for
+        stage-writing phases, no slot gathered by the phase is also written
+        by it, so gathering everything before scattering anything replays
+        identically to the per-step order.
+        """
+        if self._phases is not None:
+            return self._phases
+        groups: list[tuple[tuple, list[ExchangeStep]]] = []
+        for s in self.steps:
+            key = (s.axis, s.src, s.dst)
+            if groups and groups[-1][0] == key:
+                groups[-1][1].append(s)
+            else:
+                groups.append((key, [s]))
+        phases = []
+        for (axis, src, dst), ss in groups:
+            bounds = [0]
+            for s in ss:
+                bounds.append(bounds[-1] + s.width)
+            gather = np.concatenate([s.gather_idx for s in ss], axis=1)
+            scatter = np.concatenate([s.scatter_pos for s in ss], axis=1)
+            if src == dst == "stage":
+                dump = self.stage_size
+                for d in range(self.p):
+                    written = set(scatter[d][scatter[d] < dump].tolist())
+                    read = set(gather[d].tolist())
+                    assert not (written & read), (
+                        f"phase ({axis},{src}->{dst}) has a within-phase "
+                        f"read/write hazard on device {d}; packed execution "
+                        "would reorder it"
+                    )
+            phases.append(
+                ExchangePhase(
+                    axis=axis, src=src, dst=dst,
+                    offsets=tuple(s.offset for s in ss),
+                    bounds=tuple(bounds),
+                    gather_idx=gather, scatter_pos=scatter,
+                )
+            )
+        self._phases = phases
+        return phases
+
+    # ------------------------------------------------- structural accounting
+    def wire_bytes(self, f: int = 8, width: int | None = None) -> int:
+        """Bytes one exchange moves over links (nonzero-offset rounds).
+
+        ``width`` defaults to the plan's compiled width; the executor pads
+        the applied width up to a multiple of ``col_split``, and so does
+        this count — the number a sliced plan reports is exactly what its
+        ppermute buffers carry.
+        """
+        width = self.t if width is None else width
+        segw = -(-width // self.col_split)
+        total = 0
+        for s in self.steps:
+            if s.offset == 0:
+                continue
+            total += int((s.scatter_pos < self._dump(s)).sum()) * segw * f
+        return total
+
+    def local_bytes(self, f: int = 8, width: int | None = None) -> int:
+        """Bytes moved by offset-0 (local staging) rounds of one exchange."""
+        width = self.t if width is None else width
+        segw = -(-width // self.col_split)
+        total = 0
+        for s in self.steps:
+            if s.offset != 0:
+                continue
+            total += int((s.scatter_pos < self._dump(s)).sum()) * segw * f
+        return total
+
+    def dispatch_count(self, packed: bool = True) -> int:
+        """Executor dispatches per exchange.
+
+        The packed executor issues one ``halo_pack`` + one ``halo_unpack``
+        per *phase* plus one ppermute per nonzero rotation offset; the
+        historical per-step executor issued a gather and a scatter per
+        *step* on top of the same ppermutes.
+        """
+        n_perm = sum(1 for s in self.steps if s.offset)
+        if packed:
+            return 2 * len(self.phases) + n_perm
+        return 2 * len(self.steps) + n_perm
 
     def comm_rows(self) -> dict[str, int]:
         """Rows moved per tier (for tests vs CommGraph invariants).
@@ -467,6 +649,12 @@ def build_exchange_plan(
     for s in steps:
         dump = halo_size if s.dst == "halo" else stage_size
         s.scatter_pos = np.where(s.scatter_pos < 0, dump, s.scatter_pos)
+    # width-slicing rebuild closure: reuses the partition (pm) and machine —
+    # at_width only falls back to it when the existing segment granularity
+    # cannot express the requested width exactly
+    rebuild = lambda w: build_exchange_plan(
+        pm, n_nodes, ppn, strategy, t=w, machine=machine, col_split=None
+    )
     return ExchangePlan(
         strategy=strategy,
         n_nodes=n_nodes,
@@ -475,6 +663,8 @@ def build_exchange_plan(
         halo_size=halo_size,
         stage_size=stage_size,
         col_split=cs,
+        t=t,
+        _rebuild=rebuild,
     )
 
 
@@ -546,7 +736,10 @@ def _compile_phase_stage_aware(msgs, axis, n_nodes, ppn, local_index, halo_slot,
 
 
 def simulate_plan(
-    plan: ExchangePlan, pm: PartitionedMatrix, x: np.ndarray
+    plan: ExchangePlan,
+    pm: PartitionedMatrix,
+    x: np.ndarray,
+    at_width: int | None = None,
 ) -> list[np.ndarray]:
     """Host-side numpy replay of an ExchangePlan — the bit-exact oracle.
 
@@ -556,8 +749,12 @@ def simulate_plan(
     correct plan satisfies ``out[d] == x[pm.halo_sources[d]]`` exactly.
     Handles col-split plans (the reshape the executor performs around the
     exchange) and runs without any devices, so tests can verify plans for
-    meshes larger than the host.
+    meshes larger than the host.  ``at_width`` replays
+    ``plan.at_width(at_width)`` instead — the round-trip check for
+    width-sliced sub-plans (``x`` should then carry ``at_width`` columns).
     """
+    if at_width is not None:
+        plan = plan.at_width(at_width)
     x = np.asarray(x)
     if x.ndim == 1:
         x = x[:, None]

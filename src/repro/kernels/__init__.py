@@ -15,8 +15,11 @@ from repro.kernels.bsr_spmbv.ops import (
 )
 from repro.kernels.fused_gram.ops import fused_gram
 from repro.kernels.block_update.ops import block_update, ecg_tail
+from repro.kernels.halo_pack.ops import halo_pack, halo_unpack
 
 __all__ = [
+    "halo_pack",
+    "halo_unpack",
     "bsr_spmbv",
     "bsr_to_block_ell",
     "block_ell_from_csr",

@@ -21,6 +21,18 @@ import jax
 _warned: set[str] = set()
 
 
+def reset_dispatch_warnings() -> None:
+    """Clear the warn-once state.
+
+    The module-level ``_warned`` set otherwise leaks across a test suite: a
+    test that triggers the GPU-fallback warning silences it for every later
+    test in the same process.  ``tests/conftest.py`` calls this between
+    tests; library users only need it when re-enabling
+    ``REPRO_KERNEL_VERBOSE`` diagnostics mid-process.
+    """
+    _warned.clear()
+
+
 def verbose() -> bool:
     """True when REPRO_KERNEL_VERBOSE is set to a truthy value."""
     return os.environ.get("REPRO_KERNEL_VERBOSE", "") not in ("", "0", "false", "False")

@@ -1,0 +1,30 @@
+"""Public ops: packed halo-exchange buffers (Pallas on TPU, oracle elsewhere).
+
+``halo_pack`` assembles one contiguous send buffer for a whole exchange
+phase; ``halo_unpack`` delivers a received buffer into its halo/stage slots.
+Together they replace the per-step gather/scatter chain of the historical
+executor — see :mod:`repro.core.node_aware` (phase grouping) and the packed
+executor in :mod:`repro.sparse.spmbv`.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.dispatch import resolve_dispatch
+from repro.kernels.halo_pack.kernel import halo_pack_pallas, halo_unpack_pallas
+from repro.kernels.halo_pack.ref import halo_pack_ref, halo_unpack_ref
+
+
+def halo_pack(src, idx, use_pallas: bool | None = None):
+    """Pack ``src[idx]`` into one contiguous (len(idx), w) phase buffer."""
+    use_pallas, interpret = resolve_dispatch("halo_pack", use_pallas)
+    if use_pallas:
+        return halo_pack_pallas(src, idx, interpret=interpret)
+    return halo_pack_ref(src, idx)
+
+
+def halo_unpack(dst, buf, pos, use_pallas: bool | None = None):
+    """Scatter a received phase buffer: ``dst.at[pos].set(buf)``."""
+    use_pallas, interpret = resolve_dispatch("halo_unpack", use_pallas)
+    if use_pallas:
+        return halo_unpack_pallas(dst, buf, pos, interpret=interpret)
+    return halo_unpack_ref(dst, buf, pos)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracles for the packed halo-buffer kernels."""
+
+from __future__ import annotations
+
+
+def halo_pack_ref(src, idx):
+    """out[i] = src[idx[i]] — one fused gather for a whole exchange phase."""
+    return src[idx]
+
+
+def halo_unpack_ref(dst, buf, pos):
+    """dst[pos[i]] = buf[i]; untouched slots keep their prior contents."""
+    return dst.at[pos].set(buf)

@@ -55,6 +55,9 @@ def _print_adaptive_summary(res) -> None:
             print(f"  restarts: {res.restarts}")
     elif res.active_hist is not None:
         print(f"  active width constant at t={res.t}")
+    if res.comm_segments and len(res.comm_segments) > 1:
+        trace = ", ".join(f"{it} iters @ width {w}" for w, it in res.comm_segments)
+        print(f"  exchange payload re-sliced: {trace}")
     if res.breakdown:
         print("  BREAKDOWN: solver stopped at the last finite iterate")
 
@@ -76,9 +79,13 @@ def main():
     ap.add_argument("--overlap", action="store_true",
                     help="hide halo exchange behind interior SpMBV compute")
     ap.add_argument("--ell-block", type=int, default=8, help="Block-ELL tile size")
-    ap.add_argument("--tune", default=None, choices=["model", "measure", "off"],
+    ap.add_argument("--tune", default=None,
+                    choices=["model", "model:structural", "measure", "off"],
                     help="autotune strategy/tile/overlap (default: model when "
-                         "--strategy tuned or --t auto, else off)")
+                         "--strategy tuned or --t auto, else off; "
+                         "model:structural ranks strategies by the executor-"
+                         "structural cost — plan dispatches + moved bytes — "
+                         "the right model on host/TPU backends)")
     ap.add_argument("--adaptive", default=None,
                     choices=["off", "rankrev", "reduce", "reduce+restart"],
                     help="in-solve width controller: breakdown-safe rank "

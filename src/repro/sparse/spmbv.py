@@ -2,8 +2,23 @@
 
 The matrix is row-partitioned over a ("node", "proc") device grid; block
 vectors share the row distribution (paper §3).  The halo exchange replays a
-static :class:`~repro.core.node_aware.ExchangePlan` — gather → ppermute →
-scatter rounds — then the local SpMBV runs on [own rows ‖ halo rows].
+static :class:`~repro.core.node_aware.ExchangePlan` — then the local SpMBV
+runs on [own rows ‖ halo rows].
+
+The executor is *phase-packed*: the plan's steps are grouped into phases
+(consecutive rounds sharing axis/src/dst, see ``ExchangePlan.phases``), and
+each phase is executed as ONE ``halo_pack`` kernel (a fused gather into a
+contiguous, persistent send-buffer layout), one ``lax.ppermute`` per
+nonzero rotation offset, and ONE ``halo_unpack`` kernel (fused scatter into
+the halo/stage slots).  Gather/scatter dispatches are therefore O(phases)
+instead of O(steps), and the ppermute payload is exactly the packed bytes.
+
+The executor is also *width-aware*: ``matvec_fn(t_active=...)`` applies the
+operator at a reduced block width through ``plan.at_width(t_active)`` — the
+per-width index arrays are re-sliced on the host (cheap, cached) and the
+wire payload shrinks to ``t_active·rows·f`` bytes.  The adaptive solver
+uses this to stop paying full-width exchange bytes for retired search
+directions (see ``distributed_ecg``).
 
 Three orthogonal execution levers, all fixed at setup time (and all
 selectable by the :mod:`repro.tune` autotuner via ``tune="model"|"measure"``
@@ -64,7 +79,7 @@ from repro.sparse.partition import (
     partition_csr,
     rebased_local_csr,
 )
-from repro.core.node_aware import ExchangePlan, ExchangeStep, build_exchange_plan
+from repro.core.node_aware import ExchangePlan, build_exchange_plan
 from repro.kernels.bsr_spmbv.ops import (
     bsr_spmbv,
     count_block_ell_tiles,
@@ -72,6 +87,7 @@ from repro.kernels.bsr_spmbv.ops import (
 )
 from repro.kernels.fused_gram.ops import fused_gram
 from repro.kernels.block_update.ops import ecg_tail
+from repro.kernels.halo_pack.ops import halo_pack, halo_unpack
 
 
 @dataclasses.dataclass
@@ -96,7 +112,7 @@ class DistributedSpMBV:
     indptr: jax.Array | None   # (p, rmax + 1)
     indices: jax.Array | None  # (p, nnz_max) — local ids; halo ids offset by rmax
     data: jax.Array | None     # (p, nnz_max)
-    # stacked per-step exchange arrays
+    # stacked per-PHASE exchange arrays (packed executor) at the compiled width
     gathers: list[jax.Array]
     scatters: list[jax.Array]
     backend: str = "jnp"
@@ -108,6 +124,8 @@ class DistributedSpMBV:
     split: dict = dataclasses.field(default_factory=dict)
     # TunedConfig when the operator was built via tune= (None otherwise)
     tuned: object = None
+    # per-width device index arrays, filled on demand by width re-slices
+    _width_arrays: dict = dataclasses.field(default_factory=dict)
 
     @property
     def p(self) -> int:
@@ -159,16 +177,19 @@ class DistributedSpMBV:
         return m
 
     # ------------------------------------------------------------- exchange
-    def _exchange(self, x_local: jax.Array, gathers, scatters) -> jax.Array:
-        """Per-device halo exchange.  x_local: (rmax, t) block rows; returns
-        the halo block in row units, (plan.halo_rows, t).
+    def _exchange(self, x_local: jax.Array, plan: ExchangePlan, gathers, scatters) -> jax.Array:
+        """Per-device packed halo exchange.  x_local: (rmax, t) block rows;
+        returns the halo block in row units, (plan.halo_rows, t).
+
+        One ``halo_pack`` + ``halo_unpack`` pair per *phase* (fused gather/
+        scatter over all of the phase's rounds), one ppermute per nonzero
+        rotation offset operating on a static slice of the packed buffer.
 
         Col-split plans index (row, column-segment) slots: the executor
         reshapes ``(rmax, t) -> (rmax·cs, t/cs)`` around the rounds (padding
         t up to a multiple of cs when the applied width differs from the
-        width the plan was tuned for, e.g. the width-1 initial residual)."""
+        width the plan was sliced for, e.g. the width-1 initial residual)."""
         t = x_local.shape[-1]
-        plan = self.plan
         cs = plan.col_split
         if cs > 1:
             tp = -(-t // cs) * cs
@@ -180,16 +201,24 @@ class DistributedSpMBV:
         w = xs.shape[-1]
         halo = jnp.zeros((plan.halo_size + 1, w), x_local.dtype)
         stage = jnp.zeros((plan.stage_size + 1, w), x_local.dtype)
-        for step, g_idx, s_pos in zip(plan.steps, gathers, scatters):
-            src = xs if step.src == "x" else stage
-            buf = src[g_idx]  # (c, w)
-            if step.offset:
-                axis = ("node", "proc") if step.axis == "flat" else step.axis
-                buf = jax.lax.ppermute(buf, axis, _perm(step, plan))
-            if step.dst == "halo":
-                halo = halo.at[s_pos].set(buf)
+        for phase, g_idx, s_pos in zip(plan.phases, gathers, scatters):
+            src = xs if phase.src == "x" else stage
+            buf = halo_pack(src, g_idx)  # (phase.width, w) — one dispatch
+            if any(phase.offsets):
+                axis = ("node", "proc") if phase.axis == "flat" else phase.axis
+                parts = []
+                for i, off in enumerate(phase.offsets):
+                    seg = buf[phase.bounds[i] : phase.bounds[i + 1]]
+                    if off:
+                        seg = jax.lax.ppermute(
+                            seg, axis, _perm(phase.axis, off, plan)
+                        )
+                    parts.append(seg)
+                buf = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+            if phase.dst == "halo":
+                halo = halo_unpack(halo, buf, s_pos)
             else:
-                stage = stage.at[s_pos].set(buf)
+                stage = halo_unpack(stage, buf, s_pos)
         halo = halo[: plan.halo_size]
         if cs > 1:
             halo = halo.reshape(plan.halo_rows, -1)[:, :t]
@@ -218,11 +247,40 @@ class DistributedSpMBV:
         vp = jnp.pad(xfull, ((0, m_pad - xfull.shape[0]), (0, 0)))
         return bsr_spmbv(blocks, indices, vp)
 
+    # ------------------------------------------------- width-sliced arrays
+    def exchange_arrays(self, plan: ExchangePlan):
+        """Stacked per-phase device index arrays for ``plan`` (cached by the
+        plan's width — the host-side cost of a width re-slice event)."""
+        key = (plan.t, plan.col_split)
+        hit = self._width_arrays.get(key)
+        if hit is not None:
+            return hit
+        sharding = NamedSharding(self.mesh, P(("node", "proc")))
+        put = lambda arr: jax.device_put(jnp.asarray(arr), sharding)
+        arrays = (
+            [put(ph.gather_idx) for ph in plan.phases],
+            [put(ph.scatter_pos) for ph in plan.phases],
+        )
+        self._width_arrays[key] = arrays
+        return arrays
+
     # ------------------------------------------------------------------ api
-    def matvec_fn(self):
-        """Returns f(V_sharded (n_padded, t)) -> (n_padded, t), jit-able."""
-        plan = self.plan
-        k = len(plan.steps)
+    def matvec_fn(self, t_active: int | None = None):
+        """Returns f(V_sharded (n_padded, t)) -> (n_padded, t), jit-able.
+
+        ``t_active`` applies the operator through the width-sliced sub-plan
+        ``plan.at_width(t_active)`` — same matrix arrays, re-sliced exchange
+        index arrays, wire payload of exactly t_active columns.  The block
+        vectors passed to the returned function must then carry ``t_active``
+        columns."""
+        plan = self.plan if t_active is None else self.plan.at_width(t_active)
+        if plan is self.plan or plan.phases is self.plan.phases:
+            # width-sliced plans with shared index arrays (col_split divides
+            # t_active) reuse the device-resident copies — no re-upload
+            gathers_, scatters_ = self.gathers, self.scatters
+        else:
+            gathers_, scatters_ = self.exchange_arrays(plan)
+        k = len(plan.phases)
 
         def per_device(v, csr, ell, split, *exchange_arrays):
             gathers = [a[0] for a in exchange_arrays[:k]]
@@ -231,7 +289,7 @@ class DistributedSpMBV:
             v = v.reshape(self.rmax, -1)
             t = v.shape[1]
             if not self.overlap:
-                halo = self._exchange(v, gathers, scatters)
+                halo = self._exchange(v, plan, gathers, scatters)
                 if self.backend == "pallas":
                     xfull = jnp.concatenate([v, halo], axis=0)
                     w = self._ell_spmbv(xfull, ell["blocks"][0], ell["indices"][0])
@@ -255,7 +313,7 @@ class DistributedSpMBV:
                             v, sp["int_indptr"], sp["int_indices"], sp["int_data"], n_int
                         )
                     w = w.at[sp["int_rows"]].add(w_int)
-                halo = self._exchange(v, gathers, scatters)
+                halo = self._exchange(v, plan, gathers, scatters)
                 # Only the boundary rows wait on the halo.
                 if n_bnd:
                     xfull = jnp.concatenate([v, halo], axis=0)
@@ -274,7 +332,7 @@ class DistributedSpMBV:
             per_device,
             mesh=self.mesh,
             in_specs=(self.vec_spec, dev_specs, dev_specs, dev_specs)
-            + (dev_specs,) * (2 * len(plan.steps)),
+            + (dev_specs,) * (2 * k),
             out_specs=self.vec_spec,
             check_rep=False,
         )
@@ -285,21 +343,41 @@ class DistributedSpMBV:
                 if self.indptr is None
                 else {"indptr": self.indptr, "indices": self.indices, "data": self.data}
             )
-            return smapped(
-                v, csr, self.ell, self.split, *self.gathers, *self.scatters
-            )
+            return smapped(v, csr, self.ell, self.split, *gathers_, *scatters_)
+
+        return apply
+
+    def masked_matvec_fn(self, t_active: int):
+        """Width-compacted apply for the adaptive solver.
+
+        Returns ``f(V (n_padded, t), active (t,) bool) -> (n_padded, t)``:
+        the ``t_active`` active columns (zero-masked block vectors guarantee
+        the rest are zero) are gathered to the front, pushed through the
+        width-``t_active`` operator — so the halo exchange moves exactly
+        ``t_active`` columns of bytes — and scattered back into a zero
+        (n, t) block.  Bit-exact vs the full-width apply: column gather/
+        scatter is pure data movement and A·0 = 0 for the retired columns.
+        """
+        apply_active = self.matvec_fn(t_active=t_active)
+
+        def apply(v, active):
+            # stable argsort: active columns first, original order preserved
+            cols = jnp.argsort(~active)[:t_active]
+            vc = jnp.take(v, cols, axis=1)
+            wc = apply_active(vc)
+            return jnp.zeros_like(v).at[:, cols].set(wc)
 
         return apply
 
 
-def _perm(step: ExchangeStep, plan: ExchangePlan):
-    if step.axis == "proc":
+def _perm(axis: str, offset: int, plan: ExchangePlan):
+    if axis == "proc":
         n = plan.ppn
-    elif step.axis == "node":
+    elif axis == "node":
         n = plan.n_nodes
     else:
         n = plan.p
-    return [(i, (i + step.offset) % n) for i in range(n)]
+    return [(i, (i + offset) % n) for i in range(n)]
 
 
 def _gather_csr_rows(ptr, ix, dat, rows):
@@ -377,7 +455,9 @@ def make_distributed_spmbv(
 
     ``tune`` hands those three knobs to the setup-time autotuner
     (:mod:`repro.tune`): ``"model"`` selects (strategy, tile, overlap) from
-    the paper's performance models, ``"measure"`` from setup-time
+    the paper's analytic performance models, ``"model:structural"`` from the
+    executor-structural model (plan dispatches + moved bytes — the right
+    ranking on host/TPU backends), ``"measure"`` from setup-time
     microbenchmarks on ``mesh``, and a :class:`repro.tune.TunedConfig`
     applies a previously computed choice.  ``"off"`` (default) keeps the
     explicit arguments.  ``col_split`` overrides the nodal-optimal wide-halo
@@ -395,7 +475,7 @@ def make_distributed_spmbv(
 
         if isinstance(tune, TunedConfig):
             tuned = tune
-        elif tune in ("model", "measure"):
+        elif tune in ("model", "model:structural", "measure"):
             tuned = run_tune(
                 a, t=t, machine=machine, n_nodes=n_nodes, ppn=ppn,
                 pm=pm, backend=backend, mode=tune, mesh=mesh,
@@ -491,8 +571,8 @@ def make_distributed_spmbv(
         indptr=put(indptr) if indptr is not None else None,
         indices=put(indices) if indices is not None else None,
         data=put(data) if data is not None else None,
-        gathers=[put(s.gather_idx) for s in plan.steps],
-        scatters=[put(s.scatter_pos) for s in plan.steps],
+        gathers=[put(ph.gather_idx) for ph in plan.phases],
+        scatters=[put(ph.scatter_pos) for ph in plan.phases],
         backend=backend,
         overlap=overlap,
         ell_block=(br, bc),
@@ -550,8 +630,14 @@ def distributed_ecg(
     solve width controller ("rankrev" | "reduce" | "reduce+restart" | a
     :class:`repro.adaptive.ReductionPolicy`): the active-width mask lives in
     the replicated t-wide coefficient space, so the per-device block vectors
-    stay (rmax, t) with zero-masked columns and the exchange plan, Pallas
-    kernels, and two-psum structure are untouched.
+    stay (rmax, t) with zero-masked columns and the Pallas kernels and
+    two-psum structure are untouched.  The halo exchange, however, is
+    *width-aware*: for non-restarting policies the solve runs in width
+    segments — the active mask is threaded into the exchange (retired
+    columns are compacted out of the wire payload), and each reduction
+    event triggers a cheap ``plan.at_width`` re-slice so subsequent
+    iterations move ``t_active·rows·f`` bytes instead of full-width zeros.
+    ``SolveResult.comm_segments`` records the (width, iterations) trace.
     """
     from repro.core.ecg import ecg_solve
 
@@ -566,6 +652,7 @@ def distributed_ecg(
         t, selection, adaptive = resolve_auto_t(
             t, adaptive, a=a, b=b, candidates=t_candidates, tol=tol,
             machine=machine, n_nodes=n_nodes, ppn=ppn, backend=backend,
+            tune_mode=tune if tune in ("model", "model:structural") else "model",
         )
         if tune is None or tune == "off":
             # execute the exact config the choice was modeled with — without
@@ -654,20 +741,55 @@ def distributed_ecg(
     def split(r, t_):
         return r[:, None] * onehot
 
-    result = ecg_solve(
-        apply_a,
-        b_sh,
-        t=t,
-        tol=tol,
-        max_iters=max_iters,
-        split=split,
-        gram1=gram1,
-        gram2=gram2,
-        sqnorm=sqnorm,
-        tail=tail,
-        backend=backend,
+    from repro.adaptive.reduce import resolve_policy
+
+    common = dict(
+        t=t, tol=tol, max_iters=max_iters, split=split, gram1=gram1,
+        gram2=gram2, sqnorm=sqnorm, tail=tail, backend=backend,
         adaptive=adaptive,
     )
+    policy = resolve_policy(adaptive)
+    if policy is None or policy.restart:
+        # fixed-width exchange (restart can re-enlarge mid-loop, so the
+        # full-width plan must stay wired in)
+        result = ecg_solve(apply_a, b_sh, **common)
+    else:
+        # Width-segmented solve: each segment runs the jitted loop with the
+        # exchange compacted to the current static active width; when the
+        # reduction controller retires directions the loop exits, the plan
+        # is re-sliced at the new width (plan.at_width — cached host work,
+        # no rebuild), and the solve resumes from the same carry.  The
+        # iterates are the ones the monolithic loop would produce — only
+        # the halo-exchange payload shrinks.
+        t_seg, carry, k_prev, segments = t, None, 0, []
+        while True:
+            masked = (
+                (lambda z, act: apply_a(z)) if t_seg == t
+                else op.masked_matvec_fn(t_seg)
+            )
+            result = ecg_solve(
+                apply_a, b_sh, **common, a_apply_masked=masked,
+                exit_below_width=t_seg, resume_state=carry,
+            )
+            carry = result.final_carry
+            it_seg = result.n_iters - k_prev
+            segments.append((t_seg, it_seg))
+            k_prev = result.n_iters
+            n_act = int(jnp.sum(carry["act"]))
+            if (
+                result.converged
+                or result.breakdown
+                or result.n_iters >= max_iters
+                or n_act >= t_seg
+                # every direction dead (rank-0 Gram without a non-finite
+                # iterate) or a zero-progress segment: nothing a narrower
+                # re-slice could fix — stop instead of spinning
+                or n_act == 0
+                or it_seg == 0
+            ):
+                break
+            t_seg = max(n_act, 1)  # width-reduction event -> re-slice
+        result.comm_segments = segments
     if selection is not None:
         result.selection = selection
         if op.tuned is not None:

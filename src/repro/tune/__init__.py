@@ -12,8 +12,12 @@ three t-dependent execution knobs of ``repro.sparse.spmbv``:
   ``max(T_interior, T_exchange) + T_boundary`` vs ``T_exchange + T_local``.
 
 ``tune(..., mode="model")`` evaluates the models only (pure host work, no
-devices); ``mode="measure"`` calibrates with setup-time microbenchmarks on a
-real mesh (``repro.tune.microbench``).  Both return a
+devices); ``mode="model:structural"`` swaps the exchange term for the
+executor-structural model — each strategy's compiled plan charged
+``dispatches × overhead + moved bytes`` — which ranks correctly on host/TPU
+backends where the MPI max-rate terms do not apply; ``mode="measure"``
+calibrates with setup-time microbenchmarks on a real mesh
+(``repro.tune.microbench``).  All return a
 :class:`~repro.tune.autotune.TunedConfig` that
 ``make_distributed_spmbv(..., tune=cfg)`` / ``distributed_ecg(..., tune=...)``
 apply verbatim.  See ``docs/tuning.md`` for the model inputs and worked
@@ -31,6 +35,8 @@ from repro.tune.autotune import (
     TileStats,
     TunedConfig,
     predict_config,
+    structural_exchange_cost,
+    structural_exchange_costs,
     tile_stats,
     tile_time,
     tune,
@@ -42,6 +48,8 @@ __all__ = [
     "TileStats",
     "TunedConfig",
     "predict_config",
+    "structural_exchange_cost",
+    "structural_exchange_costs",
     "tile_stats",
     "tile_time",
     "tune",

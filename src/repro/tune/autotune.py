@@ -20,6 +20,18 @@ adds no device work:
 The selection is a joint argmin over the full (strategy x tile x overlap)
 grid — the interaction matters because a faster exchange shrinks the window
 the interior compute must cover.
+
+Two exchange-cost models are selectable (``mode=``):
+
+* ``"model"`` — the paper's analytic max-rate terms (eqs. 3.1–3.4, 4.2–4.4)
+  over Table-1 message statistics.  Right on an MPI cluster whose
+  :class:`MachineParams` are calibrated.
+* ``"model:structural"`` — the *executor-structural* model: each strategy's
+  actual :class:`~repro.core.node_aware.ExchangePlan` is compiled and charged
+  ``dispatches × dispatch_overhead + wire_bytes/R_b + local_bytes/R_bl``.
+  This is what the shard_map executor really costs on host/TPU backends,
+  where ppermute is a memcpy/ICI hop and per-op dispatch overhead — not NIC
+  injection — dominates; the max-rate model mis-ranks strategies there.
 """
 
 from __future__ import annotations
@@ -186,6 +198,48 @@ def _split_overhead(pm: PartitionedMatrix, t: int, machine: MachineParams) -> fl
     return extra
 
 
+# ------------------------------------------------------- structural model
+def structural_exchange_cost(
+    plan, machine: MachineParams, width: int | None = None
+) -> float:
+    """Executor-structural seconds for one halo exchange of ``plan``.
+
+    cost = dispatches × dispatch_overhead + wire_bytes/R_b + local_bytes/R_bl
+    — the ROADMAP model of what the shard_map executor actually does: a
+    fixed number of pack/ppermute/unpack ops (the packed executor's
+    O(phases) dispatch count) plus the bytes they move.  ``width`` evaluates
+    the byte terms at a reduced active width (``plan.at_width`` payloads).
+    """
+    disp = plan.dispatch_count(packed=True) * machine.dispatch_overhead
+    wire = plan.wire_bytes(machine.f, width=width) / machine.R_b
+    local = plan.local_bytes(machine.f, width=width) / machine.R_bl
+    return disp + wire + local
+
+
+def structural_exchange_costs(
+    pm: PartitionedMatrix,
+    t: int,
+    machine: MachineParams,
+    n_nodes: int,
+    ppn: int,
+    strategies=STRATEGIES,
+) -> tuple[dict[str, float], dict]:
+    """Compile each strategy's actual plan and charge the structural model.
+
+    Returns ``(seconds per strategy, plans per strategy)`` — the plans are
+    reused so the winning config's ``col_split`` matches what the builder
+    will produce.
+    """
+    from repro.core.node_aware import build_exchange_plan
+
+    plans = {
+        s: build_exchange_plan(pm, n_nodes, ppn, s, t=t, machine=machine)
+        for s in strategies
+    }
+    costs = {s: structural_exchange_cost(p, machine) for s, p in plans.items()}
+    return costs, plans
+
+
 # --------------------------------------------------------------- prediction
 def predict_config(
     pm: PartitionedMatrix,
@@ -196,9 +250,15 @@ def predict_config(
     ts: TileStats,
     overlap: bool,
     backend: str = "pallas",
+    t_exch: float | None = None,
 ) -> float:
-    """Modeled seconds for one distributed SpMBV under a full config."""
-    t_exch = t_p2p(g, t, machine, strategy)
+    """Modeled seconds for one distributed SpMBV under a full config.
+
+    ``t_exch`` overrides the exchange term (e.g. with the structural model's
+    plan-derived cost); default is the analytic max-rate p2p model.
+    """
+    if t_exch is None:
+        t_exch = t_p2p(g, t, machine, strategy)
     if backend == "pallas":
         t_local = tile_time(ts, t, machine)
         block_row = ts.br
@@ -238,11 +298,15 @@ def tune(
 ) -> TunedConfig:
     """Jointly select (strategy, tile shape, overlap) for ``a`` at width t.
 
-    ``mode="model"`` is pure host work over the paper's performance models;
-    ``mode="measure"`` times the candidate configs on ``mesh`` (required)
-    with setup-time microbenchmarks — the calibration path when the machine
-    constants are in doubt.  ``machine`` defaults to the TPU-v5e parameter
-    set; its byte width ``f`` is re-derived from the matrix dtype.
+    ``mode="model"`` is pure host work over the paper's analytic performance
+    models; ``mode="model:structural"`` replaces the exchange term with the
+    executor-structural model (compiles each strategy's actual plan and
+    charges dispatches + moved bytes — the right ranking on host/TPU
+    backends, see module docstring); ``mode="measure"`` times the candidate
+    configs on ``mesh`` (required) with setup-time microbenchmarks — the
+    calibration path when the machine constants are in doubt.  ``machine``
+    defaults to the TPU-v5e parameter set; its byte width ``f`` is
+    re-derived from the matrix dtype.
     """
     if mesh is not None and (n_nodes is None or ppn is None):
         n_nodes, ppn = mesh.devices.shape
@@ -262,8 +326,9 @@ def tune(
         return tune_measured(
             a, mesh, t, backend=backend, tiles=tiles, machine=machine, pm=pm
         )
-    if mode != "model":
+    if mode not in ("model", "model:structural"):
         raise ValueError(f"unknown tune mode {mode!r}")
+    structural = mode == "model:structural"
 
     g = build_comm_graph(pm, ppn=ppn)
     rmax = pm.part.max_local_rows
@@ -274,13 +339,20 @@ def tune(
         cand_tiles = [(8, 8)]  # tile shape is irrelevant for the CSR backend
     stats = {tile: tile_stats(pm, *tile) for tile in cand_tiles}
 
+    plans = None
+    if structural:
+        exch, plans = structural_exchange_costs(pm, t, machine, n_nodes, ppn)
+    else:
+        exch = {s: t_p2p(g, t, machine, s) for s in STRATEGIES}
+
     grid: dict[str, float] = {}
     best, best_time = None, math.inf
     for strategy in STRATEGIES:
         for tile in cand_tiles:
             for overlap in (False, True):
                 sec = predict_config(
-                    pm, g, t, machine, strategy, stats[tile], overlap, backend
+                    pm, g, t, machine, strategy, stats[tile], overlap,
+                    backend, t_exch=exch[strategy],
                 )
                 grid[f"{strategy}/{tile[0]}x{tile[1]}/"
                      f"{'overlap' if overlap else 'blocking'}"] = sec
@@ -290,12 +362,15 @@ def tune(
 
     col_split = 1
     if strategy == "optimal":
-        from repro.core.node_aware import _auto_col_split, to_node_rows
+        if plans is not None:
+            col_split = plans["optimal"].col_split
+        else:
+            from repro.core.node_aware import _auto_col_split, to_node_rows
 
-        col_split = _auto_col_split(to_node_rows(pm, ppn), t, machine, ppn)
+            col_split = _auto_col_split(to_node_rows(pm, ppn), t, machine, ppn)
 
     predicted = {
-        "p2p": {s: t_p2p(g, t, machine, s) for s in STRATEGIES},
+        "p2p": dict(exch),
         "local": {
             f"{br}x{bc}": tile_time(st, t, machine)
             for (br, bc), st in stats.items()
@@ -303,6 +378,15 @@ def tune(
         "grid": grid,
         "best": best_time,
     }
+    if structural:
+        predicted["plan_stats"] = {
+            s: dict(
+                dispatches=pl.dispatch_count(packed=True),
+                wire_bytes=pl.wire_bytes(machine.f),
+                local_bytes=pl.local_bytes(machine.f),
+            )
+            for s, pl in plans.items()
+        }
     return TunedConfig(
         strategy=strategy,
         br=tile[0],
@@ -311,7 +395,7 @@ def tune(
         overlap=overlap,
         backend=backend,
         t=t,
-        mode="model",
+        mode=mode,
         col_split=col_split,
         machine=machine,
         predicted=predicted,

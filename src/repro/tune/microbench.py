@@ -33,8 +33,10 @@ def measure_config(
     machine=None,
     pm: PartitionedMatrix | None = None,
     repeats: int = 3,
+    seed: int = 0,
 ) -> float:
-    """Wall microseconds per distributed SpMBV application for one config."""
+    """Wall microseconds per distributed SpMBV application for one config
+    (fixed operand ``seed``, median of ``repeats`` — reproducible on hosts)."""
     import jax
 
     # the one warmup+median timer shared with the benchmark sweeps, so
@@ -47,7 +49,7 @@ def measure_config(
         backend=backend, overlap=overlap, ell_block=ell_block,
     )
     f = jax.jit(op.matvec_fn())
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     v = op.shard_vector(rng.standard_normal((a.shape[0], t)))
     return _timeit(f, v, repeats=repeats)
 

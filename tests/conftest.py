@@ -16,3 +16,18 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(1234)
+
+
+@pytest.fixture(autouse=True)
+def _reset_dispatch_warnings():
+    """Isolate the kernel dispatchers' warn-once state per test.
+
+    Without this, the first test that triggers a GPU-fallback warning
+    consumes it for the whole process and later tests asserting on the
+    warning (or its absence) become order-dependent.
+    """
+    from repro.kernels.dispatch import reset_dispatch_warnings
+
+    reset_dispatch_warnings()
+    yield
+    reset_dispatch_warnings()

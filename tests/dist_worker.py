@@ -183,6 +183,14 @@ def check_adaptive_and_auto_t():
                               max_iters=300, adaptive="reduce")
     assert seq.converged and res.converged
     assert abs(res.n_iters - seq.n_iters) <= 2, (res.n_iters, seq.n_iters)
+    # width-aware exchange: the reduction event re-sliced the plan, the tail
+    # segment ran at the reduced width, and the wire payload shrank with it
+    segs = res.comm_segments
+    assert segs is not None and segs[0][0] == t and segs[-1][0] == m, segs
+    assert sum(it for _, it in segs) == res.n_iters, (segs, res.n_iters)
+    by_full = op.plan.wire_bytes(8)
+    by_red = op.plan.at_width(m).wire_bytes(8)
+    assert by_red * t == by_full * m, (by_full, by_red)  # exact t_active/t cut
     x = op.unshard(res.x)
     relres = np.linalg.norm(ad @ x - b) / np.linalg.norm(b)
     assert relres < 1e-6, relres
@@ -266,6 +274,37 @@ def check_adaptive_opcode_count():
     print(f"adaptive opcode count OK (all-reduce x{counts[True]} per iteration, unchanged)")
 
 
+def check_packed_exchange_lowering():
+    """The packed-buffer executor's lowered collective structure: the SpMBV
+    itself carries ZERO all-reduces at every active width (so the §3.1
+    two-psum iteration invariant is preserved verbatim — check_adaptive_
+    opcode_count exercises the full body against the same executor), and
+    exactly one collective-permute per nonzero rotation offset of the plan
+    — packing fused the gathers/scatters, not the rotations."""
+    mesh = jax.make_mesh((2, 4), ("node", "proc"))
+    a = dg_laplace_2d((8, 6), block=4)
+    for strategy in ("standard", "2step", "3step", "optimal"):
+        op = make_distributed_spmbv(a, mesh, strategy, t=8, machine=BLUE_WATERS)
+        n_perm_plan = sum(1 for s in op.plan.steps if s.offset)
+        for ta in (8, 2):
+            plan_w = op.plan.at_width(ta)
+            n_perm_w = sum(1 for s in plan_w.steps if s.offset)
+            sds = jax.ShapeDtypeStruct((op.n_padded, ta), jnp.float64)
+            txt = jax.jit(op.matvec_fn(t_active=None if ta == 8 else ta)) \
+                .lower(sds).compile().as_text()
+            n_ar = txt.count(" all-reduce(")
+            n_cp = txt.count(" collective-permute(") + txt.count(
+                " collective-permute-start("
+            )
+            assert n_ar == 0, (strategy, ta, n_ar)
+            assert n_cp == n_perm_w, (strategy, ta, n_cp, n_perm_w)
+        assert n_perm_plan == sum(1 for s in op.plan.at_width(2).steps if s.offset), (
+            strategy, "re-slice must not change the rotation structure",
+        )
+    print("packed exchange lowering OK (0 all-reduce, 1 collective-permute "
+          "per rotation, at full and reduced widths)")
+
+
 def check_two_psums_per_iteration():
     """The §3.1 discipline: the iteration body must carry exactly 2 psums
     (plus the convergence-norm reduction) — inspect the lowered HLO.  Count
@@ -314,5 +353,6 @@ if __name__ == "__main__":
     check_tuned_and_col_split()
     check_adaptive_and_auto_t()
     check_adaptive_opcode_count()
+    check_packed_exchange_lowering()
     check_two_psums_per_iteration()
     print("ALL DISTRIBUTED CHECKS PASSED")

@@ -294,7 +294,7 @@ class TestKernelDispatch:
         from repro.kernels.fused_gram.ops import fused_gram
 
         monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
-        monkeypatch.setattr(dispatch, "_warned", set())
+        dispatch.reset_dispatch_warnings()  # conftest resets too; explicit here
         monkeypatch.setenv("REPRO_KERNEL_VERBOSE", "1")
         m = jnp.ones((8, 2))
         with pytest.warns(RuntimeWarning, match="no Pallas GPU lowering"):
@@ -310,7 +310,7 @@ class TestKernelDispatch:
         from repro.kernels.bsr_spmbv.ops import bsr_spmbv
 
         monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
-        monkeypatch.setattr(dispatch, "_warned", set())
+        dispatch.reset_dispatch_warnings()
         monkeypatch.delenv("REPRO_KERNEL_VERBOSE", raising=False)
         blocks = jnp.ones((1, 1, 4, 4))
         idx = jnp.zeros((1, 1), jnp.int32)
