@@ -44,8 +44,8 @@ def main() -> None:
     import jax.numpy as jnp
 
     from repro.adaptive import select_t
-    from repro.core import ecg_solve
-    from repro.sparse import dg_laplace_2d, fd_laplace_2d, csr_spmbv
+    from repro.solver import AdaptiveConfig, ECGSolver, SolverConfig
+    from repro.sparse import dg_laplace_2d, fd_laplace_2d
 
     if args.smoke:
         a = fd_laplace_2d(16)  # 256 rows
@@ -56,26 +56,30 @@ def main() -> None:
     n = a.shape[0]
     rng = np.random.default_rng(0)
     b = rng.standard_normal(n)
-    apply_a = lambda V: csr_spmbv(a, V)
     cands = sorted({t for t in args.t if t <= n})
     print(f"# adaptive_sweep: {n} rows, {a.nnz} nnz, t in {cands}, tol={args.tol:g}")
 
     sel = select_t(a, b, candidates=cands, tol=args.tol)
     print(sel.summary())
 
-    def timed_solve(bb, t, **kw):
-        res = ecg_solve(apply_a, jnp.asarray(bb), t=t, tol=args.tol,
-                        max_iters=max_iters, **kw)  # warm-up + compile
+    def timed_solve(matrix, bb, t, adaptive=None):
+        # compile-once / solve-many: the first solve traces + compiles, the
+        # timed second solve is a pure jit-cache hit on the same handle
+        solver = ECGSolver.build(matrix, config=SolverConfig(
+            t=t, tol=args.tol, max_iters=max_iters,
+            adaptive=AdaptiveConfig(policy=adaptive),
+        ))
+        res = solver.solve(bb)  # warm-up + compile
         t0 = time.perf_counter()
-        res = ecg_solve(apply_a, jnp.asarray(bb), t=t, tol=args.tol,
-                        max_iters=max_iters, **kw)
+        res = solver.solve(bb)
         jax.block_until_ready(res.x)
+        assert solver.stats.traces == 1, "timed solve must not retrace"
         return res, time.perf_counter() - t0
 
     rows = []
     print("name,iters,wall_s,model_total_s,converged,breakdown")
     for t in cands:
-        res, wall = timed_solve(b, t)
+        res, wall = timed_solve(a, b, t)
         model = sel.table[t]["total_cost_s"]
         rows.append(dict(
             name=f"adaptive/fixed_t{t}", mode="fixed", t=t, iters=res.n_iters,
@@ -86,7 +90,7 @@ def main() -> None:
               f"{res.converged},{res.breakdown}", flush=True)
 
     # auto-t: reuses the selection above (same model) and solves at the pick
-    res_auto, wall_auto = timed_solve(b, sel.t, adaptive="rankrev")
+    res_auto, wall_auto = timed_solve(a, b, sel.t, adaptive="rankrev")
     rows.append(dict(
         name="adaptive/auto_t", mode="auto", t=sel.t, iters=res_auto.n_iters,
         wall_s=wall_auto, model_total_s=sel.table[sel.t]["total_cost_s"],
@@ -101,9 +105,10 @@ def main() -> None:
     m = max(t_def // 2, 1)
     b_def = np.zeros(n)
     b_def[: (m * n) // t_def] = rng.standard_normal((m * n) // t_def)
-    res_break = ecg_solve(apply_a, jnp.asarray(b_def), t=t_def, tol=args.tol,
-                          max_iters=max_iters)
-    res_red, wall_red = timed_solve(b_def, t_def, adaptive="reduce")
+    res_break = ECGSolver.build(a, config=SolverConfig(
+        t=t_def, tol=args.tol, max_iters=max_iters,
+    )).solve(jnp.asarray(b_def))
+    res_red, wall_red = timed_solve(a, b_def, t_def, adaptive="reduce")
     events = res_red.reduction_events()
     # unmeasured fields are null, not NaN — bare NaN literals are invalid JSON
     rows.append(dict(
@@ -136,13 +141,13 @@ def main() -> None:
         am = suite_surrogate(name, scale=scale)
         nm = am.shape[0]
         bm = np.random.default_rng(1).standard_normal(nm)
-        apply_m = lambda V, _a=am: csr_spmbv(_a, V)
         sel_m = select_t(am, bm, candidates=calib_t, tol=args.tol)
         per_t, errs = {}, []
         for t in calib_t:
             pred = sel_m.table[t]["est_iters"]
-            res_m = ecg_solve(apply_m, jnp.asarray(bm), t=t, tol=args.tol,
-                              max_iters=max_iters, adaptive="rankrev")
+            res_m = ECGSolver.build(am, config=SolverConfig(
+                t=t, tol=args.tol, max_iters=max_iters, adaptive="rankrev",
+            )).solve(jnp.asarray(bm))
             actual = res_m.n_iters
             err = abs(pred - actual) / max(actual, 1)
             errs.append(err)
@@ -169,6 +174,10 @@ def main() -> None:
     best_wall = min(fixed_walls, key=fixed_walls.get)
     summary = dict(
         auto_t=sel.t,
+        # probe early-stop: iterations each candidate's probe actually ran
+        # before its fitted rate stabilized (vs the probe_iters budget)
+        probe_iters_budget=sel.probe_iters,
+        probe_iters_used={str(t): v for t, v in sel.probe_iters_used.items()},
         best_fixed_model_t=best_fixed,
         best_fixed_wall_t=best_wall,
         posthoc_total_s={str(t): v for t, v in posthoc.items()},

@@ -20,10 +20,18 @@ Two measurements, one table:
   (it is t_active/t = 0.25× by construction), with the solve converging to
   the same answer.
 
+A third measurement rides along: the **measured per-dispatch overhead** of
+the packed executor's pack/ppermute/unpack triple
+(``repro.tune.measure_dispatch_overhead``), recorded as
+``summary.dispatch_overhead_measured_s`` — the calibration input for
+``MachineParams.dispatch_overhead`` and the ``tune="model:structural"``
+cost model.
+
 Writes machine-readable ``BENCH_comm_sweep.json``; the CI bench-smoke job
 asserts the byte ratios stay within 15% of t_active/t and the ≤ 0.35×
 payload criterion.  Fixed RNG seed + structural byte accounting make the
-numbers bit-reproducible run-to-run.
+numbers bit-reproducible run-to-run (the measured dispatch overhead is the
+one wall-clock-derived field).
 """
 
 import argparse
@@ -84,8 +92,9 @@ def main() -> None:
     import jax.numpy as jnp
 
     from repro.core.machines import BLUE_WATERS
+    from repro.solver import CommConfig, ECGSolver, SolverConfig
     from repro.sparse import dg_laplace_2d, fd_laplace_2d
-    from repro.sparse.spmbv import distributed_ecg, make_distributed_spmbv
+    from repro.tune import measure_dispatch_overhead
 
     n_dev = len(jax.devices())
     assert n_dev >= 8, f"need >= 8 devices, got {n_dev}"
@@ -101,8 +110,13 @@ def main() -> None:
 
     rows, ratio_checks = [], []
     print("name,plan_bytes,hlo_bytes,dispatches_packed,dispatches_perstep")
+    pm = None
     for strategy in ("standard", "2step", "3step", "optimal"):
-        op = make_distributed_spmbv(a, mesh, strategy, t=t, machine=BLUE_WATERS)
+        solver = ECGSolver.build(a, mesh, SolverConfig(
+            t=t, comm=CommConfig(strategy=strategy, machine=BLUE_WATERS),
+        ), pm=pm)
+        pm = solver.partition  # reuse the row partition across strategy builds
+        op = solver.op
         full_plan = op.plan.wire_bytes(f)
         sds = jax.ShapeDtypeStruct((op.n_padded, t), jnp.float64)
         full_hlo = None
@@ -138,8 +152,12 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     b_def = np.zeros(n)
     b_def[: (m * n) // t] = rng.standard_normal((m * n) // t)
-    res, op = distributed_ecg(a, b_def, mesh, t=t, strategy="3step",
-                              tol=1e-8, max_iters=600, adaptive="reduce")
+    solver = ECGSolver.build(a, mesh, SolverConfig(
+        t=t, tol=1e-8, max_iters=600, adaptive="reduce",
+        comm=CommConfig(strategy="3step", machine=BLUE_WATERS),
+    ), pm=pm)
+    res = solver.solve(b_def)
+    op = solver.op
     segs = res.comm_segments or [(t, res.n_iters)]
     full_bytes = op.plan.wire_bytes(f)
     seg_bytes = [(w, it, op.plan.at_width(w).wire_bytes(f)) for w, it in segs]
@@ -150,6 +168,13 @@ def main() -> None:
     print(f"# solve t={t}->t_active={tail_w}: segments={segs} "
           f"bytes/iter {full_bytes} -> {tail_bytes} ({tail_ratio:.3f}x, "
           f"avg {avg_bytes:.0f}) converged={res.converged}")
+
+    # ---- measured per-dispatch overhead (pack/ppermute/unpack microbench):
+    # the constant the structural cost model charges per executor op —
+    # calibrate MachineParams.dispatch_overhead from this on a new machine
+    overhead_s = measure_dispatch_overhead(mesh)
+    print(f"# measured dispatch overhead: {overhead_s*1e6:.1f}us/op "
+          f"(HOST model constant: 15.0us)")
 
     ratio_ok = all(
         abs(c["plan_ratio"] / c["expect"] - 1.0) <= 0.15
@@ -162,6 +187,7 @@ def main() -> None:
     }
     summary = dict(
         bytes_ratio_within_15pct=bool(ratio_ok),
+        dispatch_overhead_measured_s=overhead_s,
         reduced_solve=dict(
             t=t, t_active=tail_w, segments=segs,
             bytes_per_iter_full=full_bytes, bytes_per_iter_tail=tail_bytes,

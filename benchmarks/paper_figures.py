@@ -32,8 +32,9 @@ def _machines():
 # ---------------------------------------------------------------- Fig 3.2
 def fig3_2_convergence():
     """CG vs ECG iterations to 1e-6 on a reduced Example 2.1 (DG Laplace)."""
-    from repro.sparse import dg_laplace_2d, csr_spmv, csr_spmbv
-    from repro.core import cg_solve, ecg_solve
+    from repro.sparse import dg_laplace_2d, csr_spmv
+    from repro.core import cg_solve
+    from repro.solver import ECGSolver, SolverConfig
 
     a = dg_laplace_2d((16, 16), block=16)  # 4096 rows, DG structure
     rng = np.random.default_rng(0)
@@ -42,9 +43,8 @@ def fig3_2_convergence():
     res, us = timed(lambda: cg_solve(lambda v: csr_spmv(a, v), b, tol=1e-6, max_iters=4000).n_iters)
     rows.append(row("fig3_2/cg", us, res))
     for t in (2, 4, 8, 12, 20):
-        res, us = timed(
-            lambda t=t: ecg_solve(lambda V: csr_spmbv(a, V), b, t=t, tol=1e-6, max_iters=4000).n_iters
-        )
+        solver = ECGSolver.build(a, config=SolverConfig(t=t, tol=1e-6, max_iters=4000))
+        res, us = timed(lambda s=solver: s.solve(b).n_iters)
         rows.append(row(f"fig3_2/ecg_t{t}", us, res))
     return rows
 

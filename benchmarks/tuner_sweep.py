@@ -84,6 +84,13 @@ def main() -> None:
         gap = model_best["us"] / meas_best["us"] - 1.0
         cfg = tune(a, t=t, machine=machine, mesh=mesh, backend="pallas",
                    tiles=tiles, pm=pm)
+        # the pick is serialized losslessly (TunedConfig.to_json) so a later
+        # run can reload it from this file and feed it straight back through
+        # SolverConfig(tune=TunedConfig.from_json(...)) without re-tuning
+        from repro.tune import TunedConfig, tunedconfig_to_dict
+
+        cfg_dict = tunedconfig_to_dict(cfg)
+        assert TunedConfig.from_json(cfg_dict).to_json() == cfg.to_json()
         summary[f"t{t}"] = dict(
             measured_winner=meas_best["name"],
             model_winner=model_best["name"],
@@ -93,6 +100,7 @@ def main() -> None:
             ),
             model_pick_gap=gap,
             within_10pct=bool(gap <= 0.10),
+            tuned_config=cfg_dict,
         )
         print(
             f"# t={t}: measured winner={meas_best['name']} "

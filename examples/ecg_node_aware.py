@@ -18,11 +18,11 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np
 
 from repro.sparse import dg_laplace_2d
-from repro.sparse.spmbv import distributed_ecg, make_distributed_spmbv
 from repro.sparse.partition import partition_csr
 from repro.core.comm_graph import build_comm_graph
 from repro.core.models import tune_strategy, STRATEGIES
 from repro.core.machines import BLUE_WATERS
+from repro.solver import CommConfig, ECGSolver, SolverConfig
 
 
 def main():
@@ -34,12 +34,17 @@ def main():
     print(f"system: {a.shape[0]} rows, mesh 2x4, t={t}\n")
 
     print(f"{'strategy':10s} {'iters':>5s} {'inter rows':>10s} {'intra rows':>10s} {'steps':>5s}")
+    pm = None
     for strategy in STRATEGIES:
-        res, op = distributed_ecg(a, b, mesh, t=t, strategy=strategy, tol=1e-8, max_iters=500)
-        rows = op.plan.comm_rows()
+        solver = ECGSolver.build(a, mesh, SolverConfig(
+            t=t, tol=1e-8, max_iters=500, comm=CommConfig(strategy=strategy),
+        ), pm=pm)
+        pm = solver.partition  # partition once, reuse across strategy sessions
+        res = solver.solve(b)
+        rows = solver.op.plan.comm_rows()
         print(
             f"{strategy:10s} {res.n_iters:5d} {rows['inter']:10d} {rows['intra']:10d} "
-            f"{len(op.plan.steps):5d}"
+            f"{len(solver.op.plan.steps):5d}"
         )
 
     pm = partition_csr(a, 8)

@@ -10,8 +10,9 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np
 import jax.numpy as jnp
 
-from repro.sparse import dg_laplace_2d, csr_spmv, csr_spmbv
-from repro.core import cg_solve, ecg_solve
+from repro.sparse import dg_laplace_2d, csr_spmv
+from repro.core import cg_solve
+from repro.solver import ECGSolver, SolverConfig
 
 
 def main():
@@ -25,7 +26,8 @@ def main():
     print(f"CG          : {res.n_iters:4d} iterations")
 
     for t in (2, 4, 8, 16):
-        res = ecg_solve(lambda V: csr_spmbv(a, V), b, t=t, tol=1e-8, max_iters=4000)
+        solver = ECGSolver.build(a, config=SolverConfig(t=t, tol=1e-8, max_iters=4000))
+        res = solver.solve(b)
         print(f"ECG (t={t:2d})  : {res.n_iters:4d} iterations, converged={res.converged}")
 
     print("\nECG trades fewer iterations (fewer allreduces) for t-times denser")

@@ -40,6 +40,8 @@ from repro.adaptive.select_t import (
     probe_decay_rate,
     resolve_auto_t,
     select_t,
+    tselection_from_dict,
+    tselection_to_dict,
 )
 
 __all__ = [
@@ -59,4 +61,6 @@ __all__ = [
     "probe_decay_rate",
     "resolve_auto_t",
     "select_t",
+    "tselection_from_dict",
+    "tselection_to_dict",
 ]

@@ -63,10 +63,31 @@ class TSelection:
     mode: str          # "probe" | "kappa"
     probe_iters: int = 0
     configs: dict = dataclasses.field(default_factory=dict, compare=False, repr=False)
+    # iterations each candidate's probe actually ran before the fitted rate
+    # stabilized (early stop) — {t: iters}; empty for mode="kappa"
+    probe_iters_used: dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_cost(self) -> float:
         return self.table[self.t]["total_cost_s"]
+
+    def to_json(self) -> str:
+        """Serialize to a JSON string; lossless round trip via
+        :meth:`from_json` (used to cache selections on disk next to
+        :meth:`repro.tune.TunedConfig.to_json`)."""
+        import json
+
+        return json.dumps(tselection_to_dict(self))
+
+    @classmethod
+    def from_json(cls, data) -> "TSelection":
+        """Inverse of :meth:`to_json`; accepts the JSON string or the
+        already-parsed dict."""
+        import json
+
+        if isinstance(data, (str, bytes)):
+            data = json.loads(data)
+        return tselection_from_dict(data)
 
     def summary(self) -> str:
         lines = [f"t=auto[{self.mode}] -> t={self.t} (tol={self.tol:g})"]
@@ -75,15 +96,68 @@ class TSelection:
             mark = " <-- chosen" if t == self.t else ""
             act = row.get("avg_active", t)
             red = f" act~{act:.1f}" if act < t else ""
+            used = self.probe_iters_used.get(t)
+            probed = (
+                f" probe={used}/{self.probe_iters}"
+                if used is not None and used < self.probe_iters else ""
+            )
             lines.append(
                 f"  t={t:>2}: rate={row['rate']:.4f} iters~{row['est_iters']:>5} "
                 f"iter={row['iter_cost_s']*1e6:8.1f}us "
-                f"total={row['total_cost_s']*1e3:8.2f}ms{red}{mark}"
+                f"total={row['total_cost_s']*1e3:8.2f}ms{red}{probed}{mark}"
             )
         return "\n".join(lines)
 
 
+def tselection_to_dict(sel: "TSelection") -> dict:
+    """JSON-safe dict form of a TSelection (int keys stringified)."""
+    from repro.tune.autotune import tunedconfig_to_dict
+
+    return dict(
+        t=sel.t,
+        candidates=list(sel.candidates),
+        table={str(t): dict(row) for t, row in sel.table.items()},
+        tol=sel.tol,
+        mode=sel.mode,
+        probe_iters=sel.probe_iters,
+        probe_iters_used={str(t): int(v) for t, v in sel.probe_iters_used.items()},
+        configs={str(t): tunedconfig_to_dict(cfg) for t, cfg in sel.configs.items()},
+    )
+
+
+def tselection_from_dict(d: dict) -> "TSelection":
+    """Inverse of :func:`tselection_to_dict` (int keys restored)."""
+    from repro.tune.autotune import tunedconfig_from_dict
+
+    return TSelection(
+        t=int(d["t"]),
+        candidates=tuple(int(t) for t in d["candidates"]),
+        table={int(t): dict(row) for t, row in d["table"].items()},
+        tol=float(d["tol"]),
+        mode=str(d["mode"]),
+        probe_iters=int(d.get("probe_iters", 0)),
+        probe_iters_used={
+            int(t): int(v) for t, v in d.get("probe_iters_used", {}).items()
+        },
+        configs={
+            int(t): tunedconfig_from_dict(cfg)
+            for t, cfg in d.get("configs", {}).items()
+        },
+    )
+
+
 # ------------------------------------------------------- iterations models
+def _fit_rate(hist) -> tuple[float | None, np.ndarray]:
+    """Geometric per-iteration decay fit over the finite positive prefix of a
+    residual history; (None, h) when fewer than two usable points exist."""
+    h = np.asarray(hist, dtype=np.float64)
+    h = h[np.isfinite(h)]
+    h = h[h > 0.0]
+    if len(h) < 2:
+        return None, h
+    return float((h[-1] / h[0]) ** (1.0 / (len(h) - 1))), h
+
+
 def probe_decay_rate(
     a_apply,
     b,
@@ -91,10 +165,20 @@ def probe_decay_rate(
     probe_iters: int = 8,
     mapping: str = "contiguous",
     adaptive: object = "rankrev",
-) -> tuple[float, float, float]:
-    """Run ``probe_iters`` real ECG iterations at width t and fit a geometric
-    per-iteration residual decay rate ρ; returns (ρ, r₀ norm, avg active
-    width observed over the probe).
+    rtol: float = 0.01,
+    min_iters: int = 4,
+) -> tuple[float, float, float, int]:
+    """Run up to ``probe_iters`` real ECG iterations at width t and fit a
+    geometric per-iteration residual decay rate ρ; returns
+    (ρ, r₀ norm, avg active width observed, iterations actually run).
+
+    The probe drives the :class:`~repro.core.ecg.ECGRunner` one iteration at
+    a time and **stops early** once the fitted rate has stabilized: after at
+    least ``min_iters`` iterations, when the fit over k iterations agrees
+    with the fit over k−1 within relative tolerance ``rtol``, the remaining
+    probe budget is skipped (``rtol=0`` disables early stopping).  The
+    number of iterations actually run is recorded as ``probe_iters_used``
+    on the :class:`TSelection`.
 
     The probe runs with the adaptive controller (default ``"rankrev"``) so a
     rank-deficient splitting (e.g. t exceeding the number of nonzero
@@ -102,25 +186,53 @@ def probe_decay_rate(
     with NaNs — and so the observed reduction trace can discount the
     exchange-byte cost of candidates that will not sustain the full width.
     """
-    from repro.core.ecg import ecg_solve
+    from repro.adaptive.reduce import resolve_policy
+    from repro.core.ecg import make_ecg_runner
 
-    res = ecg_solve(
-        a_apply, b, t=t, tol=0.0, max_iters=probe_iters, mapping=mapping,
-        # the probe always needs a controller: "off"/None would leave
-        # active_hist unset and a deficient splitting would NaN the fit
-        adaptive="rankrev" if adaptive in (None, "off") else adaptive,
+    # the probe always needs a controller: "off"/None would leave the active
+    # trace unset and a deficient splitting would NaN the fit
+    import jax
+
+    policy = resolve_policy("rankrev" if adaptive in (None, "off") else adaptive)
+    runner = make_ecg_runner(
+        a_apply, t, tol=0.0, max_iters=probe_iters, mapping=mapping,
+        policy=policy,
     )
-    ah = np.asarray(res.active_hist)
+    # one compiled program per probe iteration (carry shapes are static, so
+    # every iteration after the first is a jit cache hit); the per-iteration
+    # host sync is inherent to the early-stop decision
+    step = jax.jit(runner.step)
+    b = jnp.asarray(b)
+    carry = runner.init(b, jnp.zeros_like(b))
+    used = 0
+    rho = prev_rho = None
+    if not bool(carry["bd"]):
+        for k in range(probe_iters):
+            new = step(carry)
+            if not bool(jnp.isfinite(new["rn"])):
+                break  # breakdown: keep the last finite iterate's history
+            carry = new
+            used = k + 1
+            rho, _ = _fit_rate(carry["hist"][: used + 1])
+            if float(carry["rn"]) <= 0.0:
+                break  # converged exactly inside the probe
+            if (
+                rtol > 0.0
+                and used >= min_iters
+                and rho is not None
+                and prev_rho is not None
+                and abs(rho / prev_rho - 1.0) <= rtol
+            ):
+                break  # fitted rate stabilized — skip the rest of the budget
+            prev_rho = rho
+    ah = np.asarray(carry["ahist"][: used + 1])
     ah = ah[ah >= 0]
     avg_active = float(ah.mean()) if len(ah) else float(t)
-    h = np.asarray(res.res_hist, dtype=np.float64)
-    h = h[np.isfinite(h)]
-    h = h[h > 0.0]
-    if len(h) < 2:
-        # converged inside the probe
-        return 1e-8, float(h[0]) if len(h) else 0.0, avg_active
-    rho = (h[-1] / h[0]) ** (1.0 / (len(h) - 1))
-    return float(np.clip(rho, 1e-8, 1.0 - 1e-12)), float(h[0]), avg_active
+    rho, h = _fit_rate(carry["hist"][: used + 1])
+    if rho is None:
+        # converged (or broke down) inside the first probe iteration
+        return 1e-8, float(h[0]) if len(h) else 0.0, avg_active, used
+    return float(np.clip(rho, 1e-8, 1.0 - 1e-12)), float(h[0]), avg_active, used
 
 
 def estimate_condition(a_apply, n: int, iters: int = 50, seed: int = 0) -> float:
@@ -232,12 +344,13 @@ def select_t(
     a_apply=None,
     tune_mode: str = "model",
     adaptive: object = "rankrev",
+    probe_rtol: float = 0.01,
 ) -> TSelection:
     """Rank candidate enlarging factors and pick the modeled-cheapest one.
 
     a:        CSRMatrix (drives the tuner's cost model and default probes).
     b:        right-hand side — required for ``mode="probe"``.
-    mode:     "probe" calibrates iters(t) from ``probe_iters`` real ECG
+    mode:     "probe" calibrates iters(t) from up to ``probe_iters`` real ECG
               iterations per candidate; "kappa" from a condition estimate.
     a_apply:  optional SpMBV override for the probes (defaults to the
               sequential CSR product — the iteration *count* does not depend
@@ -247,6 +360,10 @@ def select_t(
     adaptive: controller the probes run with; when the probe observes a
               reduced average active width, the candidate's exchange-byte
               cost is discounted to it (see :func:`_reduced_p2p`).
+    probe_rtol: early-stop tolerance of the probes — a candidate's probe
+              stops as soon as its fitted decay rate is stable within this
+              relative tolerance (0 disables; the iterations actually run
+              are recorded in ``TSelection.probe_iters_used``).
     """
     from repro.sparse.csr import csr_spmbv
 
@@ -265,14 +382,15 @@ def select_t(
         kappa = estimate_condition(a_apply, n)
         rn0 = float(jnp.linalg.norm(jnp.asarray(b))) if b is not None else 1.0
 
-    table, configs = {}, {}
+    table, configs, iters_used = {}, {}, {}
     best_t, best_cost = cands[0], math.inf
     for t in cands:
         if mode == "probe":
-            rate, rn0, avg_active = probe_decay_rate(
+            rate, rn0, avg_active, used = probe_decay_rate(
                 a_apply, jnp.asarray(b), t, probe_iters=probe_iters,
-                mapping=mapping, adaptive=adaptive,
+                mapping=mapping, adaptive=adaptive, rtol=probe_rtol,
             )
+            iters_used[t] = used
             est = _iters_to_tol(rate, rn0, tol, n)
         else:
             avg_active = float(t)
@@ -300,6 +418,7 @@ def select_t(
     return TSelection(
         t=best_t, candidates=tuple(cands), table=table, tol=tol, mode=mode,
         probe_iters=probe_iters if mode == "probe" else 0, configs=configs,
+        probe_iters_used=iters_used,
     )
 
 
@@ -317,6 +436,8 @@ def resolve_auto_t(
     ppn: int = 1,
     backend: str = "jnp",
     tune_mode: str = "model",
+    probe_iters: int = 8,
+    probe_rtol: float = 0.01,
 ):
     """Shared ``t="auto"`` resolution for the solvers.
 
@@ -340,6 +461,7 @@ def resolve_auto_t(
             a, b, candidates=candidates, tol=tol, machine=machine,
             n_nodes=n_nodes, ppn=ppn, backend=backend,
             tune_mode=tune_mode, adaptive=probe_adaptive,
+            probe_iters=probe_iters, probe_rtol=probe_rtol,
         )
     if adaptive is None:
         adaptive = "rankrev"  # auto-t implies breakdown safety

@@ -54,7 +54,7 @@ def overlap_vs_blocking_sweep(
     ``seed`` fixes the operand RNG and ``repeats`` the median-of-k timing so
     host-mode numbers are reproducible run-to-run.
     """
-    from repro.sparse.spmbv import make_distributed_spmbv
+    from repro.sparse.spmbv import _make_distributed_spmbv
 
     rng = np.random.default_rng(seed)
     rows = []
@@ -64,7 +64,7 @@ def overlap_vs_blocking_sweep(
             for backend in backends:
                 base_us = None
                 for overlap in (False, True):
-                    op = make_distributed_spmbv(
+                    op = _make_distributed_spmbv(
                         a, mesh, strategy, t=t, machine=machine,
                         backend=backend, overlap=overlap, ell_block=ell_block,
                     )

@@ -18,6 +18,18 @@ the shard_map-distributed run, so the same iteration body serves both — and
 the fusion of the second reduction (c, d, d_old packed in one buffer) is
 structural, not cosmetic.
 
+Two layers live here:
+
+* :func:`make_ecg_runner` — builds the pure iteration machinery once (an
+  :class:`ECGRunner` with ``init``/``step``/``run``), all jit-traceable.
+  This is what :class:`repro.solver.ECGSolver` compiles exactly once per
+  width and reuses across right-hand sides, and what the ``t="auto"``
+  probes drive step-by-step for early stopping.
+* :func:`ecg_solve` — the legacy one-shot functional spelling (resolve
+  config, build a runner, run it, wrap a :class:`SolveResult`).  New code
+  should build a :class:`repro.solver.ECGSolver` handle instead; the
+  handle amortizes setup and compilation over many solves.
+
 Backend switch: ``backend="jnp"`` (default) runs the iteration body on plain
 XLA ops; ``backend="pallas"`` routes the two per-iteration hot spots that the
 paper's performance model singles out through the Pallas kernel suite —
@@ -26,26 +38,22 @@ HBM pass over P/R/AP/AP_old instead of three GEMM passes) and
 ``kernels/block_update.ecg_tail`` for the X/R/Z tail (one pass over P/AP
 instead of two).  On non-TPU platforms the kernel ops dispatch to their
 pure-jnp oracles, so the switch is always safe to flip; the SpMBV itself is
-owned by the caller via ``a_apply`` (see
-``repro.kernels.make_block_ell_apply`` and the ``backend`` argument of
-``make_distributed_spmbv``).
+owned by the caller via ``a_apply``.
 
-Adaptivity (:mod:`repro.adaptive`): ``adaptive="rankrev"`` replaces the bare
+Adaptivity (:mod:`repro.adaptive`): a ``ReductionPolicy`` replaces the bare
 Cholesky with a pivoted, rank-revealing factorization so a singular Gram
 matrix drops the dependent directions (zero-masked columns, static shapes)
-instead of poisoning the solve with NaNs; ``adaptive="reduce"`` additionally
-retires stagnant directions per the flexible-ECG criterion, and
-``"reduce+restart"`` re-enlarges on a residual plateau.  ``t="auto"``
-(requires ``matrix=`` or a precomputed ``select=``) picks the enlarging
-factor from the iterations-vs-cost model of
-:mod:`repro.adaptive.select_t`.  Every solve is breakdown-guarded: a
-non-finite iterate freezes the state at the last finite iteration and sets
+instead of poisoning the solve with NaNs; the flexible-ECG stagnation
+criterion additionally retires stagnant directions, with an optional
+plateau re-enlarge/restart.  Every solve is breakdown-guarded: a non-finite
+iterate freezes the state at the last finite iteration and sets
 ``SolveResult.breakdown``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import jax
@@ -73,11 +81,34 @@ def _chol_inv_apply(g: jax.Array, *mats: jax.Array, eps: float = 0.0):
     return outs
 
 
-def ecg_solve(
+@dataclasses.dataclass(frozen=True)
+class ECGRunner:
+    """The compiled-once iteration machinery of one ECG configuration.
+
+    ``init(b, x0) -> carry`` builds the initial loop carry (initial residual
+    SpMV, splitting, norm); ``step(carry) -> carry`` is one raw, unguarded
+    iteration of Algorithm 3 (used by the ``t="auto"`` probes to drive the
+    loop one iteration at a time); ``run(carry) -> carry`` is the
+    breakdown-guarded ``lax.while_loop`` to convergence (or to a width-exit
+    event).  All three are pure and jit-traceable — the solver handle wraps
+    ``lambda b, x0: run(init(b, x0))`` in one ``jax.jit`` and reuses it for
+    every right-hand side, which is what makes ``solve_many`` retrace-free.
+    """
+
+    t: int
+    tol: float
+    max_iters: int
+    policy: object
+    use_mask: bool
+    init: Callable
+    step: Callable
+    run: Callable
+
+
+def make_ecg_runner(
     a_apply: Callable[[jax.Array], jax.Array],
-    b: jax.Array,
-    t: int | str,
-    x0: jax.Array | None = None,
+    t: int,
+    *,
     tol: float = 1e-8,
     max_iters: int = 1000,
     mapping: str = "contiguous",
@@ -89,81 +120,24 @@ def ecg_solve(
     sqnorm: Callable | None = None,
     tail: Callable | None = None,
     backend: str = "jnp",
-    tuned: object | None = None,
-    adaptive: object = None,
-    matrix: object = None,
-    select: object = None,
-    t_candidates: tuple = (1, 2, 4, 8, 16),
-    machine: object = None,
+    policy: object = None,
     a_apply_masked: Callable | None = None,
     exit_below_width: int | None = None,
-    resume_state: dict | None = None,
-) -> SolveResult:
-    """Solve A x = b with ECG using enlarging factor ``t``.
+) -> ECGRunner:
+    """Build the ECG iteration machinery for one fixed configuration.
 
-    a_apply:   SpMBV — maps (n, t) block vectors to (n, t) block vectors
-               (applied column-wise to A).  For the distributed solver this is
-               the node-aware halo-exchange SpMBV.
-    t:         enlarging factor, or ``"auto"`` to pick one from the
-               iterations-vs-cost model (needs ``matrix=`` — the CSRMatrix
-               behind ``a_apply`` — or a precomputed ``select=`` TSelection;
-               ``t_candidates``/``machine`` parameterize the model).
-    allreduce: reduction applied to every *local* t x t (or packed t x 3t)
-               gram product; identity when running single-shard.
-    gram1:     (Z, AZ) -> ZᵀAZ, globally reduced     (allreduce #1, t²)
-    gram2:     (P, R, AP, AP_old) -> [PᵀR | APᵀAP | AP_oldᵀAP] packed and
-               globally reduced in ONE collective     (allreduce #2, 3t²)
-    sqnorm:    v -> globally-reduced vᵀv.
-    The defaults compute local products wrapped in ``allreduce``; the
-    distributed solver substitutes fused shard_map psums so the lowered HLO
-    carries exactly two collectives per iteration (paper §3.1).
-    split:     optional override of T_{r,t} (e.g. distributed splitting).
-    tail:      (X, R, P, AP, P_old, c, d, d_old) -> (X, R, Z) — the local
-               block-vector updates; defaults per ``backend``.
-    backend:   "jnp" | "pallas" — see module docstring.
-    tuned:     optional :class:`repro.tune.TunedConfig` (duck-typed, so core
-               stays import-cycle-free): adopts its ``backend``.  The SpMBV
-               itself is owned by the caller via ``a_apply`` — build it from
-               the same config (``make_distributed_spmbv(..., tune=cfg)`` or
-               ``make_block_ell_apply(a, block=cfg.ell_block)``) so the
-               kernel-side choices match.
-    adaptive:  None/"off" (exact historical behavior), "rankrev" (breakdown-
-               safe rank-revealing factorization, drop dependent directions),
-               "reduce" (+ flexible-ECG stagnation drops),
-               "reduce+restart" (+ re-enlarge on plateau), or a
-               :class:`repro.adaptive.ReductionPolicy`.
-
-    Width-segmented execution (used by the width-aware distributed solver —
-    see ``distributed_ecg``): ``a_apply_masked`` is an
-    ``(V, active_mask) -> W`` operator that may exploit the (t,) bool mask
-    of live directions (e.g. compact the halo-exchange payload to the
-    active columns); when given (and a policy is on) it replaces ``a_apply``
-    inside the loop and the mask is carried across iterations.
-    ``exit_below_width`` additionally terminates the while-loop as soon as
-    the active width falls below it — the caller then re-slices its
-    operator at the shrunken width and *resumes* by passing
-    ``SolveResult.final_carry`` back in as ``resume_state`` (all counters,
-    histories, and block vectors continue; the maths is identical to the
-    monolithic loop because only the exchange payload changes).
+    Arguments mirror :func:`ecg_solve` (which is implemented on top of this)
+    except that ``t`` must already be an int and ``policy`` an already
+    resolved :class:`~repro.adaptive.ReductionPolicy` (or None).  See the
+    module docstring of :mod:`repro.core.ecg` for the iteration body and
+    :func:`ecg_solve` for the meaning of each hook.
     """
-    selection = select
-    if isinstance(t, str):
-        from repro.adaptive.select_t import resolve_auto_t
-
-        t, selection, adaptive = resolve_auto_t(
-            t, adaptive, a=matrix, b=b, select=select,
-            candidates=t_candidates, tol=tol, machine=machine, backend=backend,
-        )
-    policy = resolve_policy(adaptive)
     if policy is not None and chol_eps:
         raise ValueError(
             "chol_eps regularization and adaptive= are mutually exclusive: the "
             "rank-revealing factorization handles near-singular G structurally "
             "(tune ReductionPolicy.rank_rtol instead of eps-jitter)"
         )
-
-    if tuned is not None:
-        backend = getattr(tuned, "backend", backend)
     if backend not in ("jnp", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
     if gram1 is None:
@@ -188,11 +162,6 @@ def ecg_solve(
         lambda r_, t_: split_residual(r_, t_, mapping)
     )
     use_mask = a_apply_masked is not None and policy is not None
-
-    x0 = jnp.zeros_like(b) if x0 is None else x0
-    n = b.shape[0]
-    dtype = b.dtype
-    zeros_nt = jnp.zeros((n, t), dtype)
 
     def iterate(carry):
         big_x, big_r, z = carry["X"], carry["R"], carry["Z"]
@@ -262,24 +231,27 @@ def ecg_solve(
             )
         return out
 
-    if resume_state is not None:
-        init = dict(resume_state)  # continue a width-segmented solve
-    else:
+    def init(b, x0):
+        n = b.shape[0]
+        dtype = b.dtype
+        zeros_nt = jnp.zeros((n, t), dtype)
         r0 = b - _apply_vec(a_apply, x0, t)  # initial SpMV (Alg 3 line 1)
         big_r0 = split_fn(r0, t)
         rn0 = jnp.sqrt(sqnorm(r0))
         hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=dtype).at[0].set(rn0)
-        init = dict(X=zeros_nt, R=big_r0, Z=big_r0, P=zeros_nt, AP=zeros_nt,
-                    k=jnp.int32(0), rn=rn0, hist=hist0)
+        carry = dict(X=zeros_nt, R=big_r0, Z=big_r0, P=zeros_nt, AP=zeros_nt,
+                     k=jnp.int32(0), rn=rn0, hist=hist0,
+                     bd=~jnp.isfinite(rn0))
         if policy is not None:
-            init.update(
+            carry.update(
                 best_rn=rn0,
                 since=jnp.int32(0),
                 restarts=jnp.int32(0),
                 ahist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(t),
             )
         if use_mask:
-            init["act"] = jnp.ones((t,), bool)
+            carry["act"] = jnp.ones((t,), bool)
+        return carry
 
     def cond(c):
         go = (c["rn"] > tol) & (c["k"] < max_iters)
@@ -289,7 +261,25 @@ def ecg_solve(
             go = go & (jnp.sum(c["act"]) >= exit_below_width)
         return go
 
-    out = _guarded_while(cond, iterate, init)
+    def run(carry):
+        return _guarded_while(cond, iterate, carry)
+
+    return ECGRunner(
+        t=t, tol=tol, max_iters=max_iters, policy=policy, use_mask=use_mask,
+        init=init, step=iterate, run=run,
+    )
+
+
+def finalize_result(
+    out: dict,
+    *,
+    x0,
+    t: int,
+    tol: float,
+    policy: object = None,
+    selection: object = None,
+) -> SolveResult:
+    """Convert a final loop carry into a :class:`SolveResult` (host syncs)."""
     x = x0 + out["X"].sum(axis=1)  # line 14: x = Σᵢ (X)ᵢ
     breakdown = bool(out["bd"])
     return SolveResult(
@@ -304,6 +294,132 @@ def ecg_solve(
         selection=selection,
         final_carry=out,
     )
+
+
+def _ecg_solve(
+    a_apply: Callable[[jax.Array], jax.Array],
+    b: jax.Array,
+    t: int | str,
+    x0: jax.Array | None = None,
+    tol: float = 1e-8,
+    max_iters: int = 1000,
+    mapping: str = "contiguous",
+    allreduce: Callable[[jax.Array], jax.Array] = lambda x: x,
+    split: Callable[[jax.Array, int], jax.Array] | None = None,
+    chol_eps: float = 0.0,
+    gram1: Callable | None = None,
+    gram2: Callable | None = None,
+    sqnorm: Callable | None = None,
+    tail: Callable | None = None,
+    backend: str = "jnp",
+    tuned: object | None = None,
+    adaptive: object = None,
+    matrix: object = None,
+    select: object = None,
+    t_candidates: tuple = (1, 2, 4, 8, 16),
+    machine: object = None,
+    a_apply_masked: Callable | None = None,
+    exit_below_width: int | None = None,
+    resume_state: dict | None = None,
+) -> SolveResult:
+    """One-shot functional ECG solve (the engine behind :func:`ecg_solve`).
+
+    Internal — callers inside ``repro.*`` use this (or a runner / the
+    :class:`repro.solver.ECGSolver` handle) so that only genuinely external
+    code goes through the deprecated public spelling.
+    """
+    selection = select
+    if isinstance(t, str):
+        from repro.adaptive.select_t import resolve_auto_t
+
+        t, selection, adaptive = resolve_auto_t(
+            t, adaptive, a=matrix, b=b, select=select,
+            candidates=t_candidates, tol=tol, machine=machine, backend=backend,
+        )
+    policy = resolve_policy(adaptive)
+    if tuned is not None:
+        backend = getattr(tuned, "backend", backend)
+
+    runner = make_ecg_runner(
+        a_apply, t, tol=tol, max_iters=max_iters, mapping=mapping,
+        allreduce=allreduce, split=split, chol_eps=chol_eps, gram1=gram1,
+        gram2=gram2, sqnorm=sqnorm, tail=tail, backend=backend, policy=policy,
+        a_apply_masked=a_apply_masked, exit_below_width=exit_below_width,
+    )
+    # Run the whole program (init + guarded loop) under one jit — the same
+    # compiled shape the ECGSolver handle caches, so the one-shot legacy
+    # spelling and a handle solve are bit-identical by construction.
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    if resume_state is not None:
+        # continue a width-segmented solve from the carried loop state
+        out = jax.jit(runner.run)(dict(resume_state))
+    else:
+        out = jax.jit(lambda b_, x0_: runner.run(runner.init(b_, x0_)))(b, x0)
+    return finalize_result(
+        out, x0=x0, t=t, tol=tol, policy=policy, selection=selection
+    )
+
+
+def ecg_solve(a_apply, b, t, *args, **kwargs) -> SolveResult:
+    """Solve A x = b with ECG using enlarging factor ``t``.
+
+    .. deprecated::
+        ``ecg_solve`` is the legacy one-shot spelling: it re-derives the
+        whole configuration and re-traces the solve loop on every call.
+        Build a :class:`repro.solver.ECGSolver` handle instead —
+        ``ECGSolver.build(a, config=SolverConfig(t=4)).solve(b)`` — which
+        pays setup and compilation once and solves many right-hand sides
+        without retracing.
+
+    a_apply:   SpMBV — maps (n, t) block vectors to (n, t) block vectors
+               (applied column-wise to A).  For the distributed solver this is
+               the node-aware halo-exchange SpMBV.
+    t:         enlarging factor, or ``"auto"`` to pick one from the
+               iterations-vs-cost model (needs ``matrix=`` — the CSRMatrix
+               behind ``a_apply`` — or a precomputed ``select=`` TSelection;
+               ``t_candidates``/``machine`` parameterize the model).
+    allreduce: reduction applied to every *local* t x t (or packed t x 3t)
+               gram product; identity when running single-shard.
+    gram1:     (Z, AZ) -> ZᵀAZ, globally reduced     (allreduce #1, t²)
+    gram2:     (P, R, AP, AP_old) -> [PᵀR | APᵀAP | AP_oldᵀAP] packed and
+               globally reduced in ONE collective     (allreduce #2, 3t²)
+    sqnorm:    v -> globally-reduced vᵀv.
+    The defaults compute local products wrapped in ``allreduce``; the
+    distributed solver substitutes fused shard_map psums so the lowered HLO
+    carries exactly two collectives per iteration (paper §3.1).
+    split:     optional override of T_{r,t} (e.g. distributed splitting).
+    tail:      (X, R, P, AP, P_old, c, d, d_old) -> (X, R, Z) — the local
+               block-vector updates; defaults per ``backend``.
+    backend:   "jnp" | "pallas" — see module docstring.
+    tuned:     optional :class:`repro.tune.TunedConfig` (duck-typed, so core
+               stays import-cycle-free): adopts its ``backend``.
+    adaptive:  None/"off" (exact historical behavior), "rankrev" (breakdown-
+               safe rank-revealing factorization, drop dependent directions),
+               "reduce" (+ flexible-ECG stagnation drops),
+               "reduce+restart" (+ re-enlarge on plateau), or a
+               :class:`repro.adaptive.ReductionPolicy`.
+
+    Width-segmented execution (used by the width-aware distributed solver —
+    see :class:`repro.solver.ECGSolver`): ``a_apply_masked`` is an
+    ``(V, active_mask) -> W`` operator that may exploit the (t,) bool mask
+    of live directions (e.g. compact the halo-exchange payload to the
+    active columns); when given (and a policy is on) it replaces ``a_apply``
+    inside the loop and the mask is carried across iterations.
+    ``exit_below_width`` additionally terminates the while-loop as soon as
+    the active width falls below it — the caller then re-slices its
+    operator at the shrunken width and *resumes* by passing
+    ``SolveResult.final_carry`` back in as ``resume_state`` (all counters,
+    histories, and block vectors continue; the maths is identical to the
+    monolithic loop because only the exchange payload changes).
+    """
+    warnings.warn(
+        "ecg_solve() is the legacy one-shot spelling; build a "
+        "repro.solver.ECGSolver handle (compile-once / solve-many, typed "
+        "SolverConfig) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _ecg_solve(a_apply, b, t, *args, **kwargs)
 
 
 def _apply_vec(a_apply: Callable, v: jax.Array, t: int) -> jax.Array:

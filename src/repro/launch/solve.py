@@ -1,8 +1,13 @@
-"""ECG solve driver (single- or multi-device).
+"""ECG solve driver (single- or multi-device) on the ECGSolver handle API.
 
     PYTHONPATH=src python -m repro.launch.solve --matrix dg --t 8 \
         --strategy tuned [--devices 8] [--backend pallas] [--tune model] \
         [--adaptive reduce] [--t auto]
+
+The driver builds one :class:`repro.solver.ECGSolver` session — partition,
+exchange plan, autotuning, t-selection, and Block-ELL conversion happen
+once — then solves (the timed call reuses the compiled loop; a second RHS
+would pay zero retraces).
 
 --backend pallas routes the SpMBV through the Block-ELL Pallas kernel and
 the gram/tail updates through the fused kernels (oracles on CPU).
@@ -103,8 +108,6 @@ def main():
               "--tune measure calibrates the distributed operator tuning only")
     if args.tune is None:
         args.tune = "model" if (args.strategy == "tuned" or args.t == "auto") else "off"
-    # None = solver defaults (auto-t turns on rankrev); explicit "off" sticks
-    adaptive = args.adaptive
 
     if args.devices and "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
         os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={args.devices}"
@@ -116,8 +119,12 @@ def main():
     import numpy as np
     import jax.numpy as jnp
     from repro.sparse import dg_laplace_2d, fd_laplace_2d, random_spd, csr_spmbv
-    from repro.core import ecg_solve, cg_solve
+    from repro.core import cg_solve
     from repro.core.machines import TPU_V5E_POD
+    from repro.solver import (
+        AdaptiveConfig, CommConfig, ECGSolver, KernelConfig, SolverConfig,
+        TuneConfig,
+    )
 
     a = {
         "dg": lambda: dg_laplace_2d((args.elements, args.elements), block=args.block),
@@ -128,37 +135,33 @@ def main():
     b = rng.standard_normal(a.shape[0])
     print(f"matrix: {a.shape[0]} rows, {a.nnz} nnz; t={args.t}")
 
-    if args.strategy == "sequential" or not args.devices:
-        tuned = None
-        block = args.ell_block
-        sel = None
-        if args.t == "auto":
-            # resolve the selection *before* building the operator so the
-            # executed tile is the one the candidate costs were modeled with
-            from repro.adaptive import select_t
+    sequential = args.strategy == "sequential" or not args.devices
+    if sequential and args.tune == "measure":
+        print("note: measured tuning needs a device mesh; using the model "
+              "for the sequential run")
+        args.tune = "model"
+    strategy = args.strategy if args.strategy not in ("sequential", "tuned") else "standard"
+    config = SolverConfig(
+        t=args.t,
+        tol=args.tol,
+        max_iters=5000,
+        comm=CommConfig(
+            strategy=strategy,
+            overlap=args.overlap,
+            machine=None if sequential else TPU_V5E_POD.with_ppn(args.ppn),
+        ),
+        kernel=KernelConfig(backend=args.backend, ell_block=args.ell_block),
+        # None = solver defaults (auto-t turns on rankrev); explicit "off" sticks
+        adaptive=AdaptiveConfig(policy=args.adaptive),
+        tune=TuneConfig(mode=args.tune),
+    )
 
-            sel = select_t(a, b, tol=args.tol, n_nodes=1, ppn=1,
-                           backend=args.backend)
-            if args.backend == "pallas":
-                tuned = sel.configs[sel.t]
-                block = tuned.ell_block
-                print(f"tuned tile: {block} kmax={tuned.kmax}")
-        elif args.backend == "pallas" and args.tune != "off":
-            from repro.tune import tune as run_tune
-
-            tuned = run_tune(a, t=args.t, n_nodes=1, ppn=1, backend="pallas")
-            block = tuned.ell_block
-            print(f"tuned tile: {block} kmax={tuned.kmax}")
-        if args.backend == "pallas":
-            from repro.kernels import make_block_ell_apply
-
-            apply_a = make_block_ell_apply(a, block=block)
-        else:
-            apply_a = lambda V: csr_spmbv(a, V)
+    if sequential:
+        solver = ECGSolver.build(a, config=config, b=b)
+        if solver.tuned is not None:
+            print(f"tuned tile: {solver.tuned.ell_block} kmax={solver.tuned.kmax}")
         t0 = time.time()
-        res = ecg_solve(apply_a, jnp.asarray(b), t=args.t, tol=args.tol, max_iters=5000,
-                        backend=args.backend, tuned=tuned, adaptive=adaptive,
-                        matrix=a, select=sel)
+        res = solver.solve(b)
         print(f"sequential ECG[{args.backend}] t={res.t}: iters={res.n_iters} "
               f"converged={res.converged} {time.time()-t0:.1f}s")
         _print_adaptive_summary(res)
@@ -166,31 +169,25 @@ def main():
         print(f"reference CG:  iters={res_cg.n_iters}")
         return
 
-    from repro.sparse.spmbv import distributed_ecg
-
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev // args.ppn, args.ppn), ("node", "proc"))
-    strategy = args.strategy if args.strategy != "tuned" else "standard"
     t0 = time.time()
-    res, op = distributed_ecg(a, b, mesh, t=args.t, strategy=strategy, tol=args.tol,
-                              max_iters=5000, backend=args.backend,
-                              overlap=args.overlap, ell_block=args.ell_block,
-                              machine=TPU_V5E_POD.with_ppn(args.ppn),
-                              tune=args.tune, adaptive=adaptive)
-    if op.tuned is not None:
-        cfg = op.tuned
+    solver = ECGSolver.build(a, mesh, config, b=b)
+    res = solver.solve(b)
+    if solver.tuned is not None:
+        cfg = solver.tuned
         strategy = cfg.strategy
         print(f"tuned[{cfg.mode}]: strategy={cfg.strategy} tile={cfg.ell_block} "
               f"kmax={cfg.kmax} overlap={cfg.overlap} col_split={cfg.col_split}")
         if "p2p" in cfg.predicted:
             print("  p2p model:",
                   {k: f"{v*1e6:.0f}us" for k, v in cfg.predicted["p2p"].items()})
-    x = op.unshard(res.x)
+    x = solver.unshard(res.x)
     relres = np.linalg.norm(np.asarray(a.todense(), np.float64) @ x - b) / np.linalg.norm(b) \
         if a.shape[0] <= 8192 else float("nan")
     print(
         f"distributed ECG[{strategy}/{args.backend}"
-        f"{'/overlap' if op.overlap else ''}] t={res.t} on {n_dev} devices: "
+        f"{'/overlap' if solver.op.overlap else ''}] t={res.t} on {n_dev} devices: "
         f"iters={res.n_iters} converged={res.converged} relres={relres:.2e} "
         f"{time.time()-t0:.1f}s"
     )

@@ -1,0 +1,34 @@
+"""Primary public API: compile-once / solve-many ECG sessions.
+
+    from repro.solver import ECGSolver, SolverConfig, CommConfig
+
+    solver = ECGSolver.build(a, mesh, SolverConfig(t=8, tol=1e-8))
+    res = solver.solve(b)         # builds + compiles once
+    more = solver.solve_many(bs)  # further RHS: zero retraces
+
+One typed :class:`SolverConfig` (validated at construction, composed of
+:class:`CommConfig` / :class:`KernelConfig` / :class:`TuneConfig` /
+:class:`AdaptiveConfig`) replaces the stringly-typed keyword sprawl of the
+legacy ``ecg_solve`` / ``distributed_ecg`` / ``make_distributed_spmbv``
+spellings, which remain as deprecated wrappers.  See ``docs/api.md`` for
+the handle lifecycle, the config reference, and the migration table.
+"""
+
+from repro.solver.config import (
+    AdaptiveConfig,
+    CommConfig,
+    KernelConfig,
+    SolverConfig,
+    TuneConfig,
+)
+from repro.solver.handle import ECGSolver, SolverStats
+
+__all__ = [
+    "AdaptiveConfig",
+    "CommConfig",
+    "KernelConfig",
+    "SolverConfig",
+    "TuneConfig",
+    "ECGSolver",
+    "SolverStats",
+]

@@ -1,0 +1,336 @@
+"""Typed, validated configuration for the ECG solver handle.
+
+One frozen :class:`SolverConfig` replaces the ~20 loosely-typed keyword
+arguments that had accreted on ``ecg_solve``/``distributed_ecg``/
+``make_distributed_spmbv``.  It is composed of four orthogonal sub-configs,
+one per subsystem:
+
+* :class:`CommConfig`   — the node-aware exchange (strategy, overlap,
+  col-split, machine parameters) → ``repro.core.node_aware`` + the
+  interior/boundary schedule of ``repro.sparse.spmbv``.
+* :class:`KernelConfig` — the local compute formulation (backend, Block-ELL
+  tile) → ``repro.kernels``.
+* :class:`TuneConfig`   — setup-time autotuning (mode, or a precomputed
+  :class:`~repro.tune.TunedConfig`) → ``repro.tune``.
+* :class:`AdaptiveConfig` — the in-solve width controller and ``t="auto"``
+  selection knobs → ``repro.adaptive``.
+
+Validation happens at construction: a bad strategy/backend/mode raises
+``ValueError`` immediately, not three layers down inside a traced solve.
+String shorthands from the legacy API are *coerced* into their typed form
+(``adaptive="reduce"`` becomes a resolved
+:class:`~repro.adaptive.ReductionPolicy`; ``tune="model"`` becomes
+``TuneConfig(mode="model")``), so after ``__post_init__`` every field holds
+exactly one well-typed value.
+
+All four sub-configs (and ``SolverConfig`` itself) are frozen dataclasses:
+hashable, comparable, safe to share between handles, and cheap to rebuild
+with :meth:`SolverConfig.replace`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+STRATEGIES = ("standard", "2step", "3step", "optimal")
+BACKENDS = ("jnp", "pallas")
+TUNE_MODES = ("off", "model", "model:structural", "measure")
+
+
+def _freeze(cls, **updates):
+    """object.__setattr__-based update for frozen-dataclass __post_init__."""
+    for k, v in updates.items():
+        object.__setattr__(cls, k, v)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Node-aware exchange configuration.
+
+    strategy:  point-to-point exchange strategy (paper §4): one of
+               ``standard | 2step | 3step | optimal``.
+    overlap:   hide the halo-exchange rounds behind interior SpMBV compute
+               (interior/boundary split schedule).
+    col_split: wide-halo column-split factor for the nodal-optimal strategy
+               (must divide t); ``None`` = §4.3 byte model decides.
+    machine:   :class:`~repro.core.machines.MachineParams` the byte models
+               use; ``None`` = per-mode default (TPU-v5e for the models).
+    """
+
+    strategy: str = "standard"
+    overlap: bool = False
+    col_split: int | None = None
+    machine: Any = None
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown exchange strategy {self.strategy!r}; "
+                f"expected one of {STRATEGIES}"
+            )
+        if self.col_split is not None and (
+            not isinstance(self.col_split, int) or self.col_split < 1
+        ):
+            raise ValueError(f"col_split must be a positive int, got {self.col_split!r}")
+        _freeze(self, overlap=bool(self.overlap))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Local-compute configuration.
+
+    backend:   ``"jnp"`` (scalar-gather CSR + unfused updates) or
+               ``"pallas"`` (Block-ELL SpMBV + fused gram/tail kernels;
+               jnp oracles off-TPU, so always safe).
+    ell_block: Block-ELL tile shape — an int for square tiles or an explicit
+               ``(br, bc)`` pair; normalized to a tuple.
+    """
+
+    backend: str = "jnp"
+    ell_block: int | tuple[int, int] = (8, 8)
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKENDS}"
+            )
+        blk = self.ell_block
+        if isinstance(blk, int):
+            blk = (blk, blk)
+        blk = tuple(int(x) for x in blk)
+        if len(blk) != 2 or any(x < 1 for x in blk):
+            raise ValueError(f"ell_block must be a positive int or (br, bc), got {self.ell_block!r}")
+        _freeze(self, ell_block=blk)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneConfig:
+    """Setup-time autotuning configuration.
+
+    mode:   ``"off"`` (use the explicit :class:`CommConfig`/
+            :class:`KernelConfig` values), ``"model"`` (paper's analytic
+            max-rate models), ``"model:structural"`` (executor-structural:
+            plan dispatches + moved bytes), or ``"measure"`` (setup-time
+            microbenchmarks on the mesh).
+    tuned:  a precomputed :class:`~repro.tune.TunedConfig` to apply verbatim
+            (e.g. loaded back from ``TunedConfig.from_json``); wins over
+            ``mode``.
+    """
+
+    mode: str = "off"
+    tuned: Any = None
+
+    def __post_init__(self):
+        if self.mode not in TUNE_MODES:
+            raise ValueError(
+                f"unknown tune mode {self.mode!r}; expected one of {TUNE_MODES}"
+            )
+        if self.tuned is not None and not hasattr(self.tuned, "strategy"):
+            raise TypeError(
+                f"tuned must be a repro.tune.TunedConfig, got {type(self.tuned)}"
+            )
+
+    @classmethod
+    def coerce(cls, value) -> "TuneConfig":
+        """Normalize the accepted spellings into a TuneConfig."""
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, dict):
+            return cls(**value)
+        if isinstance(value, str):
+            return cls(mode=value)
+        if hasattr(value, "strategy") and hasattr(value, "ell_block"):
+            return cls(mode=getattr(value, "mode", "off"), tuned=value)
+        raise TypeError(
+            f"tune must be a TuneConfig, a mode string, a TunedConfig, or a "
+            f"dict of TuneConfig fields; got {type(value)}"
+        )
+
+    @property
+    def active(self) -> bool:
+        return self.tuned is not None or self.mode != "off"
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """In-solve width controller and ``t="auto"`` selection knobs.
+
+    policy:       a resolved :class:`~repro.adaptive.ReductionPolicy`, or
+                  None (fixed width).  String shorthands (``"rankrev"`` /
+                  ``"reduce"`` / ``"reduce+restart"``) are coerced at
+                  construction.  ``policy="off"`` also resolves to None but
+                  records ``explicit_off`` — ``t="auto"`` normally implies
+                  the rankrev breakdown guard, and only an *explicit* off
+                  suppresses it (mirroring the legacy solvers).
+    t_candidates: candidate enlarging factors ranked by ``t="auto"``.
+    select:       a precomputed :class:`~repro.adaptive.TSelection` to use
+                  instead of running the probes.
+    probe_iters:  iteration budget per ``t="auto"`` probe.
+    probe_rtol:   early-stop tolerance of the probe: stop once the fitted
+                  per-iteration decay rate is stable within this relative
+                  tolerance on consecutive iterations (0 = always run the
+                  full ``probe_iters``).
+    """
+
+    policy: Any = None
+    t_candidates: tuple[int, ...] = (1, 2, 4, 8, 16)
+    select: Any = None
+    probe_iters: int = 8
+    probe_rtol: float = 0.01
+    explicit_off: bool = False
+
+    def __post_init__(self):
+        from repro.adaptive.reduce import resolve_policy
+
+        # explicit_off tracks the *latest* policy request: a new "off" sets
+        # it, any other concrete policy clears it (so replace(policy=...)
+        # on a formerly-off config is not sticky), and policy=None (no
+        # request) carries the existing flag through replace().
+        if self.policy == "off":
+            explicit_off = True
+        elif self.policy is not None:
+            explicit_off = False
+        else:
+            explicit_off = bool(self.explicit_off)
+        _freeze(
+            self,
+            policy=resolve_policy(self.policy),
+            t_candidates=tuple(int(t) for t in self.t_candidates),
+            explicit_off=explicit_off,
+        )
+        if self.probe_iters < 2:
+            raise ValueError(f"probe_iters must be >= 2, got {self.probe_iters}")
+        if self.probe_rtol < 0:
+            raise ValueError(f"probe_rtol must be >= 0, got {self.probe_rtol}")
+
+    @classmethod
+    def coerce(cls, value) -> "AdaptiveConfig":
+        from repro.adaptive.reduce import ReductionPolicy
+
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, dict):
+            return cls(**value)
+        if isinstance(value, (str, ReductionPolicy)):
+            return cls(policy=value)
+        raise TypeError(
+            f"adaptive must be an AdaptiveConfig, a policy (or its string "
+            f"shorthand), a dict of AdaptiveConfig fields, or None; "
+            f"got {type(value)}"
+        )
+
+
+#: Flat override spellings accepted by ``SolverConfig.replace`` /
+#: ``ECGSolver.with_config`` — each maps to (sub-config field, field name).
+_FLAT_FIELDS = {
+    "strategy": ("comm", "strategy"),
+    "overlap": ("comm", "overlap"),
+    "col_split": ("comm", "col_split"),
+    "machine": ("comm", "machine"),
+    "backend": ("kernel", "backend"),
+    "ell_block": ("kernel", "ell_block"),
+    "tune_mode": ("tune", "mode"),
+    "tuned": ("tune", "tuned"),
+    "policy": ("adaptive", "policy"),
+    "t_candidates": ("adaptive", "t_candidates"),
+    "select": ("adaptive", "select"),
+    "probe_iters": ("adaptive", "probe_iters"),
+    "probe_rtol": ("adaptive", "probe_rtol"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """The one config every ECG subsystem reads.
+
+    t:         enlarging factor (int >= 1), or ``"auto"`` to pick it at
+               build time from the iterations-vs-cost model.
+    tol:       convergence tolerance on the residual norm.
+    max_iters: iteration cap of the solve loop.
+    comm/kernel/tune/adaptive: the four sub-configs (see their docs).  The
+               constructor coerces convenient spellings: ``tune="model"``,
+               ``tune=TunedConfig``, ``adaptive="reduce"``,
+               ``adaptive=ReductionPolicy`` all normalize to typed fields.
+    """
+
+    t: int | str = 8
+    tol: float = 1e-8
+    max_iters: int = 1000
+    comm: CommConfig = dataclasses.field(default_factory=CommConfig)
+    kernel: KernelConfig = dataclasses.field(default_factory=KernelConfig)
+    tune: TuneConfig = dataclasses.field(default_factory=TuneConfig)
+    adaptive: AdaptiveConfig = dataclasses.field(default_factory=AdaptiveConfig)
+
+    def __post_init__(self):
+        if isinstance(self.t, str):
+            if self.t != "auto":
+                raise ValueError(f"t must be an int >= 1 or 'auto', got {self.t!r}")
+        elif not isinstance(self.t, int) or self.t < 1:
+            raise ValueError(f"t must be an int >= 1 or 'auto', got {self.t!r}")
+        if not self.tol >= 0:
+            raise ValueError(f"tol must be >= 0, got {self.tol!r}")
+        if not isinstance(self.max_iters, int) or self.max_iters < 1:
+            raise ValueError(f"max_iters must be an int >= 1, got {self.max_iters!r}")
+        comm = self.comm if isinstance(self.comm, CommConfig) else CommConfig(**self.comm)
+        kernel = (
+            self.kernel if isinstance(self.kernel, KernelConfig)
+            else KernelConfig(**self.kernel) if isinstance(self.kernel, dict)
+            else KernelConfig(backend=self.kernel)
+        )
+        _freeze(
+            self,
+            comm=comm,
+            kernel=kernel,
+            tune=TuneConfig.coerce(self.tune),
+            adaptive=AdaptiveConfig.coerce(self.adaptive),
+        )
+
+    def replace(self, **overrides) -> "SolverConfig":
+        """Return a new config with ``overrides`` applied.
+
+        Accepts both sub-config values (``comm=CommConfig(...)``) and the
+        flat spellings of their fields (``strategy="3step"``,
+        ``backend="pallas"``, ``tune_mode="model"``, ``policy="reduce"`` …);
+        unknown names raise ``ValueError`` listing the accepted keys.
+        """
+        top: dict = {}
+        nested: dict[str, dict] = {}
+        own = {f.name for f in dataclasses.fields(self)}
+        for key, value in overrides.items():
+            if key in _FLAT_FIELDS:
+                sub, field = _FLAT_FIELDS[key]
+                nested.setdefault(sub, {})[field] = value
+            elif key in own:
+                top[key] = value
+            else:
+                raise ValueError(
+                    f"unknown config override {key!r}; expected a SolverConfig "
+                    f"field ({sorted(own)}) or a flat sub-config field "
+                    f"({sorted(_FLAT_FIELDS)})"
+                )
+        for sub, fields in nested.items():
+            if sub in top:
+                raise ValueError(
+                    f"cannot combine {sub}= with flat overrides of its fields "
+                    f"({sorted(fields)}) in one replace() call"
+                )
+            current = getattr(self, sub)
+            if sub == "tune":
+                current = TuneConfig.coerce(current)
+            top[sub] = dataclasses.replace(current, **fields)
+        return dataclasses.replace(self, **top)
+
+    @classmethod
+    def coerce(cls, value) -> "SolverConfig":
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, dict):
+            return cls(**value)
+        raise TypeError(f"config must be a SolverConfig or dict, got {type(value)}")

@@ -1,0 +1,554 @@
+"""The compile-once / solve-many ECG session handle.
+
+The paper's premise is that ECG setup cost — partitioning, node-aware
+exchange planning, tuning — is paid once and amortized over the solve
+(§4).  :class:`ECGSolver` is that amortization made explicit in the API:
+
+    from repro.solver import ECGSolver, SolverConfig, CommConfig
+
+    solver = ECGSolver.build(a, mesh, SolverConfig(
+        t=8, tol=1e-8, comm=CommConfig(strategy="3step"),
+    ))
+    res = solver.solve(b)           # first call traces + compiles the loop
+    more = solver.solve_many(bs)    # every further RHS reuses the program
+
+``build`` performs partitioning, :class:`~repro.core.node_aware.ExchangePlan`
+construction, autotuning, ``t="auto"`` selection, and Block-ELL conversion
+exactly once.  ``solve`` wraps the whole guarded while-loop (initial
+residual included) in one ``jax.jit`` per active width, so a second solve
+with the same operand shape/dtype is a pure cache hit —
+``ECGSolver.stats.traces`` counts retraces and stays flat across repeated
+solves (asserted in the test suite).  ``with_config`` derives a sibling
+handle cheaply: overrides that only touch the solve loop (tol, max_iters,
+the adaptive policy) reuse the operator and plan outright; operator-level
+overrides rebuild it but always reuse the row partition.
+
+The legacy functional spellings (``ecg_solve`` / ``distributed_ecg`` /
+``make_distributed_spmbv``) are thin deprecated wrappers over this handle
+and its machinery — see ``docs/api.md`` for the migration table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.adaptive.reduce import resolve_policy
+from repro.core.ecg import finalize_result, make_ecg_runner
+from repro.solver.config import SolverConfig
+
+
+@dataclasses.dataclass
+class SolverStats:
+    """Build/compile accounting of one handle (reuse made observable)."""
+
+    builds: int = 0            # operator/plan constructions this handle paid
+    traces: int = 0            # solve-loop (re)traces; flat across cache hits
+    solves: int = 0            # solve() calls served
+    partition_reused: bool = False  # with_config reused the parent partition
+    op_reused: bool = False         # with_config reused the parent operator
+
+
+class ECGSolver:
+    """Compile-once / solve-many ECG session (see module docstring).
+
+    Attributes after ``build``:
+
+    t:         the resolved enlarging factor (an int, even for ``t="auto"``).
+    op:        the :class:`~repro.sparse.spmbv.DistributedSpMBV` operator
+               (None for a sequential, single-device handle).
+    tuned:     the applied :class:`~repro.tune.TunedConfig` (None untuned).
+    selection: the :class:`~repro.adaptive.TSelection` when ``t="auto"``.
+    policy:    the resolved in-solve :class:`~repro.adaptive.ReductionPolicy`.
+    stats:     :class:`SolverStats` — builds/traces/solves/reuse flags.
+    """
+
+    def __init__(self, *args, **kwargs):
+        raise TypeError("use ECGSolver.build(a, mesh=None, config=...) ")
+
+    # ------------------------------------------------------------- building
+    @classmethod
+    def build(
+        cls,
+        a,
+        mesh=None,
+        config: SolverConfig | dict | None = None,
+        *,
+        b=None,
+        pm=None,
+    ) -> "ECGSolver":
+        """Build a solver handle for matrix ``a``.
+
+        a:      :class:`~repro.sparse.csr.CSRMatrix` (SPD).
+        mesh:   a ``("node", "proc")`` device mesh for the distributed
+                node-aware solver, or None for the sequential solver.
+        config: a :class:`SolverConfig` (or dict of its fields).
+        b:      optional probe right-hand side for ``t="auto"`` (defaults to
+                a seeded Gaussian — the selection only needs a representative
+                RHS, but passing the real one sharpens the probe).
+        pm:     optional precomputed partition to reuse.
+        """
+        self = cls.__new__(cls)
+        self.a = a
+        self.mesh = mesh
+        self.config = SolverConfig.coerce(config)
+        self.stats = SolverStats()
+        self.selection = None
+        self.tuned = None
+        self.op = None
+        self._pm = pm
+        self._probe_b = b
+        self._runners: dict = {}
+        self._jits: dict = {}
+        self._onehot_cache: dict = {}
+        self._build()
+        return self
+
+    def _auto_probe_b(self):
+        if self._probe_b is not None:
+            return self._probe_b
+        return np.random.default_rng(0).standard_normal(self.a.shape[0])
+
+    def _build(self):
+        if self.mesh is None:
+            self._build_sequential()
+        else:
+            self._build_distributed()
+
+    def _build_sequential(self):
+        from repro.sparse.csr import csr_spmbv
+
+        cfg = self.config
+        t = cfg.t
+        adaptive = "off" if cfg.adaptive.explicit_off else cfg.adaptive.policy
+        tuned = cfg.tune.tuned
+        if cfg.tune.mode == "measure":
+            raise ValueError(
+                'tune mode "measure" times candidate operators on a device '
+                "mesh; build the handle with mesh= (or use mode='model')"
+            )
+        if isinstance(t, str):  # "auto"
+            from repro.adaptive.select_t import resolve_auto_t
+
+            t, self.selection, adaptive = resolve_auto_t(
+                "auto", adaptive, a=self.a, b=self._auto_probe_b(),
+                select=cfg.adaptive.select, candidates=cfg.adaptive.t_candidates,
+                tol=cfg.tol, machine=cfg.comm.machine,
+                backend=cfg.kernel.backend,
+                probe_iters=cfg.adaptive.probe_iters,
+                probe_rtol=cfg.adaptive.probe_rtol,
+            )
+            if tuned is None and cfg.kernel.backend == "pallas":
+                # execute the tile the candidate costs were modeled with
+                tuned = self.selection.configs.get(t)
+        elif tuned is None and cfg.tune.active and cfg.kernel.backend == "pallas":
+            from repro.tune import tune as run_tune
+
+            tuned = run_tune(
+                self.a, t=t, machine=cfg.comm.machine, n_nodes=1, ppn=1,
+                backend="pallas", mode=cfg.tune.mode,
+            )
+        self.stats.builds += 1
+        self.tuned = tuned
+        self.t = t
+        self.policy = resolve_policy(adaptive)
+        self._segmented = False
+        ell_block = tuned.ell_block if tuned is not None else cfg.kernel.ell_block
+        if cfg.kernel.backend == "pallas":
+            from repro.kernels import make_block_ell_apply
+
+            self._apply = make_block_ell_apply(self.a, block=ell_block)
+        else:
+            self._apply = lambda V: csr_spmbv(self.a, V)
+        self._gram1 = self._gram2 = self._sqnorm = self._tail = None
+        self._split_fn = None
+
+    def _build_distributed(self):
+        from repro.sparse.partition import partition_csr
+        from repro.sparse.spmbv import _make_distributed_spmbv
+
+        cfg = self.config
+        n_nodes, ppn = self.mesh.devices.shape
+        if self._pm is None:
+            self._pm = partition_csr(self.a, n_nodes * ppn)
+
+        t = cfg.t
+        adaptive = "off" if cfg.adaptive.explicit_off else cfg.adaptive.policy
+        tune_arg = cfg.tune.tuned if cfg.tune.tuned is not None else cfg.tune.mode
+        strategy = cfg.comm.strategy
+        overlap = cfg.comm.overlap
+        ell_block = cfg.kernel.ell_block
+        if isinstance(t, str):  # "auto"
+            from repro.adaptive.select_t import resolve_auto_t
+
+            tune_mode = (
+                cfg.tune.mode if cfg.tune.mode in ("model", "model:structural")
+                else "model"
+            )
+            t, self.selection, adaptive = resolve_auto_t(
+                "auto", adaptive, a=self.a, b=self._auto_probe_b(),
+                select=cfg.adaptive.select, candidates=cfg.adaptive.t_candidates,
+                tol=cfg.tol, machine=cfg.comm.machine, n_nodes=n_nodes, ppn=ppn,
+                backend=cfg.kernel.backend, tune_mode=tune_mode,
+                probe_iters=cfg.adaptive.probe_iters,
+                probe_rtol=cfg.adaptive.probe_rtol,
+            )
+            if not cfg.tune.active:
+                # execute the exact config the choice was modeled with — a t
+                # optimized for one (strategy, tile, overlap) but run under
+                # another would make the selection meaningless.  Explicit
+                # comm/kernel settings are overridden (warn when that
+                # discards a non-default request).
+                tcfg = self.selection.configs.get(t)
+                if tcfg is not None:
+                    if strategy != "standard" or overlap or ell_block != (8, 8):
+                        warnings.warn(
+                            "t='auto' executes the tuner config its choice was "
+                            f"modeled with ({tcfg.strategy}/{tcfg.ell_block}/"
+                            f"{'overlap' if tcfg.overlap else 'blocking'}); the "
+                            f"explicit strategy={strategy!r}/overlap={overlap}/"
+                            f"ell_block={ell_block} settings are ignored — pass "
+                            "a fixed t to force them",
+                            stacklevel=4,
+                        )
+                    tune_arg = tcfg
+        self.op = _make_distributed_spmbv(
+            self.a, self.mesh, strategy, t=t, machine=cfg.comm.machine,
+            pm=self._pm, backend=cfg.kernel.backend, overlap=overlap,
+            ell_block=ell_block, tune=tune_arg, col_split=cfg.comm.col_split,
+        )
+        self.stats.builds += 1
+        if self.selection is not None and self.op.tuned is not None:
+            self.op.tuned = dataclasses.replace(
+                self.op.tuned, selection=self.selection
+            )
+        self.tuned = self.op.tuned
+        self.t = t
+        self.policy = resolve_policy(adaptive)
+        self._segmented = self.policy is not None and not self.policy.restart
+        self._apply = self.op.matvec_fn()
+        self._build_reducers()
+
+    def _build_reducers(self):
+        """The fused shard_map reductions of §3.1 (one psum each) and the
+        padded-layout T_{r,t} splitting — built once per operator."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.kernels.block_update.ops import ecg_tail
+        from repro.kernels.fused_gram.ops import fused_gram
+
+        op, mesh = self.op, self.mesh
+        backend = self.config.kernel.backend
+        axes = ("node", "proc")
+        vspec = op.vec_spec
+        self._gram1 = shard_map(
+            lambda z, az: jax.lax.psum(z.T @ az, axes),
+            mesh=mesh,
+            in_specs=(vspec, vspec),
+            out_specs=P(None, None),
+            check_rep=False,
+        )
+        if backend == "pallas":
+            self._gram2 = shard_map(
+                lambda pp, rr, ap, apo: jax.lax.psum(
+                    fused_gram(pp, rr, ap, apo), axes
+                ),
+                mesh=mesh,
+                in_specs=(vspec,) * 4,
+                out_specs=P(None, None),
+                check_rep=False,
+            )
+            self._tail = shard_map(
+                lambda x, r, pp, ap, po, c, d, do: ecg_tail(
+                    x, r, pp, ap, po, c, d, do
+                ),
+                mesh=mesh,
+                in_specs=(vspec,) * 5 + (P(None, None),) * 3,
+                out_specs=(vspec, vspec, vspec),
+                check_rep=False,
+            )
+        else:
+            self._gram2 = shard_map(
+                lambda pp, rr, ap, apo: jax.lax.psum(
+                    jnp.concatenate([pp.T @ rr, ap.T @ ap, apo.T @ ap], axis=1),
+                    axes,
+                ),
+                mesh=mesh,
+                in_specs=(vspec,) * 4,
+                out_specs=P(None, None),
+                check_rep=False,
+            )
+            self._tail = None
+        self._sqnorm = shard_map(
+            lambda v: jax.lax.psum(jnp.vdot(v, v), axes),
+            mesh=mesh,
+            in_specs=P(("node", "proc")),
+            out_specs=P(),
+            check_rep=False,
+        )
+
+        # T_{r,t} on the padded layout: subdomains follow *true* global row
+        # ids so the splitting matches the sequential solver exactly.
+        t = self.t
+        true_rows = op.true_row_of_slot()
+        sub = np.where(true_rows >= 0, (true_rows * t) // op.n, 0)
+        onehot_np = np.zeros((op.n_padded, t))
+        onehot_np[np.arange(op.n_padded), np.minimum(sub, t - 1)] = (
+            true_rows >= 0
+        ).astype(float)
+        self._onehot_np = onehot_np
+
+        def split(r, t_):
+            return r[:, None] * self._onehot(r.dtype)
+
+        self._split_fn = split
+
+    def _onehot(self, dtype):
+        """Device-resident T_{r,t} one-hot for ``dtype``.
+
+        Must be warmed *outside* a trace (see :meth:`solve`): the cached
+        value is a concrete sharded array that the traced split closure then
+        captures as a constant — device_put during tracing would leak a
+        tracer into the cache.
+        """
+        from jax.sharding import NamedSharding
+
+        key = jnp.dtype(dtype).name
+        hit = self._onehot_cache.get(key)
+        if hit is None:
+            hit = jax.device_put(
+                jnp.asarray(self._onehot_np, dtype),
+                NamedSharding(self.mesh, self.op.vec_spec),
+            )
+            self._onehot_cache[key] = hit
+        return hit
+
+    # ------------------------------------------------------------- runners
+    def _runner(self, width: int):
+        runner = self._runners.get(width)
+        if runner is None:
+            cfg = self.config
+            masked = None
+            exit_bw = None
+            if self._segmented:
+                # Width-segmented exchange: the full-width segment still
+                # carries the active mask (so the loop can exit on a
+                # reduction event); narrower segments compact the payload.
+                masked = (
+                    (lambda z, act: self._apply(z)) if width == self.t
+                    else self.op.masked_matvec_fn(width)
+                )
+                exit_bw = width
+            runner = make_ecg_runner(
+                self._apply, self.t, tol=cfg.tol, max_iters=cfg.max_iters,
+                split=self._split_fn, gram1=self._gram1, gram2=self._gram2,
+                sqnorm=self._sqnorm, tail=self._tail,
+                backend=cfg.kernel.backend, policy=self.policy,
+                a_apply_masked=masked, exit_below_width=exit_bw,
+            )
+            self._runners[width] = runner
+        return runner
+
+    def _jit(self, width: int, kind: str):
+        key = (width, kind)
+        fn = self._jits.get(key)
+        if fn is None:
+            runner = self._runner(width)
+            if kind == "fresh":
+                def go(b, x0):
+                    self.stats.traces += 1  # trace-time side effect only
+                    return runner.run(runner.init(b, x0))
+            else:
+                def go(carry):
+                    self.stats.traces += 1
+                    return runner.run(carry)
+            fn = jax.jit(go)
+            self._jits[key] = fn
+        return fn
+
+    # -------------------------------------------------------------- solving
+    def _device_vec(self, v):
+        if self.mesh is not None:
+            return self.op.shard_vector(np.asarray(v))
+        return jnp.asarray(v)
+
+    def solve(self, b, x0=None):
+        """Solve A x = b; returns a :class:`~repro.core.cg.SolveResult`.
+
+        ``b``/``x0`` are global (n,) vectors (numpy or jax); on a
+        distributed handle they are laid out onto the mesh here and the
+        returned ``res.x`` is in the padded per-rank layout — use
+        :meth:`unshard` for the global vector.  The first call traces and
+        compiles the solve loop; subsequent calls with the same operand
+        shape/dtype reuse the compiled program (``stats.traces`` is flat).
+        """
+        cfg = self.config
+        b_dev = self._device_vec(b)
+        x0_dev = jnp.zeros_like(b_dev) if x0 is None else self._device_vec(x0)
+        if self.mesh is not None:
+            self._onehot(b_dev.dtype)  # warm eagerly — a trace must not put
+        if not self._segmented:
+            out = self._jit(self.t, "fresh")(b_dev, x0_dev)
+            result = finalize_result(
+                out, x0=x0_dev, t=self.t, tol=cfg.tol, policy=self.policy,
+                selection=self.selection,
+            )
+        else:
+            # Width-segmented solve: each segment runs the jitted loop with
+            # the exchange compacted to the current static active width;
+            # when the reduction controller retires directions the loop
+            # exits, the plan is re-sliced at the new width (cached host
+            # work, no rebuild), and the solve resumes from the same carry.
+            t_seg, carry, k_prev, segments = self.t, None, 0, []
+            while True:
+                if carry is None:
+                    carry = self._jit(t_seg, "fresh")(b_dev, x0_dev)
+                else:
+                    carry = self._jit(t_seg, "resume")(carry)
+                k = int(carry["k"])
+                bd = bool(carry["bd"])
+                it_seg = k - k_prev
+                segments.append((t_seg, it_seg))
+                k_prev = k
+                n_act = int(jnp.sum(carry["act"]))
+                if (
+                    bool(carry["rn"] <= cfg.tol)
+                    or bd
+                    or k >= cfg.max_iters
+                    or n_act >= t_seg
+                    # every direction dead (rank-0 Gram without a non-finite
+                    # iterate) or a zero-progress segment: nothing a narrower
+                    # re-slice could fix — stop instead of spinning
+                    or n_act == 0
+                    or it_seg == 0
+                ):
+                    break
+                t_seg = max(n_act, 1)  # width-reduction event -> re-slice
+            result = finalize_result(
+                carry, x0=x0_dev, t=self.t, tol=cfg.tol, policy=self.policy,
+                selection=self.selection,
+            )
+            result.comm_segments = segments
+        self.stats.solves += 1
+        return result
+
+    def solve_many(self, bs, x0s=None):
+        """Solve the same operator against many right-hand sides.
+
+        Sequential multi-RHS: each solve reuses the jitted while-loop —
+        after the first solve, no retrace or recompile happens (asserted in
+        the test suite via ``stats.traces``).
+        """
+        x0s = [None] * len(bs) if x0s is None else list(x0s)
+        if len(x0s) != len(bs):
+            raise ValueError(f"got {len(bs)} rhs but {len(x0s)} initial guesses")
+        return [self.solve(b, x0) for b, x0 in zip(bs, x0s)]
+
+    def unshard(self, arr):
+        """Padded per-rank layout -> global (n, ...) numpy array (identity
+        for a sequential handle)."""
+        if self.op is None:
+            return np.asarray(arr)
+        return self.op.unshard(arr)
+
+    @property
+    def partition(self):
+        """The row partition this session was built on — pass it back to
+        ``ECGSolver.build(..., pm=)`` to share the partitioning cost across
+        independently configured sessions of the same matrix (None for a
+        sequential handle built without one)."""
+        return self._pm
+
+    # ----------------------------------------------------------- derivation
+    def with_config(self, **overrides) -> "ECGSolver":
+        """Derive a sibling handle with config overrides, reusing as much
+        setup as the overrides permit.
+
+        Solve-level overrides (``tol``, ``max_iters``, the adaptive policy)
+        reuse the operator, plan, and tuning outright — only the solve loop
+        is re-jitted.  Operator-level overrides (strategy/backend/tile/
+        overlap/tune/t) rebuild the operator but always reuse the row
+        partition.  Accepts the flat field spellings of
+        :meth:`SolverConfig.replace`.
+        """
+        new_cfg = self.config.replace(**overrides)
+        clone = ECGSolver.__new__(ECGSolver)
+        clone.a, clone.mesh, clone.config = self.a, self.mesh, new_cfg
+        clone.stats = SolverStats()
+        clone.selection = None
+        clone.tuned = None
+        clone.op = None
+        clone._pm = self._pm
+        clone._probe_b = self._probe_b
+        clone._runners, clone._jits = {}, {}
+        clone._onehot_cache = {}
+        reuse_op = (
+            new_cfg.t == self.config.t
+            and new_cfg.comm == self.config.comm
+            and new_cfg.kernel == self.config.kernel
+            and new_cfg.tune == self.config.tune
+            # a t="auto" resolution is derived from the adaptive knobs
+            # (candidates, cached select, probe budget/rtol, explicit off)
+            # AND the tolerance (est_iters-to-tol drives the ranking):
+            # changing any of them must re-run the selection, not reuse it
+            and (
+                not isinstance(self.config.t, str)
+                or (
+                    new_cfg.adaptive == self.config.adaptive
+                    and new_cfg.tol == self.config.tol
+                )
+            )
+        )
+        if reuse_op:
+            clone.op = self.op
+            clone.tuned = self.tuned
+            clone.selection = self.selection
+            clone.t = self.t
+            clone._apply = self._apply
+            clone._gram1, clone._gram2 = self._gram1, self._gram2
+            clone._sqnorm, clone._tail = self._sqnorm, self._tail
+            clone._split_fn = self._split_fn
+            clone._onehot_cache = self._onehot_cache
+            if self.mesh is not None:
+                clone._onehot_np = self._onehot_np
+            if new_cfg.adaptive == self.config.adaptive:
+                clone.policy = self.policy  # keeps auto-t's implied rankrev
+            else:
+                pol = new_cfg.adaptive.policy
+                if (
+                    pol is None
+                    and clone.selection is not None
+                    and not new_cfg.adaptive.explicit_off
+                ):
+                    # auto-t implies breakdown safety unless explicitly off
+                    pol = resolve_policy("rankrev")
+                clone.policy = pol
+            clone._segmented = (
+                clone.policy is not None
+                and not clone.policy.restart
+                and self.mesh is not None
+            )
+            clone.stats.op_reused = True
+            clone.stats.partition_reused = self.mesh is not None
+        else:
+            clone._build()
+            clone.stats.partition_reused = self.mesh is not None
+        return clone
+
+    # ---------------------------------------------------------- diagnostics
+    def lowered_text(self, dtype=None, width: int | None = None) -> str:
+        """Compiled HLO of the (fresh) solve program at ``width`` — used by
+        the collective-structure tests (§3.1 two-psum invariant)."""
+        import numpy as _np
+
+        dtype = jnp.float64 if dtype is None else dtype
+        width = self.t if width is None else width
+        n = self.op.n_padded if self.op is not None else self.a.shape[0]
+        if self.mesh is not None:
+            self._onehot(dtype)  # warm eagerly — a trace must not put
+        sds = jax.ShapeDtypeStruct((n,), _np.dtype(dtype))
+        return self._jit(width, "fresh").lower(sds, sds).compile().as_text()

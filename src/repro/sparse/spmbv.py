@@ -85,8 +85,6 @@ from repro.kernels.bsr_spmbv.ops import (
     count_block_ell_tiles,
     csr_arrays_to_block_ell,
 )
-from repro.kernels.fused_gram.ops import fused_gram
-from repro.kernels.block_update.ops import ecg_tail
 from repro.kernels.halo_pack.ops import halo_pack, halo_unpack
 
 
@@ -444,6 +442,42 @@ def make_distributed_spmbv(
     tune: str | object = "off",
     col_split: int | None = None,
 ) -> DistributedSpMBV:
+    """Deprecated spelling of the operator build — the handle API owns it.
+
+    ``ECGSolver.build(a, mesh, SolverConfig(...))`` performs the same
+    partition + plan + tune + Block-ELL setup once and exposes the operator
+    as ``solver.op``; this function remains for external callers that only
+    want the bare SpMBV operator.  See :func:`_make_distributed_spmbv` for
+    the argument documentation.
+    """
+    import warnings
+
+    warnings.warn(
+        "make_distributed_spmbv() is the legacy stringly-typed spelling; "
+        "build a repro.solver.ECGSolver handle (typed SolverConfig) and use "
+        "solver.op instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _make_distributed_spmbv(
+        a, mesh, strategy, t=t, machine=machine, pm=pm, backend=backend,
+        overlap=overlap, ell_block=ell_block, tune=tune, col_split=col_split,
+    )
+
+
+def _make_distributed_spmbv(
+    a: CSRMatrix,
+    mesh: Mesh,
+    strategy: str = "standard",
+    t: int = 1,
+    machine=None,
+    pm: PartitionedMatrix | None = None,
+    backend: str = "jnp",
+    overlap: bool = False,
+    ell_block: int | tuple[int, int] = 8,
+    tune: str | object = "off",
+    col_split: int | None = None,
+) -> DistributedSpMBV:
     """Partition ``a`` over ``mesh`` and build the device-ready operator.
 
     backend="pallas" additionally converts each rank's local [own ‖ halo]
@@ -638,160 +672,54 @@ def distributed_ecg(
     event triggers a cheap ``plan.at_width`` re-slice so subsequent
     iterations move ``t_active·rows·f`` bytes instead of full-width zeros.
     ``SolveResult.comm_segments`` records the (width, iterations) trace.
+
+    .. deprecated::
+        This is the legacy stringly-typed spelling.  It now builds a
+        :class:`repro.solver.ECGSolver` handle, solves once, and discards
+        the compiled session — build the handle yourself to amortize setup
+        and compilation over many right-hand sides.
     """
-    from repro.core.ecg import ecg_solve
+    import warnings
 
-    if strategy == "tuned" and (tune is None or tune == "off"):
-        tune = "model"
-
-    selection = None
-    if isinstance(t, str):
-        from repro.adaptive.select_t import resolve_auto_t
-
-        n_nodes, ppn = mesh.devices.shape
-        t, selection, adaptive = resolve_auto_t(
-            t, adaptive, a=a, b=b, candidates=t_candidates, tol=tol,
-            machine=machine, n_nodes=n_nodes, ppn=ppn, backend=backend,
-            tune_mode=tune if tune in ("model", "model:structural") else "model",
-        )
-        if tune is None or tune == "off":
-            # execute the exact config the choice was modeled with — without
-            # this, the chosen t would optimize a (strategy, tile, overlap)
-            # that never runs.  Explicit strategy/overlap/ell_block arguments
-            # are overridden (see docstring); warn when that actually
-            # discards a non-default request.
-            cfg = selection.configs.get(t)
-            if cfg is not None:
-                if strategy != "standard" or overlap or ell_block != 8:
-                    import warnings
-
-                    warnings.warn(
-                        "distributed_ecg(t='auto') executes the tuner config "
-                        f"its choice was modeled with ({cfg.strategy}/"
-                        f"{cfg.ell_block}/{'overlap' if cfg.overlap else 'blocking'}); "
-                        f"the explicit strategy={strategy!r}/overlap={overlap}/"
-                        f"ell_block={ell_block} arguments are ignored — pass a "
-                        "fixed t to force them",
-                        stacklevel=2,
-                    )
-                tune = cfg
-    op = make_distributed_spmbv(
-        a, mesh, strategy if strategy != "tuned" else "standard", t=t,
+    warnings.warn(
+        "distributed_ecg() is the legacy stringly-typed spelling; build a "
+        "repro.solver.ECGSolver handle (compile-once / solve-many, typed "
+        "SolverConfig) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    solver = _build_legacy_solver(
+        a, mesh, t, strategy=strategy, tol=tol, max_iters=max_iters,
         machine=machine, backend=backend, overlap=overlap,
-        ell_block=ell_block, tune=tune,
+        ell_block=ell_block, tune=tune, adaptive=adaptive,
+        t_candidates=t_candidates, b=b,
     )
-    apply_a = op.matvec_fn()
-    b_sh = op.shard_vector(b)
-    n_pad = op.n_padded
-    axes = ("node", "proc")
-    vspec = op.vec_spec
+    return solver.solve(b), solver.op
 
-    # fused reductions (§3.1): exactly one psum each, via shard_map
-    gram1 = shard_map(
-        lambda z, az: jax.lax.psum(z.T @ az, axes),
-        mesh=mesh,
-        in_specs=(vspec, vspec),
-        out_specs=P(None, None),
-        check_rep=False,
-    )
-    if backend == "pallas":
-        gram2 = shard_map(
-            lambda pp, rr, ap, apo: jax.lax.psum(fused_gram(pp, rr, ap, apo), axes),
-            mesh=mesh,
-            in_specs=(vspec,) * 4,
-            out_specs=P(None, None),
-            check_rep=False,
-        )
-        tail = shard_map(
-            lambda x, r, pp, ap, po, c, d, do: ecg_tail(x, r, pp, ap, po, c, d, do),
-            mesh=mesh,
-            in_specs=(vspec,) * 5 + (P(None, None),) * 3,
-            out_specs=(vspec, vspec, vspec),
-            check_rep=False,
-        )
-    else:
-        gram2 = shard_map(
-            lambda pp, rr, ap, apo: jax.lax.psum(
-                jnp.concatenate([pp.T @ rr, ap.T @ ap, apo.T @ ap], axis=1), axes
-            ),
-            mesh=mesh,
-            in_specs=(vspec,) * 4,
-            out_specs=P(None, None),
-            check_rep=False,
-        )
-        tail = None
-    sqnorm = shard_map(
-        lambda v: jax.lax.psum(jnp.vdot(v, v), axes),
-        mesh=mesh,
-        in_specs=P(("node", "proc")),
-        out_specs=P(),
-        check_rep=False,
+
+def _build_legacy_solver(
+    a, mesh, t, *, strategy="standard", tol=1e-8, max_iters=500, machine=None,
+    backend="jnp", overlap=False, ell_block=8, tune="off", adaptive=None,
+    t_candidates=(1, 2, 4, 8, 16), b=None,
+):
+    """Map the legacy ``distributed_ecg`` argument list onto a typed
+    :class:`~repro.solver.SolverConfig` and build the handle."""
+    from repro.solver import (
+        AdaptiveConfig, CommConfig, ECGSolver, KernelConfig, SolverConfig,
+        TuneConfig,
     )
 
-    # T_{r,t} on the padded layout: subdomains follow *true* global row ids so
-    # the splitting matches the sequential solver exactly; pad slots masked.
-    true_rows = op.true_row_of_slot()
-    sub = np.where(true_rows >= 0, (true_rows * t) // op.n, 0)
-    onehot_np = np.zeros((n_pad, t))
-    onehot_np[np.arange(n_pad), np.minimum(sub, t - 1)] = (true_rows >= 0).astype(float)
-    onehot = jax.device_put(
-        jnp.asarray(onehot_np, b_sh.dtype), NamedSharding(mesh, op.vec_spec)
+    if strategy == "tuned":
+        strategy = "standard"
+        if tune is None or tune == "off":
+            tune = "model"
+    config = SolverConfig(
+        t=t,
+        tol=tol,
+        max_iters=max_iters,
+        comm=CommConfig(strategy=strategy, overlap=overlap, machine=machine),
+        kernel=KernelConfig(backend=backend, ell_block=ell_block),
+        tune=TuneConfig.coerce(None if tune == "off" else tune),
+        adaptive=AdaptiveConfig(policy=adaptive, t_candidates=tuple(t_candidates)),
     )
-
-    def split(r, t_):
-        return r[:, None] * onehot
-
-    from repro.adaptive.reduce import resolve_policy
-
-    common = dict(
-        t=t, tol=tol, max_iters=max_iters, split=split, gram1=gram1,
-        gram2=gram2, sqnorm=sqnorm, tail=tail, backend=backend,
-        adaptive=adaptive,
-    )
-    policy = resolve_policy(adaptive)
-    if policy is None or policy.restart:
-        # fixed-width exchange (restart can re-enlarge mid-loop, so the
-        # full-width plan must stay wired in)
-        result = ecg_solve(apply_a, b_sh, **common)
-    else:
-        # Width-segmented solve: each segment runs the jitted loop with the
-        # exchange compacted to the current static active width; when the
-        # reduction controller retires directions the loop exits, the plan
-        # is re-sliced at the new width (plan.at_width — cached host work,
-        # no rebuild), and the solve resumes from the same carry.  The
-        # iterates are the ones the monolithic loop would produce — only
-        # the halo-exchange payload shrinks.
-        t_seg, carry, k_prev, segments = t, None, 0, []
-        while True:
-            masked = (
-                (lambda z, act: apply_a(z)) if t_seg == t
-                else op.masked_matvec_fn(t_seg)
-            )
-            result = ecg_solve(
-                apply_a, b_sh, **common, a_apply_masked=masked,
-                exit_below_width=t_seg, resume_state=carry,
-            )
-            carry = result.final_carry
-            it_seg = result.n_iters - k_prev
-            segments.append((t_seg, it_seg))
-            k_prev = result.n_iters
-            n_act = int(jnp.sum(carry["act"]))
-            if (
-                result.converged
-                or result.breakdown
-                or result.n_iters >= max_iters
-                or n_act >= t_seg
-                # every direction dead (rank-0 Gram without a non-finite
-                # iterate) or a zero-progress segment: nothing a narrower
-                # re-slice could fix — stop instead of spinning
-                or n_act == 0
-                or it_seg == 0
-            ):
-                break
-            t_seg = max(n_act, 1)  # width-reduction event -> re-slice
-        result.comm_segments = segments
-    if selection is not None:
-        result.selection = selection
-        if op.tuned is not None:
-            op.tuned = dataclasses.replace(op.tuned, selection=selection)
-    return result, op
+    return ECGSolver.build(a, mesh, config, b=b)

@@ -40,8 +40,14 @@ from repro.tune.autotune import (
     tile_stats,
     tile_time,
     tune,
+    tunedconfig_from_dict,
+    tunedconfig_to_dict,
 )
-from repro.tune.microbench import measure_config, tune_measured
+from repro.tune.microbench import (
+    measure_config,
+    measure_dispatch_overhead,
+    tune_measured,
+)
 
 __all__ = [
     "DEFAULT_TILES",
@@ -53,6 +59,9 @@ __all__ = [
     "tile_stats",
     "tile_time",
     "tune",
+    "tunedconfig_from_dict",
+    "tunedconfig_to_dict",
     "measure_config",
+    "measure_dispatch_overhead",
     "tune_measured",
 ]

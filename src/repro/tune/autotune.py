@@ -109,6 +109,94 @@ class TunedConfig:
     def ell_block(self) -> tuple[int, int]:
         return (self.br, self.bc)
 
+    def to_json(self) -> str:
+        """Serialize to a JSON string (lossless round trip via
+        :meth:`from_json`), so a tuned config can be cached on disk and fed
+        back through ``SolverConfig(tune=TunedConfig.from_json(...))``
+        without re-running the tuner.  The resolved ``machine`` parameters,
+        the full ``predicted`` table, and a ``selection`` (when t itself was
+        chosen by ``t="auto"``) all round-trip."""
+        import json
+
+        return json.dumps(tunedconfig_to_dict(self))
+
+    @classmethod
+    def from_json(cls, data) -> "TunedConfig":
+        """Inverse of :meth:`to_json`; accepts the JSON string or the
+        already-parsed dict."""
+        import json
+
+        if isinstance(data, (str, bytes)):
+            data = json.loads(data)
+        return tunedconfig_from_dict(data)
+
+
+def _jsonify(obj):
+    """Recursively convert numpy scalars / tuples to JSON-native values."""
+    if isinstance(obj, dict):
+        return {k: _jsonify(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonify(v) for v in obj]
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    return obj
+
+
+def tunedconfig_to_dict(cfg: TunedConfig) -> dict:
+    """JSON-safe dict form of a TunedConfig (see ``TunedConfig.to_json``)."""
+    d = dict(
+        strategy=cfg.strategy,
+        br=int(cfg.br),
+        bc=int(cfg.bc),
+        kmax=int(cfg.kmax),
+        overlap=bool(cfg.overlap),
+        backend=cfg.backend,
+        t=int(cfg.t),
+        mode=cfg.mode,
+        col_split=int(cfg.col_split),
+        machine=(
+            _jsonify(dataclasses.asdict(cfg.machine))
+            if cfg.machine is not None else None
+        ),
+        predicted=_jsonify(cfg.predicted),
+        selection=None,
+    )
+    if cfg.selection is not None:
+        from repro.adaptive.select_t import tselection_to_dict
+
+        d["selection"] = tselection_to_dict(cfg.selection)
+    return d
+
+
+def tunedconfig_from_dict(d: dict) -> TunedConfig:
+    """Inverse of :func:`tunedconfig_to_dict`."""
+    from repro.core.machines import MachineParams
+
+    sel = d.get("selection")
+    if sel is not None:
+        from repro.adaptive.select_t import tselection_from_dict
+
+        sel = tselection_from_dict(sel)
+    m = d.get("machine")
+    return TunedConfig(
+        strategy=str(d["strategy"]),
+        br=int(d["br"]),
+        bc=int(d["bc"]),
+        kmax=int(d["kmax"]),
+        overlap=bool(d["overlap"]),
+        backend=str(d["backend"]),
+        t=int(d["t"]),
+        mode=str(d["mode"]),
+        col_split=int(d.get("col_split", 1)),
+        machine=MachineParams(**m) if m is not None else None,
+        predicted=d.get("predicted") or {},
+        selection=sel,
+    )
+
 
 # --------------------------------------------------------------- tile model
 def _rebased_local(pm: PartitionedMatrix):

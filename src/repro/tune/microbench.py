@@ -42,9 +42,9 @@ def measure_config(
     # the one warmup+median timer shared with the benchmark sweeps, so
     # tuner measurements and benchmark rows stay comparable
     from repro.analysis.ecg_bench import _timeit
-    from repro.sparse.spmbv import make_distributed_spmbv
+    from repro.sparse.spmbv import _make_distributed_spmbv
 
-    op = make_distributed_spmbv(
+    op = _make_distributed_spmbv(
         a, mesh, strategy, t=t, machine=machine, pm=pm,
         backend=backend, overlap=overlap, ell_block=ell_block,
     )
@@ -52,6 +52,69 @@ def measure_config(
     rng = np.random.default_rng(seed)
     v = op.shard_vector(rng.standard_normal((a.shape[0], t)))
     return _timeit(f, v, repeats=repeats)
+
+
+def measure_dispatch_overhead(
+    mesh,
+    rows: int = 64,
+    width: int = 4,
+    chain: tuple[int, int] = (2, 16),
+    repeats: int = 7,
+    dtype=None,
+) -> float:
+    """Measured seconds per executor dispatch (one pack / ppermute / unpack
+    op), the constant the structural cost model charges as
+    ``MachineParams.dispatch_overhead``.
+
+    Times two jitted shard_map programs that chain the packed executor's
+    primitive triple — ``halo_pack`` → ``lax.ppermute`` → ``halo_unpack`` —
+    ``chain[0]`` and ``chain[1]`` times over a tiny (rows, width) buffer,
+    with a data dependency between links so XLA cannot elide or reorder
+    them.  The buffer is deliberately small: the byte terms are negligible,
+    so the wall-time *slope* over the extra links is pure per-op dispatch
+    cost.  Returns the slope divided by 3 ops per link (clamped to a tiny
+    positive floor so a noisy host never yields a non-positive constant).
+
+    Feed the result back with
+    ``dataclasses.replace(machine, dispatch_overhead=measured)`` to
+    calibrate ``tune="model:structural"``; ``benchmarks/comm_sweep.py``
+    records it in ``BENCH_comm_sweep.json``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis.ecg_bench import _timeit
+    from repro.kernels.halo_pack.ops import halo_pack, halo_unpack
+
+    dtype = dtype or np.float64
+    p = int(mesh.devices.size)
+    perm = [(i, (i + 1) % p) for i in range(p)]
+    gidx = jnp.arange(rows, dtype=jnp.int32)
+    spos = jnp.arange(rows, dtype=jnp.int32)
+
+    def chain_fn(m):
+        def per_device(x):
+            for _ in range(m):
+                buf = halo_pack(x, gidx)
+                buf = jax.lax.ppermute(buf, ("node", "proc"), perm)
+                stage = jnp.zeros((rows + 1, x.shape[1]), x.dtype)
+                stage = halo_unpack(stage, buf, spos)
+                x = stage[:rows]  # dependency: next link waits on this one
+            return x
+        return jax.jit(shard_map(
+            per_device, mesh=mesh, in_specs=P(), out_specs=P(),
+            check_rep=False,
+        ))
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((rows, width)), dtype)
+    m_lo, m_hi = chain
+    us_lo = _timeit(chain_fn(m_lo), x, repeats=repeats)
+    us_hi = _timeit(chain_fn(m_hi), x, repeats=repeats)
+    per_op_s = (us_hi - us_lo) * 1e-6 / ((m_hi - m_lo) * 3)
+    return max(per_op_s, 1e-9)
 
 
 def tune_measured(

@@ -16,6 +16,8 @@ def test_distributed_spmbv_and_ecg():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = str(ROOT / "src")
+    # (dist_worker.py installs its own repro-internal DeprecationWarning →
+    # error filter: PYTHONWARNINGS cannot express a module regex)
     proc = subprocess.run(
         [sys.executable, str(ROOT / "tests" / "dist_worker.py")],
         env=env,
