@@ -277,19 +277,27 @@ def iteration_cost(
     pm=None,
     backend: str = "jnp",
     tune_mode: str = "model",
+    method: str = "classic",
+    s: int = 1,
+    reorth: bool = False,
 ):
-    """Modeled seconds for one ECG iteration at width t: the tuner's best
-    SpMBV config + the §3.1 collective model + γ·(local non-SpMBV flops).
+    """Modeled seconds for one *effective* ECG iteration at width t: the
+    tuner's best SpMBV config + the scheme's synchronization term
+    (:func:`repro.tune.method_sync_cost` — for ``method="classic"`` exactly
+    the §3.1 collective model) + γ·(local non-SpMBV flops).
 
     ``tune_mode`` selects the tuner's exchange model (``"model"`` analytic
-    max-rate, ``"model:structural"`` plan dispatches + moved bytes).
+    max-rate, ``"model:structural"`` plan dispatches + moved bytes);
+    ``method``/``s``/``reorth`` select the iteration scheme whose collective
+    and local-work accounting is charged (classic is the default and
+    reproduces the original cost exactly).
 
     Returns ``(seconds, TunedConfig)`` — the config is the same object
     ``make_distributed_spmbv(..., tune=cfg)`` would apply, so a ``t="auto"``
     choice and the executed plan can never drift apart.
     """
     from repro.core.ecg import ECGOperationCounts
-    from repro.core.models import t_collective
+    from repro.tune.autotune import _method_local_flops, method_sync_cost
     from repro.tune import tune as run_tune
 
     cfg = run_tune(
@@ -300,8 +308,14 @@ def iteration_cost(
     p = n_nodes * ppn
     spmbv = cfg.predicted["best"]
     counts = ECGOperationCounts(n=a.shape[0], nnz=a.nnz, p=p, t=t)
-    local_flops = counts.total_flops - counts.spmbv_flops
-    collective = t_collective(p, t, machine) if p > 1 else 0.0
+    local_flops = _method_local_flops(method, counts, s=s, reorth=reorth)
+    collective = (
+        method_sync_cost(
+            method, t, p, machine, s=s, reorth=reorth, t_spmbv_window=spmbv
+        )
+        if p > 1
+        else 0.0
+    )
     return spmbv + machine.gamma * local_flops + collective, cfg
 
 
@@ -345,6 +359,9 @@ def select_t(
     tune_mode: str = "model",
     adaptive: object = "rankrev",
     probe_rtol: float = 0.01,
+    method: str = "classic",
+    s: int = 1,
+    reorth: bool = False,
 ) -> TSelection:
     """Rank candidate enlarging factors and pick the modeled-cheapest one.
 
@@ -364,6 +381,11 @@ def select_t(
               stops as soon as its fitted decay rate is stable within this
               relative tolerance (0 disables; the iterations actually run
               are recorded in ``TSelection.probe_iters_used``).
+    method/s/reorth: the iteration scheme whose per-effective-iteration cost
+              is charged (see :mod:`repro.core.methods`).  The probes always
+              run the classic scheme — all three schemes walk the same
+              enlarged Krylov space, so the calibrated decay rate carries
+              over to first order while the probe stays cheap.
     """
     from repro.sparse.csr import csr_spmbv
 
@@ -399,6 +421,7 @@ def select_t(
         cost, cfg = iteration_cost(
             a, t, machine=machine, n_nodes=n_nodes, ppn=ppn, pm=pm,
             backend=backend, tune_mode=tune_mode,
+            method=method, s=s, reorth=reorth,
         )
         if avg_active < t and n_nodes * ppn > 1 and not cfg.overlap:
             # post-reduction byte savings: the width-aware exchange moves
@@ -438,6 +461,9 @@ def resolve_auto_t(
     tune_mode: str = "model",
     probe_iters: int = 8,
     probe_rtol: float = 0.01,
+    method: str = "classic",
+    s: int = 1,
+    reorth: bool = False,
 ):
     """Shared ``t="auto"`` resolution for the solvers.
 
@@ -462,6 +488,7 @@ def resolve_auto_t(
             n_nodes=n_nodes, ppn=ppn, backend=backend,
             tune_mode=tune_mode, adaptive=probe_adaptive,
             probe_iters=probe_iters, probe_rtol=probe_rtol,
+            method=method, s=s, reorth=reorth,
         )
     if adaptive is None:
         adaptive = "rankrev"  # auto-t implies breakdown safety

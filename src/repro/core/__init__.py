@@ -3,12 +3,16 @@
 from repro.core.cg import cg_solve, SolveResult
 from repro.core.ecg import ecg_solve, ECGOperationCounts
 from repro.core.enlarging import split_residual, split_rank, collapse
+from repro.core.methods import METHODS, MethodSpec, get_method
 
 __all__ = [
     "cg_solve",
     "ecg_solve",
     "SolveResult",
     "ECGOperationCounts",
+    "METHODS",
+    "MethodSpec",
+    "get_method",
     "split_residual",
     "split_rank",
     "collapse",

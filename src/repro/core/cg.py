@@ -1,8 +1,18 @@
-"""Classical conjugate gradients — the paper's baseline method."""
+"""Classical conjugate gradients — the paper's baseline method.
+
+Plain CG *is* enlarged CG at t=1 (the splitting is the identity, the block
+recurrences collapse to the scalar ones), so the standalone while-loop this
+module used to carry is gone: :func:`_cg_solve` runs the classic method of
+the pluggable ECG engine at width 1 and inherits its breakdown guard.  Only
+:class:`SolveResult` (the result type every solver returns) and
+:func:`_guarded_while` (the breakdown-guarded loop the engine drives) live
+here.
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import jax
@@ -77,6 +87,29 @@ def _guarded_while(cond_extra, body_fn, init: dict):
     return jax.lax.while_loop(cond, body, init)
 
 
+def _cg_solve(
+    a_apply: Callable[[jax.Array], jax.Array],
+    b: jax.Array,
+    x0: jax.Array | None = None,
+    tol: float = 1e-8,
+    max_iters: int = 1000,
+) -> SolveResult:
+    """Plain CG = the classic ECG method at t=1 (internal spelling).
+
+    ``a_apply`` is the (possibly distributed) *vector* SpMV — it is adapted
+    to the engine's width-1 block shape here.  The t=1 Gram matrix is the
+    1×1 curvature pᵀAp, so the engine's breakdown guard subsumes the old
+    zero-curvature guard.
+    """
+    from repro.core.ecg import _ecg_solve  # lazy: ecg imports this module
+
+    res = _ecg_solve(
+        lambda v_block: a_apply(v_block[:, 0])[:, None],
+        b, 1, x0=x0, tol=tol, max_iters=max_iters,
+    )
+    return dataclasses.replace(res, t=None)  # plain CG has no enlarging factor
+
+
 def cg_solve(
     a_apply: Callable[[jax.Array], jax.Array],
     b: jax.Array,
@@ -84,35 +117,17 @@ def cg_solve(
     tol: float = 1e-8,
     max_iters: int = 1000,
 ) -> SolveResult:
-    """Solve A x = b with CG. ``a_apply`` is the (possibly distributed) SpMV."""
-    x0 = jnp.zeros_like(b) if x0 is None else x0
-    r0 = b - a_apply(x0)
-    rn0 = jnp.linalg.norm(r0)
-    hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=b.dtype).at[0].set(rn0)
+    """Solve A x = b with CG. ``a_apply`` is the (possibly distributed) SpMV.
 
-    def body(carry):
-        x, r, p, rz, k = carry["x"], carry["r"], carry["p"], carry["rz"], carry["k"]
-        ap = a_apply(p)
-        alpha = rz / (p @ ap)
-        x = x + alpha * p
-        r = r - alpha * ap
-        rz_new = r @ r
-        beta = rz_new / rz
-        p = r + beta * p
-        rn = jnp.sqrt(rz_new)
-        hist = carry["hist"].at[k + 1].set(rn)
-        return dict(x=x, r=r, p=p, rz=rz_new, k=k + 1, rn=rn, hist=hist, bd=carry["bd"])
-
-    out = _guarded_while(
-        lambda c: (c["rn"] > tol) & (c["k"] < max_iters),
-        body,
-        dict(x=x0, r=r0, p=r0, rz=r0 @ r0, k=jnp.int32(0), rn=rn0, hist=hist0),
+    .. deprecated::
+        Plain CG is enlarged CG at t=1; use the engine directly — a
+        :class:`repro.solver.ECGSolver` handle with ``SolverConfig(t=1)``
+        (compile-once / solve-many), or this one-shot shim.
+    """
+    warnings.warn(
+        "cg_solve() now runs the classic ECG method at t=1; build a "
+        "repro.solver.ECGSolver handle with SolverConfig(t=1) instead",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    breakdown = bool(out["bd"])
-    return SolveResult(
-        x=out["x"],
-        n_iters=int(out["k"]),
-        res_hist=out["hist"],
-        converged=bool(out["rn"] <= tol) and not breakdown,
-        breakdown=breakdown,
-    )
+    return _cg_solve(a_apply, b, x0=x0, tol=tol, max_iters=max_iters)

@@ -18,6 +18,12 @@ the shard_map-distributed run, so the same iteration body serves both — and
 the fusion of the second reduction (c, d, d_old packed in one buffer) is
 structural, not cosmetic.
 
+The per-iteration maths above is the *classic* scheme — one of three
+pluggable iteration schemes (:mod:`repro.core.methods`): ``pipelined``
+overlaps the packed Gram reduction with the SpMBV exchange via an AZ
+recurrence, and ``sstep`` amortizes both psums over s SpMBV sweeps with a
+rank-revealing safeguard.  This module is the method-agnostic driver.
+
 Two layers live here:
 
 * :func:`make_ecg_runner` — builds the pure iteration machinery once (an
@@ -59,26 +65,13 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.adaptive.rankrev import rank_revealing_apply
-from repro.adaptive.reduce import plateau_update, resolve_policy, stagnation_mask
+from repro.adaptive.reduce import resolve_policy
 from repro.core.cg import SolveResult, _guarded_while
 from repro.core.enlarging import split_residual
+from repro.core.methods import MethodContext, get_method
+from repro.core.methods.base import _apply_vec, _chol_inv_apply  # noqa: F401  (back-compat re-exports)
 from repro.kernels.block_update.ops import ecg_tail
 from repro.kernels.fused_gram.ops import fused_gram
-
-
-def _chol_inv_apply(g: jax.Array, *mats: jax.Array, eps: float = 0.0):
-    """Given G = CᵀC, return [M C⁻¹ for M in mats] via triangular solves."""
-    t = g.shape[0]
-    if eps:
-        g = g + eps * jnp.eye(t, dtype=g.dtype)
-    c = jnp.linalg.cholesky(g, upper=True)  # G = CᵀC with C upper-triangular
-    outs = []
-    for m in mats:
-        # solve Y C = M  =>  Cᵀ Yᵀ = Mᵀ  (lower-triangular solve)
-        y = jax.scipy.linalg.solve_triangular(c.T, m.T, lower=True).T
-        outs.append(y)
-    return outs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +96,8 @@ class ECGRunner:
     init: Callable
     step: Callable
     run: Callable
+    method: str = "classic"
+    s: int = 1
 
 
 def make_ecg_runner(
@@ -123,6 +118,10 @@ def make_ecg_runner(
     policy: object = None,
     a_apply_masked: Callable | None = None,
     exit_below_width: int | None = None,
+    method: str = "classic",
+    s: int = 1,
+    reorth: bool = False,
+    rank_rtol: float | None = None,
 ) -> ECGRunner:
     """Build the ECG iteration machinery for one fixed configuration.
 
@@ -131,6 +130,14 @@ def make_ecg_runner(
     resolved :class:`~repro.adaptive.ReductionPolicy` (or None).  See the
     module docstring of :mod:`repro.core.ecg` for the iteration body and
     :func:`ecg_solve` for the meaning of each hook.
+
+    ``method`` selects the iteration scheme ("classic" | "pipelined" |
+    "sstep" — see :mod:`repro.core.methods`); ``s``/``reorth``/``rank_rtol``
+    parameterize the s-step scheme (inner-step count, per-block
+    Cholesky-QR2 second pass, safeguard pivot threshold).  This driver owns
+    only the reduction-closure defaults, the convergence condition, and the
+    breakdown-guarded while-loop; the per-iteration maths lives in the
+    method spec.
     """
     if policy is not None and chol_eps:
         raise ValueError(
@@ -140,10 +147,20 @@ def make_ecg_runner(
         )
     if backend not in ("jnp", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
+    if not isinstance(s, int) or s < 1:
+        raise ValueError(f"s must be an int >= 1, got {s!r}")
+    spec = get_method(method)
+
+    # The fixed-shape Pallas gram/tail kernels assume the classic (t, 3t)
+    # packed layout; s-step reduces mixed widths ((st, t+2st) packed, (n, st)
+    # blocks), so its default reductions always go through the
+    # width-polymorphic jnp path regardless of ``backend`` — the SpMBV keeps
+    # whatever backend the operator was built with.
+    kernel_backend = backend if spec.name != "sstep" else "jnp"
     if gram1 is None:
         gram1 = lambda z, az: allreduce(z.T @ az)
     if gram2 is None:
-        if backend == "pallas":
+        if kernel_backend == "pallas":
             gram2 = lambda p, r, ap, apo: allreduce(fused_gram(p, r, ap, apo))
         else:
             gram2 = lambda p, r, ap, apo: allreduce(
@@ -152,7 +169,7 @@ def make_ecg_runner(
     if sqnorm is None:
         sqnorm = lambda v: allreduce(jnp.asarray([[v @ v]], v.dtype))[0, 0]
     if tail is None:
-        if backend == "pallas":
+        if kernel_backend == "pallas":
             tail = ecg_tail
         else:
             tail = lambda x, r, p, ap, po, c, d, do: (
@@ -163,95 +180,14 @@ def make_ecg_runner(
     )
     use_mask = a_apply_masked is not None and policy is not None
 
-    def iterate(carry):
-        big_x, big_r, z = carry["X"], carry["R"], carry["Z"]
-        p_old, ap_old = carry["P"], carry["AP"]
-        k, hist = carry["k"], carry["hist"]
-
-        if use_mask:
-            az = a_apply_masked(z, carry["act"])  # width-compacted SpMBV [p2p]
-        else:
-            az = a_apply(z)  # SpMBV  [p2p]
-        g = gram1(z, az)  # allreduce #1: t² floats
-        if policy is None:
-            p, ap = _chol_inv_apply(g, z, az, eps=chol_eps)  # local chol + TRSMs
-            active = None
-        else:
-            # pivoted rank-revealing factorization: dependent directions come
-            # out as zero-masked columns instead of NaNs (local, no comm)
-            (p, ap), _rank, active = rank_revealing_apply(
-                g, z, az, rtol=policy.rank_rtol
-            )
-
-        # fused block inner products: one packed reduction of 3t² floats
-        packed = gram2(p, big_r, ap, ap_old)  # allreduce #2: 3t² floats
-        c, d, d_old = jnp.split(packed, 3, axis=1)
-
-        # fused tail: X += Pc, R -= APc, Z = AP − Pd − P_old d_old
-        big_x, big_r, z_new = tail(big_x, big_r, p, ap, p_old, c, d, d_old)
-        if policy is not None:
-            # flexible-ECG stagnation drops; a zeroed Z column stays dead
-            # (its G row/column is zero next iteration), so no mask needs
-            # carrying for the maths — the block vectors themselves are the
-            # mask.  The width-compacted exchange does carry it (``act``),
-            # to know which columns to pack.
-            active = stagnation_mask(c, carry["rn"], active, policy)
-            z_new = z_new * active.astype(z_new.dtype)[None, :]
-        rsum = big_r.sum(axis=1)
-        rn = jnp.sqrt(sqnorm(rsum))
-        hist = hist.at[k + 1].set(rn)
-        out = dict(
-            X=big_x, R=big_r, Z=z_new, P=p, AP=ap, k=k + 1, rn=rn, hist=hist,
-            bd=carry["bd"],
-        )
-        if use_mask:
-            out["act"] = active
-        if policy is not None:
-            n_active = jnp.sum(active).astype(jnp.int32)
-            best_rn, since = plateau_update(
-                rn, carry["best_rn"], carry["since"], policy
-            )
-            restarts = carry["restarts"]
-            if policy.restart:
-                # re-enlarge: rebuild the full t-wide splitting from the
-                # current residual when progress plateaus on a reduced block
-                do_rs = (since >= policy.plateau_window) & (n_active < t)
-                fresh = split_fn(rsum, t)
-                out["R"] = jnp.where(do_rs, fresh, out["R"])
-                out["Z"] = jnp.where(do_rs, fresh, out["Z"])
-                out["P"] = jnp.where(do_rs, jnp.zeros_like(p), out["P"])
-                out["AP"] = jnp.where(do_rs, jnp.zeros_like(ap), out["AP"])
-                n_active = jnp.where(do_rs, jnp.int32(t), n_active)
-                since = jnp.where(do_rs, 0, since)
-                best_rn = jnp.where(do_rs, rn, best_rn)
-                restarts = restarts + do_rs.astype(jnp.int32)
-            out.update(
-                best_rn=best_rn, since=since, restarts=restarts,
-                ahist=carry["ahist"].at[k + 1].set(n_active),
-            )
-        return out
-
-    def init(b, x0):
-        n = b.shape[0]
-        dtype = b.dtype
-        zeros_nt = jnp.zeros((n, t), dtype)
-        r0 = b - _apply_vec(a_apply, x0, t)  # initial SpMV (Alg 3 line 1)
-        big_r0 = split_fn(r0, t)
-        rn0 = jnp.sqrt(sqnorm(r0))
-        hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=dtype).at[0].set(rn0)
-        carry = dict(X=zeros_nt, R=big_r0, Z=big_r0, P=zeros_nt, AP=zeros_nt,
-                     k=jnp.int32(0), rn=rn0, hist=hist0,
-                     bd=~jnp.isfinite(rn0))
-        if policy is not None:
-            carry.update(
-                best_rn=rn0,
-                since=jnp.int32(0),
-                restarts=jnp.int32(0),
-                ahist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(t),
-            )
-        if use_mask:
-            carry["act"] = jnp.ones((t,), bool)
-        return carry
+    ctx = MethodContext(
+        t=t, s=s, max_iters=max_iters, policy=policy, use_mask=use_mask,
+        chol_eps=chol_eps, reorth=reorth, rank_rtol=rank_rtol,
+        backend=backend, a_apply=a_apply, a_apply_masked=a_apply_masked,
+        split_fn=split_fn, gram1=gram1, gram2=gram2, sqnorm=sqnorm, tail=tail,
+    )
+    spec.validate(ctx)
+    init, iterate = spec.build(ctx)
 
     def cond(c):
         go = (c["rn"] > tol) & (c["k"] < max_iters)
@@ -266,7 +202,7 @@ def make_ecg_runner(
 
     return ECGRunner(
         t=t, tol=tol, max_iters=max_iters, policy=policy, use_mask=use_mask,
-        init=init, step=iterate, run=run,
+        init=init, step=iterate, run=run, method=spec.name, s=s,
     )
 
 
@@ -321,6 +257,10 @@ def _ecg_solve(
     a_apply_masked: Callable | None = None,
     exit_below_width: int | None = None,
     resume_state: dict | None = None,
+    method: str = "classic",
+    s: int = 1,
+    reorth: bool = False,
+    rank_rtol: float | None = None,
 ) -> SolveResult:
     """One-shot functional ECG solve (the engine behind :func:`ecg_solve`).
 
@@ -345,6 +285,7 @@ def _ecg_solve(
         allreduce=allreduce, split=split, chol_eps=chol_eps, gram1=gram1,
         gram2=gram2, sqnorm=sqnorm, tail=tail, backend=backend, policy=policy,
         a_apply_masked=a_apply_masked, exit_below_width=exit_below_width,
+        method=method, s=s, reorth=reorth, rank_rtol=rank_rtol,
     )
     # Run the whole program (init + guarded loop) under one jit — the same
     # compiled shape the ECGSolver handle caches, so the one-shot legacy
@@ -420,17 +361,6 @@ def ecg_solve(a_apply, b, t, *args, **kwargs) -> SolveResult:
         stacklevel=2,
     )
     return _ecg_solve(a_apply, b, t, *args, **kwargs)
-
-
-def _apply_vec(a_apply: Callable, v: jax.Array, t: int) -> jax.Array:
-    """Apply the SpMBV operator to a single vector as a width-1 block.
-
-    Used once, for the initial residual (Alg 3 line 1).  A width-1 SpMV costs
-    t× fewer flops and bytes than the old formulation, which embedded v in a
-    zero-padded (n, t) block and multiplied all t columns.
-    """
-    del t  # kept in the signature for call-site clarity; width is always 1
-    return a_apply(v[:, None])[:, 0]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,35 @@
+"""Pluggable ECG iteration schemes (classic / pipelined / s-step)."""
+
+from __future__ import annotations
+
+from repro.core.methods.base import MethodContext, MethodSpec
+from repro.core.methods.classic import ClassicMethod
+from repro.core.methods.pipelined import PipelinedMethod
+from repro.core.methods.sstep import SStepMethod
+
+METHODS: dict[str, MethodSpec] = {
+    "classic": ClassicMethod(),
+    "pipelined": PipelinedMethod(),
+    "sstep": SStepMethod(),
+}
+
+
+def get_method(name: str) -> MethodSpec:
+    """Look up an iteration scheme by name (``KeyError``-free)."""
+    try:
+        return METHODS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; expected one of {sorted(METHODS)}"
+        ) from None
+
+
+__all__ = [
+    "METHODS",
+    "MethodContext",
+    "MethodSpec",
+    "ClassicMethod",
+    "PipelinedMethod",
+    "SStepMethod",
+    "get_method",
+]

@@ -1,0 +1,132 @@
+"""The paper's §3.1 ECG iteration — two fused psums per iteration.
+
+This is the historical ``make_ecg_runner`` loop body moved verbatim behind
+the :class:`~repro.core.methods.base.MethodSpec` protocol: the op-for-op
+identical closure structure keeps the refactored ``method="classic"`` solve
+bit-identical to the pre-refactor engine (asserted by the handle-vs-legacy
+equality checks in the test suite).
+
+  per iteration —
+    AZ   = A * Z                          SpMBV             (p2p comm)
+    G    = ZᵀAZ                           gram1             (psum #1, t²)
+    P    = Z C⁻¹ ;  AP = AZ C⁻¹           local chol + TRSMs
+    [PᵀR | APᵀAP | AP_oldᵀAP]             gram2             (psum #2, 3t²)
+    X   += P c ;  R -= AP c ;  Z = AP − P d − P_old d_old
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.adaptive.rankrev import rank_revealing_apply
+from repro.adaptive.reduce import plateau_update, stagnation_mask
+from repro.core.methods.base import MethodContext, MethodSpec, _apply_vec, _chol_inv_apply
+
+
+class ClassicMethod(MethodSpec):
+    """Two-psum Grigori–Tissot ECG (Algorithms 1–3)."""
+
+    name = "classic"
+
+    def build(self, ctx: MethodContext):
+        t = ctx.t
+        max_iters = ctx.max_iters
+        policy = ctx.policy
+        use_mask = ctx.use_mask
+        chol_eps = ctx.chol_eps
+        a_apply = ctx.a_apply
+        a_apply_masked = ctx.a_apply_masked
+        split_fn = ctx.split_fn
+        gram1, gram2, sqnorm, tail = ctx.gram1, ctx.gram2, ctx.sqnorm, ctx.tail
+
+        def iterate(carry):
+            big_x, big_r, z = carry["X"], carry["R"], carry["Z"]
+            p_old, ap_old = carry["P"], carry["AP"]
+            k, hist = carry["k"], carry["hist"]
+
+            if use_mask:
+                az = a_apply_masked(z, carry["act"])  # width-compacted SpMBV [p2p]
+            else:
+                az = a_apply(z)  # SpMBV  [p2p]
+            g = gram1(z, az)  # allreduce #1: t² floats
+            if policy is None:
+                p, ap = _chol_inv_apply(g, z, az, eps=chol_eps)  # local chol + TRSMs
+                active = None
+            else:
+                # pivoted rank-revealing factorization: dependent directions come
+                # out as zero-masked columns instead of NaNs (local, no comm)
+                (p, ap), _rank, active = rank_revealing_apply(
+                    g, z, az, rtol=policy.rank_rtol
+                )
+
+            # fused block inner products: one packed reduction of 3t² floats
+            packed = gram2(p, big_r, ap, ap_old)  # allreduce #2: 3t² floats
+            c, d, d_old = jnp.split(packed, 3, axis=1)
+
+            # fused tail: X += Pc, R -= APc, Z = AP − Pd − P_old d_old
+            big_x, big_r, z_new = tail(big_x, big_r, p, ap, p_old, c, d, d_old)
+            if policy is not None:
+                # flexible-ECG stagnation drops; a zeroed Z column stays dead
+                # (its G row/column is zero next iteration), so no mask needs
+                # carrying for the maths — the block vectors themselves are the
+                # mask.  The width-compacted exchange does carry it (``act``),
+                # to know which columns to pack.
+                active = stagnation_mask(c, carry["rn"], active, policy)
+                z_new = z_new * active.astype(z_new.dtype)[None, :]
+            rsum = big_r.sum(axis=1)
+            rn = jnp.sqrt(sqnorm(rsum))
+            hist = hist.at[k + 1].set(rn)
+            out = dict(
+                X=big_x, R=big_r, Z=z_new, P=p, AP=ap, k=k + 1, rn=rn, hist=hist,
+                bd=carry["bd"],
+            )
+            if use_mask:
+                out["act"] = active
+            if policy is not None:
+                n_active = jnp.sum(active).astype(jnp.int32)
+                best_rn, since = plateau_update(
+                    rn, carry["best_rn"], carry["since"], policy
+                )
+                restarts = carry["restarts"]
+                if policy.restart:
+                    # re-enlarge: rebuild the full t-wide splitting from the
+                    # current residual when progress plateaus on a reduced block
+                    do_rs = (since >= policy.plateau_window) & (n_active < t)
+                    fresh = split_fn(rsum, t)
+                    out["R"] = jnp.where(do_rs, fresh, out["R"])
+                    out["Z"] = jnp.where(do_rs, fresh, out["Z"])
+                    out["P"] = jnp.where(do_rs, jnp.zeros_like(p), out["P"])
+                    out["AP"] = jnp.where(do_rs, jnp.zeros_like(ap), out["AP"])
+                    n_active = jnp.where(do_rs, jnp.int32(t), n_active)
+                    since = jnp.where(do_rs, 0, since)
+                    best_rn = jnp.where(do_rs, rn, best_rn)
+                    restarts = restarts + do_rs.astype(jnp.int32)
+                out.update(
+                    best_rn=best_rn, since=since, restarts=restarts,
+                    ahist=carry["ahist"].at[k + 1].set(n_active),
+                )
+            return out
+
+        def init(b, x0):
+            n = b.shape[0]
+            dtype = b.dtype
+            zeros_nt = jnp.zeros((n, t), dtype)
+            r0 = b - _apply_vec(a_apply, x0, t)  # initial SpMV (Alg 3 line 1)
+            big_r0 = split_fn(r0, t)
+            rn0 = jnp.sqrt(sqnorm(r0))
+            hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=dtype).at[0].set(rn0)
+            carry = dict(X=zeros_nt, R=big_r0, Z=big_r0, P=zeros_nt, AP=zeros_nt,
+                         k=jnp.int32(0), rn=rn0, hist=hist0,
+                         bd=~jnp.isfinite(rn0))
+            if policy is not None:
+                carry.update(
+                    best_rn=rn0,
+                    since=jnp.int32(0),
+                    restarts=jnp.int32(0),
+                    ahist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(t),
+                )
+            if use_mask:
+                carry["act"] = jnp.ones((t,), bool)
+            return carry
+
+        return init, iterate

@@ -1,0 +1,147 @@
+"""Global-reduction pipelined ECG (Cools & Ghysels-style overlap).
+
+Same two psums per iteration as classic, but the SpMBV is moved *off the
+critical path of the packed Gram reduction*.  The trick is the AZ
+recurrence: carrying AZ across iterations makes gram1 a pure function of
+the carry, and the one SpMBV of the body acts on AP — whose only
+dependency is gram1.  The packed gram2 psum and the SpMBV exchange then
+have **no def-use path between them** in the lowered HLO, so the compiler
+is free to run the 3t² reduction inside the exchange + interior-compute
+window (the structural property ``tests/dist_worker.py`` proves by operand
+reachability; the existing ``overlap=True`` interior/boundary schedule
+provides the window itself).
+
+  per iteration —
+    G     = ZᵀAZ             gram1 on the carry      (psum #1, t²)
+    P, AP = Z C⁻¹, AZ C⁻¹    local chol + TRSMs
+    packed = [PᵀR | APᵀAP | AP_oldᵀAP]   gram2       (psum #2, 3t²)  ┐ mutually
+    S     = A · AP           SpMBV                   (p2p)           ┘ independent
+    X += Pc ; R −= APc ; Z' = AP − Pd − P_old d_old
+    AZ'   = S − AP d − AP_old d_old      (A·Z' by linearity — no extra SpMBV)
+
+Init seeds the recurrence with one extra SpMBV (AZ₀ = A·Z₀).  The iterates
+are algebraically identical to classic — only rounding differs (gram1
+consumes the recurred AZ instead of a fresh product).
+
+Restart policies are rejected: a plateau re-enlarge reseeds Z from the
+current residual, and rebuilding AZ for it would need a conditional SpMBV
+inside the loop — exactly the synchronization this scheme removes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.adaptive.rankrev import rank_revealing_apply
+from repro.adaptive.reduce import plateau_update, stagnation_mask
+from repro.core.methods.base import MethodContext, MethodSpec, _apply_vec, _chol_inv_apply
+
+
+class PipelinedMethod(MethodSpec):
+    """Classic collectives, with gram2 overlapped into the SpMBV region."""
+
+    name = "pipelined"
+    overlaps_gram = True
+
+    def validate(self, ctx: MethodContext) -> None:
+        super().validate(ctx)
+        if ctx.policy is not None and ctx.policy.restart:
+            raise ValueError(
+                "method 'pipelined' cannot run a restart policy: re-enlarging "
+                "reseeds Z from the current residual, which would need an "
+                "extra in-loop SpMBV to rebuild the AZ recurrence; use "
+                "adaptive='reduce' (or method='classic' for restarts)"
+            )
+
+    def build(self, ctx: MethodContext):
+        t = ctx.t
+        max_iters = ctx.max_iters
+        policy = ctx.policy
+        use_mask = ctx.use_mask
+        chol_eps = ctx.chol_eps
+        a_apply = ctx.a_apply
+        a_apply_masked = ctx.a_apply_masked
+        gram1, gram2, sqnorm, tail = ctx.gram1, ctx.gram2, ctx.sqnorm, ctx.tail
+        split_fn = ctx.split_fn
+
+        def iterate(carry):
+            big_x, big_r, z, az = carry["X"], carry["R"], carry["Z"], carry["AZ"]
+            p_old, ap_old = carry["P"], carry["AP"]
+            k, hist = carry["k"], carry["hist"]
+
+            g = gram1(z, az)  # psum #1 (t²) — AZ comes from the recurrence
+            if policy is None:
+                p, ap = _chol_inv_apply(g, z, az, eps=chol_eps)
+                active = None
+            else:
+                (p, ap), _rank, active = rank_revealing_apply(
+                    g, z, az, rtol=policy.rank_rtol
+                )
+
+            # psum #2 (3t²) and the SpMBV are data-independent: packed needs
+            # only (p, R, ap, ap_old), the product only ap — the compiler may
+            # run the reduction inside the exchange/interior window.  The
+            # pack mask is the *carried* act (ap's dead columns are zeros of
+            # the previous mask, so packing with it is exact), keeping the
+            # exchange independent of this iteration's gram2-derived mask.
+            packed = gram2(p, big_r, ap, ap_old)
+            if use_mask:
+                s_ap = a_apply_masked(ap, carry["act"])  # SpMBV [p2p]
+            else:
+                s_ap = a_apply(ap)  # SpMBV [p2p]
+            c, d, d_old = jnp.split(packed, 3, axis=1)
+
+            big_x, big_r, z_new = tail(big_x, big_r, p, ap, p_old, c, d, d_old)
+            # AZ' = A·Z' by linearity: A(AP − Pd − P_old d_old)
+            #     = S − AP d − AP_old d_old  — no second SpMBV
+            az_new = s_ap - ap @ d - ap_old @ d_old
+            if policy is not None:
+                active = stagnation_mask(c, carry["rn"], active, policy)
+                colmask = active.astype(z_new.dtype)[None, :]
+                z_new = z_new * colmask
+                az_new = az_new * colmask  # A·(Z'·mask) = (A·Z')·mask
+            rsum = big_r.sum(axis=1)
+            rn = jnp.sqrt(sqnorm(rsum))
+            hist = hist.at[k + 1].set(rn)
+            out = dict(
+                X=big_x, R=big_r, Z=z_new, AZ=az_new, P=p, AP=ap, k=k + 1,
+                rn=rn, hist=hist, bd=carry["bd"],
+            )
+            if use_mask:
+                out["act"] = active
+            if policy is not None:
+                n_active = jnp.sum(active).astype(jnp.int32)
+                best_rn, since = plateau_update(
+                    rn, carry["best_rn"], carry["since"], policy
+                )
+                out.update(
+                    best_rn=best_rn, since=since, restarts=carry["restarts"],
+                    ahist=carry["ahist"].at[k + 1].set(n_active),
+                )
+            return out
+
+        def init(b, x0):
+            n = b.shape[0]
+            dtype = b.dtype
+            zeros_nt = jnp.zeros((n, t), dtype)
+            r0 = b - _apply_vec(a_apply, x0, t)
+            big_r0 = split_fn(r0, t)
+            rn0 = jnp.sqrt(sqnorm(r0))
+            hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=dtype).at[0].set(rn0)
+            carry = dict(X=zeros_nt, R=big_r0, Z=big_r0,
+                         AZ=a_apply(big_r0),  # seed the recurrence (init-only SpMBV)
+                         P=zeros_nt, AP=zeros_nt,
+                         k=jnp.int32(0), rn=rn0, hist=hist0,
+                         bd=~jnp.isfinite(rn0))
+            if policy is not None:
+                carry.update(
+                    best_rn=rn0,
+                    since=jnp.int32(0),
+                    restarts=jnp.int32(0),
+                    ahist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(t),
+                )
+            if use_mask:
+                carry["act"] = jnp.ones((t,), bool)
+            return carry
+
+        return init, iterate

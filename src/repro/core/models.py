@@ -108,9 +108,25 @@ def tune_strategy(g: CommGraph, t: int, machine: MachineParams) -> tuple[str, di
 
 
 # ----------------------------------------------------------- ECG iteration
+def t_collective_n(
+    p: int, machine: MachineParams, n_collectives: float, payload_floats: float
+) -> float:
+    """Generalized collective term: n·α·log(p) latency legs + f·payload/R_b.
+
+    The classic scheme's eq. (3.1)/(3.2) term is the (2, 4t²) instance; the
+    pluggable iteration schemes (:mod:`repro.core.methods`) charge their own
+    (psums-per-block, payload) pairs through the same shape — see
+    ``repro.tune.method_sync_cost``.
+    """
+    return (
+        n_collectives * machine.alpha * math.log2(max(p, 2))
+        + machine.f * payload_floats / machine.R_b
+    )
+
+
 def t_collective(p: int, t: int, machine: MachineParams) -> float:
     """Collective term of eqs. (3.1)/(3.2): 2·α·log(p) + f·4t²/R_b."""
-    return 2 * machine.alpha * math.log2(max(p, 2)) + machine.f * 4 * t * t / machine.R_b
+    return t_collective_n(p, machine, 2, 4 * t * t)
 
 
 def t_computation(counts: ECGOperationCounts, machine: MachineParams) -> float:

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.solve --matrix dg --t 8 \
         --strategy tuned [--devices 8] [--backend pallas] [--tune model] \
-        [--adaptive reduce] [--t auto]
+        [--adaptive reduce] [--t auto] [--method sstep --s 4]
 
 The driver builds one :class:`repro.solver.ECGSolver` session — partition,
 exchange plan, autotuning, t-selection, and Block-ELL conversion happen
@@ -97,7 +97,23 @@ def main():
                          "reveal / flexible-ECG reduction / plateau restart "
                          "(default: off, except --t auto implies rankrev; an "
                          "explicit 'off' is honored even with --t auto)")
+    ap.add_argument("--method", default="classic",
+                    choices=["classic", "pipelined", "sstep"],
+                    help="iteration scheme: classic two-psum ECG, pipelined "
+                         "(packed Gram psum overlapped with the SpMBV "
+                         "exchange), or sstep (--s inner steps per psum pair)")
+    ap.add_argument("--s", type=int, default=1,
+                    help="s-step depth: inner iterations per collective pair "
+                         "(sstep only)")
+    ap.add_argument("--reorth", action="store_true",
+                    help="sstep only: per-block Cholesky-QR2 second pass "
+                         "(one extra psum per block) for tougher spectra")
     args = ap.parse_args()
+    if args.method != "sstep":
+        if args.s != 1:
+            ap.error(f"--s {args.s} only applies to --method sstep")
+        if args.reorth:
+            ap.error("--reorth only applies to --method sstep")
     if args.t == "auto" and args.tune == "off":
         ap.error("--t auto composes the tuner's cost models and cannot run "
                  "with --tune off; use --tune model (or --tune measure — the "
@@ -119,11 +135,12 @@ def main():
     import numpy as np
     import jax.numpy as jnp
     from repro.sparse import dg_laplace_2d, fd_laplace_2d, random_spd, csr_spmbv
-    from repro.core import cg_solve
+    from repro.core.cg import _cg_solve
     from repro.core.machines import TPU_V5E_POD
+    from repro.core.methods import get_method
     from repro.solver import (
-        AdaptiveConfig, CommConfig, ECGSolver, KernelConfig, SolverConfig,
-        TuneConfig,
+        AdaptiveConfig, CommConfig, ECGSolver, KernelConfig, MethodConfig,
+        SolverConfig, TuneConfig,
     )
 
     a = {
@@ -154,7 +171,11 @@ def main():
         # None = solver defaults (auto-t turns on rankrev); explicit "off" sticks
         adaptive=AdaptiveConfig(policy=args.adaptive),
         tune=TuneConfig(mode=args.tune),
+        method=MethodConfig(name=args.method, s=args.s, reorth=args.reorth),
     )
+    coll = get_method(args.method).collectives_per_iteration(args.s, args.reorth)
+    mtag = args.method + (f"[s={args.s}]" if args.method == "sstep" else "")
+    print(f"method: {mtag} ({coll:g} psums/iter)")
 
     if sequential:
         solver = ECGSolver.build(a, config=config, b=b)
@@ -162,10 +183,10 @@ def main():
             print(f"tuned tile: {solver.tuned.ell_block} kmax={solver.tuned.kmax}")
         t0 = time.time()
         res = solver.solve(b)
-        print(f"sequential ECG[{args.backend}] t={res.t}: iters={res.n_iters} "
+        print(f"sequential ECG[{mtag}/{args.backend}] t={res.t}: iters={res.n_iters} "
               f"converged={res.converged} {time.time()-t0:.1f}s")
         _print_adaptive_summary(res)
-        res_cg = cg_solve(lambda v: csr_spmbv(a, v[:, None])[:, 0], jnp.asarray(b), tol=args.tol, max_iters=20000)
+        res_cg = _cg_solve(lambda v: csr_spmbv(a, v[:, None])[:, 0], jnp.asarray(b), tol=args.tol, max_iters=20000)
         print(f"reference CG:  iters={res_cg.n_iters}")
         return
 
@@ -186,7 +207,7 @@ def main():
     relres = np.linalg.norm(np.asarray(a.todense(), np.float64) @ x - b) / np.linalg.norm(b) \
         if a.shape[0] <= 8192 else float("nan")
     print(
-        f"distributed ECG[{strategy}/{args.backend}"
+        f"distributed ECG[{mtag}/{strategy}/{args.backend}"
         f"{'/overlap' if solver.op.overlap else ''}] t={res.t} on {n_dev} devices: "
         f"iters={res.n_iters} converged={res.converged} relres={relres:.2e} "
         f"{time.time()-t0:.1f}s"

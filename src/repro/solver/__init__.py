@@ -8,7 +8,7 @@
 
 One typed :class:`SolverConfig` (validated at construction, composed of
 :class:`CommConfig` / :class:`KernelConfig` / :class:`TuneConfig` /
-:class:`AdaptiveConfig`) replaces the stringly-typed keyword sprawl of the
+:class:`AdaptiveConfig` / :class:`MethodConfig`) replaces the stringly-typed keyword sprawl of the
 legacy ``ecg_solve`` / ``distributed_ecg`` / ``make_distributed_spmbv``
 spellings, which remain as deprecated wrappers.  See ``docs/api.md`` for
 the handle lifecycle, the config reference, and the migration table.
@@ -18,6 +18,7 @@ from repro.solver.config import (
     AdaptiveConfig,
     CommConfig,
     KernelConfig,
+    MethodConfig,
     SolverConfig,
     TuneConfig,
 )
@@ -27,6 +28,7 @@ __all__ = [
     "AdaptiveConfig",
     "CommConfig",
     "KernelConfig",
+    "MethodConfig",
     "SolverConfig",
     "TuneConfig",
     "ECGSolver",

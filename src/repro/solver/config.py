@@ -2,7 +2,7 @@
 
 One frozen :class:`SolverConfig` replaces the ~20 loosely-typed keyword
 arguments that had accreted on ``ecg_solve``/``distributed_ecg``/
-``make_distributed_spmbv``.  It is composed of four orthogonal sub-configs,
+``make_distributed_spmbv``.  It is composed of five orthogonal sub-configs,
 one per subsystem:
 
 * :class:`CommConfig`   — the node-aware exchange (strategy, overlap,
@@ -14,6 +14,8 @@ one per subsystem:
   :class:`~repro.tune.TunedConfig`) → ``repro.tune``.
 * :class:`AdaptiveConfig` — the in-solve width controller and ``t="auto"``
   selection knobs → ``repro.adaptive``.
+* :class:`MethodConfig` — the iteration scheme (classic / pipelined /
+  s-step and its knobs) → ``repro.core.methods``.
 
 Validation happens at construction: a bad strategy/backend/mode raises
 ``ValueError`` immediately, not three layers down inside a traced solve.
@@ -36,6 +38,7 @@ from typing import Any
 STRATEGIES = ("standard", "2step", "3step", "optimal")
 BACKENDS = ("jnp", "pallas")
 TUNE_MODES = ("off", "model", "model:structural", "measure")
+METHODS = ("classic", "pipelined", "sstep")
 
 
 def _freeze(cls, **updates):
@@ -225,6 +228,74 @@ class AdaptiveConfig:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class MethodConfig:
+    """Iteration-scheme configuration (see :mod:`repro.core.methods`).
+
+    name:      ``"classic"`` (the paper's two-psum §3.1 iteration),
+               ``"pipelined"`` (same collectives, packed Gram reduction
+               overlapped with the SpMBV exchange via the AZ recurrence), or
+               ``"sstep"`` (s SpMBV sweeps per collective pair,
+               rank-revealing safeguarded).
+    s:         inner-step count of the s-step scheme (psums amortize to
+               2/s per effective iteration); must stay 1 for other methods.
+    depth:     pipeline depth; only depth-1 (one iteration of overlap, the
+               AZ recurrence) is implemented.
+    reorth:    s-step per-block Cholesky-QR2 second pass — one extra (st)²
+               psum per block, for matrices where a single pivoted
+               factorization leaves too much A-orthogonality on the table.
+    rank_rtol: pivot threshold override for method-mandated rank-revealing
+               factorizations (None = the policy's threshold, else the
+               dtype default).
+    """
+
+    name: str = "classic"
+    s: int = 1
+    depth: int = 1
+    reorth: bool = False
+    rank_rtol: float | None = None
+
+    def __post_init__(self):
+        if self.name not in METHODS:
+            raise ValueError(
+                f"unknown method {self.name!r}; expected one of {METHODS}"
+            )
+        if not isinstance(self.s, int) or self.s < 1:
+            raise ValueError(f"s must be an int >= 1, got {self.s!r}")
+        if self.s != 1 and self.name != "sstep":
+            raise ValueError(
+                f"s={self.s} only applies to method 'sstep' (got method "
+                f"{self.name!r}); classic/pipelined have no inner-step count"
+            )
+        if self.depth != 1:
+            raise ValueError(
+                f"only depth-1 pipelining (the AZ recurrence) is implemented, "
+                f"got depth={self.depth!r}"
+            )
+        if self.reorth and self.name != "sstep":
+            raise ValueError(
+                "reorth (per-block Cholesky-QR2) only applies to method 'sstep'"
+            )
+        if self.rank_rtol is not None and not self.rank_rtol > 0:
+            raise ValueError(f"rank_rtol must be > 0 or None, got {self.rank_rtol!r}")
+        _freeze(self, reorth=bool(self.reorth))
+
+    @classmethod
+    def coerce(cls, value) -> "MethodConfig":
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, dict):
+            return cls(**value)
+        if isinstance(value, str):
+            return cls(name=value)
+        raise TypeError(
+            f"method must be a MethodConfig, a method name, a dict of "
+            f"MethodConfig fields, or None; got {type(value)}"
+        )
+
+
 #: Flat override spellings accepted by ``SolverConfig.replace`` /
 #: ``ECGSolver.with_config`` — each maps to (sub-config field, field name).
 _FLAT_FIELDS = {
@@ -241,6 +312,9 @@ _FLAT_FIELDS = {
     "select": ("adaptive", "select"),
     "probe_iters": ("adaptive", "probe_iters"),
     "probe_rtol": ("adaptive", "probe_rtol"),
+    "s": ("method", "s"),
+    "depth": ("method", "depth"),
+    "reorth": ("method", "reorth"),
 }
 
 
@@ -265,6 +339,7 @@ class SolverConfig:
     kernel: KernelConfig = dataclasses.field(default_factory=KernelConfig)
     tune: TuneConfig = dataclasses.field(default_factory=TuneConfig)
     adaptive: AdaptiveConfig = dataclasses.field(default_factory=AdaptiveConfig)
+    method: MethodConfig = dataclasses.field(default_factory=MethodConfig)
 
     def __post_init__(self):
         if isinstance(self.t, str):
@@ -288,7 +363,19 @@ class SolverConfig:
             kernel=kernel,
             tune=TuneConfig.coerce(self.tune),
             adaptive=AdaptiveConfig.coerce(self.adaptive),
+            method=MethodConfig.coerce(self.method),
         )
+        policy = self.adaptive.policy
+        if (
+            self.method.name == "pipelined"
+            and policy is not None
+            and policy.restart
+        ):
+            raise ValueError(
+                "method 'pipelined' cannot run a restart policy: re-enlarging "
+                "would need an extra in-loop SpMBV to rebuild the AZ "
+                "recurrence; use adaptive='reduce' (or method='classic')"
+            )
 
     def replace(self, **overrides) -> "SolverConfig":
         """Return a new config with ``overrides`` applied.
@@ -302,7 +389,11 @@ class SolverConfig:
         nested: dict[str, dict] = {}
         own = {f.name for f in dataclasses.fields(self)}
         for key, value in overrides.items():
-            if key in _FLAT_FIELDS:
+            if key == "method" and isinstance(value, str):
+                # replace(method="sstep", s=4) — route the string through the
+                # nested dict so it composes with the flat s/depth/reorth
+                nested.setdefault("method", {})["name"] = value
+            elif key in _FLAT_FIELDS:
                 sub, field = _FLAT_FIELDS[key]
                 nested.setdefault(sub, {})[field] = value
             elif key in own:
@@ -334,3 +425,103 @@ class SolverConfig:
         if isinstance(value, dict):
             return cls(**value)
         raise TypeError(f"config must be a SolverConfig or dict, got {type(value)}")
+
+    def to_json(self) -> str:
+        """Serialize the full session spec to a JSON string.
+
+        Lossless: composes the existing :meth:`repro.tune.TunedConfig` and
+        :meth:`repro.adaptive.TSelection` round-trips plus the resolved
+        :class:`~repro.adaptive.ReductionPolicy`, :class:`MachineParams`,
+        and :class:`MethodConfig`, so a cached spec feeds straight back
+        through :meth:`from_json` — fixed point asserted in the test suite.
+        """
+        import json
+
+        return json.dumps(solverconfig_to_dict(self))
+
+    @classmethod
+    def from_json(cls, data) -> "SolverConfig":
+        """Inverse of :meth:`to_json`; accepts the JSON string or the
+        already-parsed dict."""
+        import json
+
+        if isinstance(data, (str, bytes)):
+            data = json.loads(data)
+        return solverconfig_from_dict(data)
+
+
+def solverconfig_to_dict(cfg: SolverConfig) -> dict:
+    """JSON-safe dict form of a SolverConfig (see ``SolverConfig.to_json``)."""
+    from repro.tune.autotune import tunedconfig_to_dict
+
+    machine = cfg.comm.machine
+    policy = cfg.adaptive.policy
+    select = cfg.adaptive.select
+    tuned = cfg.tune.tuned
+    return dict(
+        t=cfg.t,
+        tol=float(cfg.tol),
+        max_iters=int(cfg.max_iters),
+        comm=dict(
+            strategy=cfg.comm.strategy,
+            overlap=cfg.comm.overlap,
+            col_split=cfg.comm.col_split,
+            machine=None if machine is None else dataclasses.asdict(machine),
+        ),
+        kernel=dict(
+            backend=cfg.kernel.backend,
+            ell_block=list(cfg.kernel.ell_block),
+        ),
+        tune=dict(
+            mode=cfg.tune.mode,
+            tuned=None if tuned is None else tunedconfig_to_dict(tuned),
+        ),
+        adaptive=dict(
+            policy=None if policy is None else dataclasses.asdict(policy),
+            t_candidates=list(cfg.adaptive.t_candidates),
+            select=None if select is None else _tselection_dict(select),
+            probe_iters=int(cfg.adaptive.probe_iters),
+            probe_rtol=float(cfg.adaptive.probe_rtol),
+            explicit_off=bool(cfg.adaptive.explicit_off),
+        ),
+        method=dataclasses.asdict(cfg.method),
+    )
+
+
+def _tselection_dict(select) -> dict:
+    from repro.adaptive.select_t import tselection_to_dict
+
+    return tselection_to_dict(select)
+
+
+def solverconfig_from_dict(d: dict) -> SolverConfig:
+    """Inverse of :func:`solverconfig_to_dict`."""
+    from repro.adaptive.reduce import ReductionPolicy
+    from repro.adaptive.select_t import tselection_from_dict
+    from repro.core.machines import MachineParams
+    from repro.tune.autotune import tunedconfig_from_dict
+
+    comm = dict(d["comm"])
+    if comm.get("machine") is not None:
+        comm["machine"] = MachineParams(**comm["machine"])
+    kernel = dict(d["kernel"])
+    kernel["ell_block"] = tuple(kernel["ell_block"])
+    tune = dict(d["tune"])
+    if tune.get("tuned") is not None:
+        tune["tuned"] = tunedconfig_from_dict(tune["tuned"])
+    adaptive = dict(d["adaptive"])
+    if adaptive.get("policy") is not None:
+        adaptive["policy"] = ReductionPolicy(**adaptive["policy"])
+    if adaptive.get("select") is not None:
+        adaptive["select"] = tselection_from_dict(adaptive["select"])
+    adaptive["t_candidates"] = tuple(adaptive["t_candidates"])
+    return SolverConfig(
+        t=d["t"],
+        tol=d["tol"],
+        max_iters=d["max_iters"],
+        comm=CommConfig(**comm),
+        kernel=KernelConfig(**kernel),
+        tune=TuneConfig(**tune),
+        adaptive=AdaptiveConfig(**adaptive),
+        method=MethodConfig(**d["method"]),
+    )

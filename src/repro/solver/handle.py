@@ -141,6 +141,8 @@ class ECGSolver:
                 backend=cfg.kernel.backend,
                 probe_iters=cfg.adaptive.probe_iters,
                 probe_rtol=cfg.adaptive.probe_rtol,
+                method=cfg.method.name, s=cfg.method.s,
+                reorth=cfg.method.reorth,
             )
             if tuned is None and cfg.kernel.backend == "pallas":
                 # execute the tile the candidate costs were modeled with
@@ -196,6 +198,8 @@ class ECGSolver:
                 backend=cfg.kernel.backend, tune_mode=tune_mode,
                 probe_iters=cfg.adaptive.probe_iters,
                 probe_rtol=cfg.adaptive.probe_rtol,
+                method=cfg.method.name, s=cfg.method.s,
+                reorth=cfg.method.reorth,
             )
             if not cfg.tune.active:
                 # execute the exact config the choice was modeled with — a t
@@ -349,6 +353,8 @@ class ECGSolver:
                 sqnorm=self._sqnorm, tail=self._tail,
                 backend=cfg.kernel.backend, policy=self.policy,
                 a_apply_masked=masked, exit_below_width=exit_bw,
+                method=cfg.method.name, s=cfg.method.s,
+                reorth=cfg.method.reorth, rank_rtol=cfg.method.rank_rtol,
             )
             self._runners[width] = runner
         return runner
@@ -492,14 +498,19 @@ class ECGSolver:
             and new_cfg.kernel == self.config.kernel
             and new_cfg.tune == self.config.tune
             # a t="auto" resolution is derived from the adaptive knobs
-            # (candidates, cached select, probe budget/rtol, explicit off)
-            # AND the tolerance (est_iters-to-tol drives the ranking):
-            # changing any of them must re-run the selection, not reuse it
+            # (candidates, cached select, probe budget/rtol, explicit off),
+            # the tolerance (est_iters-to-tol drives the ranking), AND the
+            # method (its synchronization term enters the per-iteration
+            # cost): changing any of them must re-run the selection.  A
+            # method change under a fixed t reuses the operator outright —
+            # the SpMBV and reducers are method-agnostic; only the loop
+            # closures differ, and those are rebuilt per clone anyway.
             and (
                 not isinstance(self.config.t, str)
                 or (
                     new_cfg.adaptive == self.config.adaptive
                     and new_cfg.tol == self.config.tol
+                    and new_cfg.method == self.config.method
                 )
             )
         )

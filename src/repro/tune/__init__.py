@@ -34,7 +34,9 @@ from repro.tune.autotune import (
     DEFAULT_TILES,
     TileStats,
     TunedConfig,
+    method_sync_cost,
     predict_config,
+    rank_methods,
     structural_exchange_cost,
     structural_exchange_costs,
     tile_stats,
@@ -56,6 +58,8 @@ __all__ = [
     "predict_config",
     "structural_exchange_cost",
     "structural_exchange_costs",
+    "method_sync_cost",
+    "rank_methods",
     "tile_stats",
     "tile_time",
     "tune",

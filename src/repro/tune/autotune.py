@@ -488,3 +488,127 @@ def tune(
         machine=machine,
         predicted=predicted,
     )
+
+
+# ------------------------------------------------- iteration-scheme ranking
+def method_sync_cost(
+    method: str,
+    t: int,
+    p: int,
+    machine: MachineParams,
+    *,
+    s: int = 1,
+    reorth: bool = False,
+    t_spmbv_window: float = 0.0,
+) -> float:
+    """Synchronization seconds charged per *effective* iteration of a scheme.
+
+    Reads the collective accounting the :class:`~repro.core.methods.
+    MethodSpec` itself declares (psums per block, payload floats, iterations
+    per block), so the cost model and the lowered-HLO gates in
+    ``tests/dist_worker.py`` count the same collectives:
+
+    * classic   — 2 psums of t² + 3t² floats; exactly the paper's eq. (3.1)
+      collective term (``t_collective``), by construction.
+    * pipelined — psum #1 (t²) stays on the critical path; psum #2 (3t²) is
+      data-independent of the SpMBV, so only its spill past the exchange +
+      interior-compute window (``t_spmbv_window``) is charged.
+    * sstep     — 2 (+1 with reorth) psums of (st)²-sized payloads amortized
+      over s iterations.
+    """
+    from repro.core.methods import get_method
+    from repro.core.models import t_collective_n
+
+    spec = get_method(method)
+    if spec.overlaps_gram:
+        hidden = t_collective_n(p, machine, 1, 3 * t * t)
+        return t_collective_n(p, machine, 1, t * t) + max(
+            0.0, hidden - t_spmbv_window
+        )
+    return t_collective_n(
+        p, machine, spec.psums_per_block(s, reorth),
+        spec.psum_payload_floats(t, s, reorth),
+    ) / spec.iters_per_block(s)
+
+
+def _method_local_flops(method: str, counts, *, s: int = 1, reorth: bool = False) -> float:
+    """Non-SpMBV local flops per effective iteration of a scheme.
+
+    classic is eq. (3.3) minus its SpMBV term; pipelined adds the AZ
+    recurrence (two (t, t) products against (n/p, t) blocks); sstep charges
+    the (st)-wide Gram/projection/factorization work of one block — the
+    classic terms at width st, plus the two-block A-projection (four
+    (n/p, st)·(st, st) products) and the wider fused gram1 — divided by s.
+    """
+    from repro.core.ecg import ECGOperationCounts
+
+    base = counts.total_flops - counts.spmbv_flops
+    npp = counts.n / counts.p
+    if method == "classic":
+        return base
+    if method == "pipelined":
+        return base + 4 * npp * counts.t**2
+    if method == "sstep":
+        st = s * counts.t
+        wide = ECGOperationCounts(n=counts.n, nnz=counts.nnz, p=counts.p, t=st)
+        per_block = (
+            wide.total_flops - wide.spmbv_flops
+            + 8 * npp * st**2  # V/AV -= P a + P₂ b  (two-block A-projection)
+            + 2 * npp * st**2  # gram1 is (3st, st), not (st, st)
+        )
+        if reorth:
+            per_block += 6 * npp * st**2  # second gram + two TRSMs
+        return per_block / s
+    raise ValueError(f"unknown method {method!r}")
+
+
+def rank_methods(
+    a,
+    t: int,
+    machine: MachineParams | None = None,
+    n_nodes: int = 1,
+    ppn: int = 1,
+    *,
+    s: int = 2,
+    reorth: bool = False,
+    pm: PartitionedMatrix | None = None,
+    backend: str = "jnp",
+    mode: str = "model:structural",
+    methods: tuple[str, ...] = ("classic", "pipelined", "sstep"),
+) -> tuple[str, dict[str, dict[str, float]]]:
+    """Rank the iteration schemes by modeled per-effective-iteration seconds.
+
+    Runs :func:`tune` once for the SpMBV term (exchange + local product under
+    the winning (strategy, tile, overlap) config — also the overlap window
+    the pipelined scheme hides its packed Gram reduction in), then charges
+    each scheme its :func:`method_sync_cost` and :func:`_method_local_flops`.
+    Returns ``(best, table)`` with per-method ``{sync_s, spmbv_s, local_s,
+    iter_s, s}`` rows.  The ranking is per effective iteration: convergence
+    per iteration is method-independent to first order (all three schemes
+    walk the same enlarged Krylov space), so the cheapest iteration wins —
+    the caveat being s-step's slightly weaker A-orthogonality at large s.
+    """
+    from repro.core.ecg import ECGOperationCounts
+
+    tuned = tune(
+        a, t, machine=machine, n_nodes=n_nodes, ppn=ppn, pm=pm,
+        backend=backend, mode=mode,
+    )
+    machine = tuned.machine
+    p = n_nodes * ppn
+    counts = ECGOperationCounts(n=a.shape[0], nnz=a.nnz, p=p, t=t)
+    spmbv_s = float(tuned.predicted["best"])
+    table: dict[str, dict[str, float]] = {}
+    for m in methods:
+        ms = s if m == "sstep" else 1
+        mro = reorth if m == "sstep" else False
+        sync = method_sync_cost(
+            m, t, p, machine, s=ms, reorth=mro, t_spmbv_window=spmbv_s
+        )
+        local = machine.gamma * _method_local_flops(m, counts, s=ms, reorth=mro)
+        table[m] = dict(
+            sync_s=sync, spmbv_s=spmbv_s, local_s=local,
+            iter_s=sync + spmbv_s + local, s=ms,
+        )
+    best = min(table, key=lambda m: table[m]["iter_s"])
+    return best, table

@@ -384,6 +384,221 @@ def check_solver_handle():
           "legacy; 2 psums + norm per iteration through the handle path)")
 
 
+def _hlo_computations(txt):
+    """Split optimized HLO text into {computation_name: [instruction lines]}."""
+    comps, cur, lines = {}, None, []
+    for raw in txt.splitlines():
+        stripped = raw.strip()
+        if cur is None:
+            if (stripped.startswith("%") or stripped.startswith("ENTRY")) and stripped.endswith("{"):
+                cur, lines = stripped.split()[0], []
+        elif stripped.startswith("}"):
+            comps[cur] = lines
+            cur = None
+        elif " = " in stripped:
+            lines.append(stripped)
+    return comps
+
+
+def _hlo_instr(line):
+    """Parse one HLO instruction line -> (name, opcode, operand names).
+
+    Operands are the %names inside the balanced parens right after the
+    opcode — attributes (control-predecessors, calls=, sharding) come after
+    the operand list and are deliberately excluded, so the def-use graph
+    carries data dependencies only.
+    """
+    import re
+
+    lhs, rhs = line.split(" = ", 1)
+    name = lhs.strip().removeprefix("ROOT ").strip()
+    rhs = rhs.strip()
+    if rhs.startswith("("):  # tuple-shaped result: skip the balanced group
+        depth = 0
+        for k, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        rhs = rhs[k + 1:].lstrip()
+    elif " " in rhs:  # plain shape token
+        rhs = rhs.split(" ", 1)[1]
+    i = rhs.find("(")
+    opcode = rhs[:i].strip()
+    depth = 0
+    for j in range(i, len(rhs)):
+        depth += rhs[j] == "("
+        depth -= rhs[j] == ")"
+        if depth == 0:
+            break
+    return name, opcode, re.findall(r"%[\w.\-]+", rhs[i:j + 1])
+
+
+def _has_collective_permute_ancestor(comp_lines, target_name):
+    """True iff a collective-permute reaches ``target_name`` through the
+    def-use graph of one computation (data edges only)."""
+    instrs = {}
+    for ln in comp_lines:
+        name, opcode, ops = _hlo_instr(ln)
+        instrs[name] = (opcode, ops)
+    seen, todo = set(), [target_name]
+    while todo:
+        cur = todo.pop()
+        if cur in seen or cur not in instrs:
+            continue
+        seen.add(cur)
+        opcode, ops = instrs[cur]
+        if cur != target_name and opcode.startswith("collective-permute"):
+            return True
+        todo.extend(ops)
+    return False
+
+
+def check_method_collective_structure():
+    """The tentpole's lowered-HLO gates, per iteration scheme:
+
+    * every scheme's fresh solve program carries exactly 4 all-reduces
+      (body psums + convergence norm + initial-residual norm) — sstep's 2
+      psums serve s effective iterations, so its collectives/iter really is
+      2/s in the compiled program, not just in the spec's accounting;
+    * collective-permutes = plan rotations x SpMBV sweeps (classic 2: init
+      r0 + body; pipelined 3: init r0 + init AZ0 + body; sstep s+1);
+    * the overlap claim is structural, not aspirational: pipelined's packed
+      (t, 3t) Gram all-reduce has NO collective-permute ancestor in the
+      while body (it depends only on carried state, so XLA is free to run
+      it concurrently with the exchange), while classic's same-shaped
+      all-reduce provably depends on the body's SpMBV.
+    """
+    from repro.core.ecg import _ecg_solve
+    from repro.core.methods import get_method
+    from repro.solver import CommConfig, ECGSolver, SolverConfig
+
+    mesh = jax.make_mesh((2, 4), ("node", "proc"))
+    a = dg_laplace_2d((8, 6), block=4)
+    ad = np.asarray(a.todense(), np.float64)
+    rng = np.random.default_rng(23)
+    b = rng.standard_normal(a.shape[0])
+    t, s = 4, 2
+    seq = {
+        m: _ecg_solve(lambda X: csr_spmbv(a, X), jnp.asarray(b), t, tol=1e-8,
+                      max_iters=500, method=m, s=s if m == "sstep" else 1)
+        for m in ("classic", "pipelined", "sstep")
+    }
+    texts = {}
+    for method in ("classic", "pipelined", "sstep"):
+        ms = s if method == "sstep" else 1
+        solver = ECGSolver.build(a, mesh, SolverConfig(
+            t=t, tol=1e-8, max_iters=500, comm=CommConfig(strategy="3step"),
+            method=dict(name=method, s=ms),
+        ))
+        res = solver.solve(b)
+        assert res.converged and res.n_iters == seq[method].n_iters, (
+            method, res.n_iters, seq[method].n_iters)
+        x = solver.unshard(res.x)
+        relres = np.linalg.norm(ad @ x - b) / np.linalg.norm(b)
+        assert relres < 1e-6, (method, relres)
+
+        txt = solver.lowered_text()
+        texts[method] = txt
+        n_ar = txt.count(" all-reduce(")
+        assert n_ar == 4, (method, n_ar)
+        spec = get_method(method)
+        assert spec.psums_per_block(ms) / spec.iters_per_block(ms) == (
+            {"classic": 2, "pipelined": 2, "sstep": 2 / s}[method]
+        )
+        rot = sum(1 for step in solver.op.plan.steps if step.offset)
+        n_cp = txt.count(" collective-permute(") + txt.count(
+            " collective-permute-start(")
+        spmbvs = {"classic": 2, "pipelined": 3, "sstep": s + 1}[method]
+        assert n_cp == rot * spmbvs, (method, n_cp, rot, spmbvs)
+
+    # overlap proof on the packed (t, 3t) Gram reduction — it is the only
+    # all-reduce in either program with a (t, 3t) result shape
+    shape = f"f64[{t},{3 * t}]"
+    for method, expect_dep in (("classic", True), ("pipelined", False)):
+        found = None
+        for cname, lines in _hlo_computations(texts[method]).items():
+            for ln in lines:
+                if " all-reduce(" not in ln:
+                    continue
+                name, opcode, _ = _hlo_instr(ln)
+                if opcode == "all-reduce" and ln.split(" = ", 1)[1].lstrip().startswith(shape):
+                    found = (cname, lines, name)
+        assert found is not None, (method, "packed (t,3t) all-reduce not found")
+        cname, lines, name = found
+        dep = _has_collective_permute_ancestor(lines, name)
+        assert dep == expect_dep, (
+            method, f"packed Gram all-reduce in {cname}: collective-permute "
+            f"ancestor={dep}, expected {expect_dep}")
+    print("method collective structure OK (4 all-reduces each; CPs = "
+          "rotations x {2,3,s+1}; pipelined packed Gram independent of the "
+          "body exchange, classic dependent)")
+
+
+def check_method_segmented_resume():
+    """Width-segmented adaptive solves per scheme on the shard_map path: a
+    deficient splitting must reduce t=8 -> 2 under pipelined and sstep and
+    match each scheme's own monolithic sequential run exactly (count,
+    history, reduction trace)."""
+    from repro.core.ecg import _ecg_solve
+    from repro.solver import CommConfig, ECGSolver, SolverConfig
+
+    mesh = jax.make_mesh((2, 4), ("node", "proc"))
+    a = fd_laplace_2d(13)
+    n = a.shape[0]
+    ad = np.asarray(a.todense(), np.float64)
+    t, m = 8, 2
+    rng = np.random.default_rng(7)
+    b = np.zeros(n)
+    b[: (m * n) // t] = rng.standard_normal((m * n) // t)
+
+    for method, s in (("pipelined", 1), ("sstep", 2)):
+        seq = _ecg_solve(lambda X: csr_spmbv(a, X), jnp.asarray(b), t,
+                         tol=1e-8, max_iters=300, adaptive="reduce",
+                         method=method, s=s)
+        assert seq.converged, method
+        solver = ECGSolver.build(a, mesh, SolverConfig(
+            t=t, tol=1e-8, max_iters=300, comm=CommConfig(strategy="3step"),
+            adaptive="reduce", method=dict(name=method, s=s),
+        ))
+        res = solver.solve(b)
+        assert res.converged and res.n_iters == seq.n_iters, (
+            method, res.n_iters, seq.n_iters)
+        segs = res.comm_segments
+        assert segs is not None and segs[0][0] == t and segs[-1][0] == m, (
+            method, segs)
+        assert sum(it for _, it in segs) == res.n_iters, (method, segs)
+        k = res.n_iters + 1
+        np.testing.assert_allclose(
+            np.asarray(res.res_hist)[:k], np.asarray(seq.res_hist)[:k],
+            rtol=1e-5, atol=1e-10)
+        assert np.array_equal(np.asarray(res.active_hist)[:k],
+                              np.asarray(seq.active_hist)[:k]), method
+        x = solver.unshard(res.x)
+        relres = np.linalg.norm(ad @ x - b) / np.linalg.norm(b)
+        assert relres < 1e-6, (method, relres)
+    print("method segmented resume OK (t=8->2 under pipelined and sstep, "
+          "matching their monolithic runs)")
+
+
+def check_rank_methods_structural():
+    """tune="model:structural" ranks the three schemes on the real partition
+    geometry: the table decomposes exactly, sstep amortizes synchronization,
+    pipelined never syncs more than classic."""
+    from repro.tune import rank_methods
+
+    a = dg_laplace_2d((8, 6), block=4)
+    best, table = rank_methods(a, 4, n_nodes=2, ppn=4, s=2,
+                               mode="model:structural")
+    assert set(table) == {"classic", "pipelined", "sstep"}
+    for row in table.values():
+        assert abs(row["iter_s"] - (row["sync_s"] + row["spmbv_s"] + row["local_s"])) < 1e-18
+    assert table["sstep"]["sync_s"] < table["classic"]["sync_s"]
+    assert table["pipelined"]["sync_s"] <= table["classic"]["sync_s"]
+    assert best == min(table, key=lambda k: table[k]["iter_s"])
+    print(f"rank_methods structural OK (best={best})")
+
+
 def check_two_psums_per_iteration():
     """The §3.1 discipline: the iteration body must carry exactly 2 psums
     (plus the convergence-norm reduction) — inspect the lowered HLO.  Count
@@ -435,4 +650,7 @@ if __name__ == "__main__":
     check_packed_exchange_lowering()
     check_two_psums_per_iteration()
     check_solver_handle()
+    check_method_collective_structure()
+    check_method_segmented_resume()
+    check_rank_methods_structural()
     print("ALL DISTRIBUTED CHECKS PASSED")

@@ -1,0 +1,400 @@
+"""repro.core.methods: the pluggable iteration-scheme engine.
+
+Three families of guarantees:
+
+* **Math** — every scheme converges on the SPD fixtures; pipelined tracks
+  classic to solver tolerance; sstep amortizes collectives (s=2 halves the
+  outer-step count) and survives adaptive reduction, restart, and the
+  segmented exit/resume protocol the width-aware distributed solver uses.
+* **Accounting** — each MethodSpec's declared collectives-per-iteration is
+  what the synchronization cost model charges (the lowered-HLO counterpart
+  runs in ``dist_worker.check_method_collective_structure``).
+* **Config** — MethodConfig validation, the flat replace() spellings, and
+  the lossless SolverConfig JSON round-trip.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.adaptive import ReductionPolicy
+from repro.core.cg import _cg_solve
+from repro.core.ecg import _ecg_solve, make_ecg_runner
+from repro.core.machines import BLUE_WATERS
+from repro.core.methods import METHODS, MethodSpec, get_method
+from repro.solver import MethodConfig, SolverConfig
+from repro.solver.config import solverconfig_from_dict, solverconfig_to_dict
+from repro.sparse import dg_laplace_2d
+from repro.sparse.csr import csr_spmbv
+
+
+@pytest.fixture(scope="module")
+def system():
+    a = dg_laplace_2d((10, 10), block=8)  # 800 rows
+    b = np.random.default_rng(0).standard_normal(a.shape[0])
+    return a, jnp.asarray(b)
+
+
+def _apply(a):
+    return lambda v: csr_spmbv(a, v)
+
+
+def _check(a, res, b, tol=1e-8):
+    assert res.converged
+    r = np.asarray(a.todense()) @ np.asarray(res.x) - np.asarray(b)
+    assert np.linalg.norm(r) / np.linalg.norm(np.asarray(b)) < 100 * tol
+
+
+# ------------------------------------------------------------------- math
+class TestConvergence:
+    @pytest.mark.parametrize("method", sorted(METHODS))
+    def test_each_method_converges(self, system, method):
+        a, b = system
+        s = 2 if method == "sstep" else 1
+        res = _ecg_solve(_apply(a), b, 4, tol=1e-8, max_iters=400,
+                         method=method, s=s)
+        _check(a, res, b)
+
+    def test_pipelined_tracks_classic(self, system):
+        """Same recurrence up to the AZ substitution: iterates agree to
+        solver tolerance and iteration counts are within one."""
+        a, b = system
+        ref = _ecg_solve(_apply(a), b, 4, tol=1e-8, max_iters=400)
+        pip = _ecg_solve(_apply(a), b, 4, tol=1e-8, max_iters=400,
+                         method="pipelined")
+        assert abs(pip.n_iters - ref.n_iters) <= 1
+        assert np.linalg.norm(np.asarray(pip.x - ref.x)) < 1e-6 * np.linalg.norm(
+            np.asarray(ref.x)
+        )
+
+    @pytest.mark.parametrize("s", [1, 2, 4])
+    def test_sstep_outer_steps_amortize(self, system, s):
+        """n_iters counts *blocks* for sstep; each block buys s effective
+        iterations, so the block count shrinks close to 1/s."""
+        a, b = system
+        base = _ecg_solve(_apply(a), b, 4, tol=1e-8, max_iters=400,
+                          method="sstep", s=1)
+        res = _ecg_solve(_apply(a), b, 4, tol=1e-8, max_iters=400,
+                         method="sstep", s=s)
+        _check(a, res, b)
+        # amortization with slack for the monomial basis's weaker conditioning
+        assert res.n_iters <= base.n_iters // s + max(4, base.n_iters // (2 * s))
+
+    def test_sstep_s1_matches_classic_count(self, system):
+        """At s=1 the residual-seeded block is classic's search space: the
+        step counts coincide on this fixture."""
+        a, b = system
+        ref = _ecg_solve(_apply(a), b, 4, tol=1e-8, max_iters=400)
+        s1 = _ecg_solve(_apply(a), b, 4, tol=1e-8, max_iters=400,
+                        method="sstep", s=1)
+        assert abs(s1.n_iters - ref.n_iters) <= 2
+
+    def test_sstep_reorth_converges(self, system):
+        a, b = system
+        res = _ecg_solve(_apply(a), b, 4, tol=1e-8, max_iters=400,
+                         method="sstep", s=4, reorth=True)
+        _check(a, res, b)
+        plain = _ecg_solve(_apply(a), b, 4, tol=1e-8, max_iters=400,
+                           method="sstep", s=4)
+        assert res.n_iters <= plain.n_iters
+
+    @pytest.mark.parametrize("method,s", [("pipelined", 1), ("sstep", 2)])
+    def test_adaptive_reduction_per_method(self, system, method, s):
+        """The width controller composes with every scheme: a rank-deficient
+        splitting (t > nonzero RHS subdomains) must degrade gracefully."""
+        a, _ = system
+        n = a.shape[0]
+        b = np.zeros(n)
+        b[: n // 2] = np.random.default_rng(3).standard_normal(n // 2)
+        res = _ecg_solve(_apply(a), jnp.asarray(b), 8, tol=1e-8, max_iters=400,
+                         method=method, s=s, adaptive="reduce")
+        _check(a, res, jnp.asarray(b))
+        assert res.active_hist is not None
+        assert int(np.asarray(res.active_hist)[res.n_iters]) < 8
+
+    def test_sstep_restart_allowed_and_converges(self, system):
+        """Restart is trivially compatible with sstep (the seed is rebuilt
+        from the residual every block) — pipelined rejects it, sstep must
+        not."""
+        a, b = system
+        res = _ecg_solve(_apply(a), b, 4, tol=1e-8, max_iters=400,
+                         method="sstep", s=2, adaptive="reduce+restart")
+        _check(a, res, b)
+
+    def test_cg_is_classic_at_t1(self, system):
+        a, b = system
+        res = _cg_solve(lambda v: csr_spmbv(a, v[:, None])[:, 0], b,
+                        tol=1e-8, max_iters=2000)
+        assert res.converged and res.t is None
+        ref = _ecg_solve(_apply(a), b, 1, tol=1e-8, max_iters=2000)
+        assert res.n_iters == ref.n_iters
+        np.testing.assert_array_equal(np.asarray(res.x), np.asarray(ref.x))
+
+
+class TestSegmentedResume:
+    @pytest.mark.parametrize("method,s", [("pipelined", 1), ("sstep", 2)])
+    def test_resume_matches_monolithic(self, method, s):
+        """exit_below_width + resume_state must replay each scheme's own
+        monolithic adaptive solve exactly — the protocol the width-aware
+        distributed executor re-slices exchange plans around."""
+        a = dg_laplace_2d((10, 10), block=8)
+        n = a.shape[0]
+        t, m = 8, 2
+        b = np.zeros(n)
+        b[: (m * n) // t] = np.random.default_rng(7).standard_normal((m * n) // t)
+        apply_a = _apply(a)
+        masked = lambda z, act: apply_a(z)
+
+        ref = _ecg_solve(apply_a, jnp.asarray(b), t, tol=1e-8, max_iters=400,
+                         method=method, s=s, adaptive="reduce")
+        assert ref.converged
+
+        seg1 = _ecg_solve(apply_a, jnp.asarray(b), t, tol=1e-8, max_iters=400,
+                          method=method, s=s, adaptive="reduce",
+                          a_apply_masked=masked, exit_below_width=t)
+        assert not seg1.converged and seg1.n_iters < ref.n_iters
+        n_act = int(jnp.sum(seg1.final_carry["act"]))
+        assert n_act == m
+        seg2 = _ecg_solve(apply_a, jnp.asarray(b), t, tol=1e-8, max_iters=400,
+                          method=method, s=s, adaptive="reduce",
+                          a_apply_masked=masked, exit_below_width=n_act,
+                          resume_state=seg1.final_carry)
+        assert seg2.converged and seg2.n_iters == ref.n_iters
+        h_ref = np.asarray(ref.res_hist)[: ref.n_iters + 1]
+        h_seg = np.asarray(seg2.res_hist)[: seg2.n_iters + 1]
+        np.testing.assert_array_equal(h_ref, h_seg)
+        np.testing.assert_array_equal(np.asarray(ref.x), np.asarray(seg2.x))
+
+
+# ------------------------------------------------------------- accounting
+class TestAccounting:
+    def test_registry(self):
+        assert sorted(METHODS) == ["classic", "pipelined", "sstep"]
+        for name, spec in METHODS.items():
+            assert isinstance(spec, MethodSpec) and spec.name == name
+            assert get_method(name) is spec
+        with pytest.raises(ValueError, match="classic"):
+            get_method("bogus")
+
+    def test_collectives_per_iteration(self):
+        assert get_method("classic").collectives_per_iteration() == 2
+        assert get_method("pipelined").collectives_per_iteration() == 2
+        for s in (1, 2, 4):
+            assert get_method("sstep").collectives_per_iteration(s) == 2 / s
+            assert get_method("sstep").collectives_per_iteration(s, reorth=True) == 3 / s
+
+    def test_payloads(self):
+        t = 4
+        assert get_method("classic").psum_payload_floats(t) == 4 * t * t
+        assert get_method("pipelined").psum_payload_floats(t) == 4 * t * t
+        st = 2 * t
+        assert get_method("sstep").psum_payload_floats(t, 2) == 3 * st * st + st * t
+        assert (
+            get_method("sstep").psum_payload_floats(t, 2, reorth=True)
+            == 3 * st * st + st * t + st * st
+        )
+
+    def test_sync_cost_model(self):
+        """method_sync_cost charges exactly the spec's accounting, and the
+        classic instance reproduces the paper's §3.1 collective term."""
+        from repro.core.models import t_collective, t_collective_n
+        from repro.tune import method_sync_cost
+
+        m, p, t = BLUE_WATERS, 64, 4
+        assert method_sync_cost("classic", t, p, m) == t_collective(p, t, m)
+        # a huge overlap window hides the packed psum entirely
+        pip = method_sync_cost("pipelined", t, p, m, t_spmbv_window=1.0)
+        assert pip == t_collective_n(p, m, 1, t * t)
+        # no window: both psums on the critical path, same latency legs as
+        # classic but pipelined still never costs more
+        assert method_sync_cost("pipelined", t, p, m) == pytest.approx(
+            t_collective(p, t, m)
+        )
+        for s in (2, 4):
+            spec = get_method("sstep")
+            assert method_sync_cost("sstep", t, p, m, s=s) == pytest.approx(
+                t_collective_n(p, m, 2, spec.psum_payload_floats(t, s)) / s
+            )
+
+    def test_rank_methods_structural(self, system):
+        """tune-mode ranking: on a latency-dominated machine, sstep's
+        amortized synchronization must beat classic, and pipelined must
+        never cost more than classic."""
+        from repro.tune import rank_methods
+
+        a, _ = system
+        best, table = rank_methods(a, 4, machine=BLUE_WATERS, n_nodes=8,
+                                   ppn=16, s=4, mode="model")
+        assert set(table) == {"classic", "pipelined", "sstep"}
+        for row in table.values():
+            assert row["iter_s"] == pytest.approx(
+                row["sync_s"] + row["spmbv_s"] + row["local_s"]
+            )
+        assert table["pipelined"]["iter_s"] <= table["classic"]["iter_s"]
+        assert table["sstep"]["sync_s"] < table["classic"]["sync_s"]
+        assert best == min(table, key=lambda k: table[k]["iter_s"])
+
+    def test_iteration_cost_classic_unchanged(self, system):
+        """The method-aware iteration_cost at its classic defaults must
+        reproduce the original §3.1-based composition exactly."""
+        from repro.adaptive.select_t import iteration_cost
+        from repro.core.ecg import ECGOperationCounts
+        from repro.core.models import t_collective
+
+        a, _ = system
+        cost, cfg = iteration_cost(a, 4, n_nodes=2, ppn=4)
+        counts = ECGOperationCounts(n=a.shape[0], nnz=a.nnz, p=8, t=4)
+        legacy = (
+            cfg.predicted["best"]
+            + cfg.machine.gamma * (counts.total_flops - counts.spmbv_flops)
+            + t_collective(8, 4, cfg.machine)
+        )
+        assert cost == legacy
+
+
+# ----------------------------------------------------------------- config
+class TestMethodConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="method"):
+            MethodConfig(name="bogus")
+        with pytest.raises(ValueError, match="s"):
+            MethodConfig(name="sstep", s=0)
+        with pytest.raises(ValueError, match="sstep"):
+            MethodConfig(name="classic", s=4)
+        with pytest.raises(ValueError, match="sstep"):
+            MethodConfig(name="pipelined", reorth=True)
+        with pytest.raises(ValueError, match="depth"):
+            MethodConfig(name="pipelined", depth=2)
+        with pytest.raises(ValueError, match="rank_rtol"):
+            MethodConfig(name="sstep", rank_rtol=-1.0)
+
+    def test_coercions(self):
+        assert SolverConfig(t=4).method == MethodConfig()
+        assert SolverConfig(t=4, method="pipelined").method.name == "pipelined"
+        cfg = SolverConfig(t=4, method=dict(name="sstep", s=4))
+        assert cfg.method == MethodConfig(name="sstep", s=4)
+
+    def test_flat_replace_routes_method_fields(self):
+        cfg = SolverConfig(t=4)
+        c2 = cfg.replace(method="sstep", s=4)
+        assert c2.method == MethodConfig(name="sstep", s=4)
+        c3 = c2.replace(s=2)
+        assert c3.method == MethodConfig(name="sstep", s=2)
+        c4 = c2.replace(method="classic", s=1)
+        assert c4.method == MethodConfig()
+
+    def test_pipelined_restart_rejected(self):
+        with pytest.raises(ValueError, match="restart"):
+            SolverConfig(t=4, method="pipelined", adaptive="reduce+restart")
+        # engine-level guard too (runner built directly, no SolverConfig)
+        from repro.adaptive.reduce import resolve_policy
+
+        a = dg_laplace_2d((4, 4), block=4)
+        with pytest.raises(ValueError, match="restart"):
+            make_ecg_runner(_apply(a), 4, method="pipelined",
+                            policy=resolve_policy("reduce+restart"))
+
+    def test_engine_validation(self):
+        a = dg_laplace_2d((4, 4), block=4)
+        with pytest.raises(ValueError, match="unknown method"):
+            make_ecg_runner(_apply(a), 4, method="bogus")
+        with pytest.raises(ValueError, match="s"):
+            make_ecg_runner(_apply(a), 4, method="sstep", s=0)
+        with pytest.raises(ValueError, match="sstep"):
+            make_ecg_runner(_apply(a), 4, method="classic", s=2)
+        with pytest.raises(ValueError, match="rank_rtol"):
+            make_ecg_runner(_apply(a), 4, method="sstep", s=2, chol_eps=1e-12)
+
+
+class TestConfigJson:
+    def _rich_config(self):
+        from repro.adaptive.select_t import TSelection
+        from repro.tune import TunedConfig
+
+        tuned = TunedConfig(strategy="3step", br=8, bc=8, kmax=5,
+                            overlap=True, backend="pallas", t=8,
+                            mode="model", col_split=2,
+                            machine=BLUE_WATERS,
+                            predicted={"best": 1e-6, "p2p": {"standard": 2e-6}})
+        sel = TSelection(
+            t=8, candidates=(4, 8), tol=1e-8, mode="probe", probe_iters=8,
+            table={4: dict(rate=0.9, est_iters=100, iter_cost_s=1e-6,
+                           total_cost_s=1e-4, avg_active=4.0),
+                   8: dict(rate=0.8, est_iters=50, iter_cost_s=1.5e-6,
+                           total_cost_s=0.75e-4, avg_active=8.0)},
+            probe_iters_used={4: 6, 8: 8},
+        )
+        return SolverConfig(
+            t=8, tol=1e-10, max_iters=777,
+            comm=dict(strategy="3step", overlap=True, machine=BLUE_WATERS,
+                      col_split=2),
+            kernel=dict(backend="pallas", ell_block=(8, 16)),
+            adaptive=dict(policy=ReductionPolicy(drop_tol=1e-5, min_t=2),
+                          select=sel, t_candidates=(4, 8), probe_iters=6),
+            tune=tuned,
+            method=dict(name="sstep", s=4, reorth=True, rank_rtol=1e-12),
+        )
+
+    def test_roundtrip_is_lossless(self):
+        cfg = self._rich_config()
+        back = SolverConfig.from_json(cfg.to_json())
+        assert back == cfg
+        assert back.method == cfg.method
+        assert back.comm.machine == BLUE_WATERS
+        assert back.adaptive.select.table == cfg.adaptive.select.table
+
+    def test_dict_fixed_point(self):
+        """to_dict ∘ from_dict is the identity on the JSON image — the
+        cache-file invariant (a spec re-serialized from disk is
+        byte-identical)."""
+        for cfg in (self._rich_config(), SolverConfig(t=4),
+                    SolverConfig(t="auto", adaptive="reduce",
+                                 method="pipelined")):
+            d = solverconfig_to_dict(cfg)
+            s = json.dumps(d)  # must be JSON-serializable as-is
+            assert solverconfig_to_dict(solverconfig_from_dict(json.loads(s))) == d
+
+    def test_explicit_adaptive_off_survives(self):
+        cfg = SolverConfig(t="auto", adaptive="off")
+        back = SolverConfig.from_json(cfg.to_json())
+        assert back.adaptive.explicit_off and back == cfg
+
+
+class TestHandleIntegration:
+    def test_with_config_method_change(self, system):
+        """A method switch under a fixed t derives a sibling handle that
+        reuses the partition and still solves correctly."""
+        from repro.solver import ECGSolver
+
+        a, b = system
+        solver = ECGSolver.build(a, config=SolverConfig(t=4, max_iters=400),
+                                 b=np.asarray(b))
+        ref = solver.solve(np.asarray(b))
+        assert ref.converged
+
+        for overrides in (dict(method="pipelined"),
+                          dict(method="sstep", s=2)):
+            clone = solver.with_config(**overrides)
+            res = clone.solve(np.asarray(b))
+            assert res.converged
+            assert clone.config.method.name == overrides["method"]
+            _check(a, res, b)
+        # classic results are untouched by cloning
+        again = solver.solve(np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(again.x), np.asarray(ref.x))
+
+    def test_solver_config_threads_method(self, system):
+        from repro.solver import ECGSolver
+
+        a, b = system
+        cfg = SolverConfig(t=4, max_iters=400, method=dict(name="sstep", s=2))
+        res = ECGSolver.build(a, config=cfg, b=np.asarray(b)).solve(np.asarray(b))
+        _check(a, res, b)
+        mono = _ecg_solve(_apply(a), b, 4, tol=1e-8, max_iters=400,
+                          method="sstep", s=2)
+        assert res.n_iters == mono.n_iters
+        np.testing.assert_array_equal(np.asarray(res.x), np.asarray(mono.x))
