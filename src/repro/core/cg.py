@@ -48,16 +48,25 @@ class SolveResult:
 
     def reduction_events(self) -> list[tuple[int, int, int]]:
         """[(iteration, width_before, width_after)] from the reduction trace
-        — every iteration where the active block width changed."""
+        — every iteration where the active block width changed.
+
+        Scans the *full valid* trace (every entry >= 0) rather than slicing
+        at ``n_iters``: the trace is -1-padded past the last recorded
+        iteration, so the valid prefix **is** the recorded history and the
+        events cannot depend on ``n_iters`` bookkeeping staying in lockstep
+        with the history writes — in particular a width drop recorded on
+        the final iteration (including a capped ``max_iters``-th one) is
+        always reported.
+        """
         if self.active_hist is None:
             return []
         import numpy as np
 
-        h = np.asarray(self.active_hist[: self.n_iters + 1]).tolist()
+        h = np.asarray(self.active_hist).tolist()
         return [
             (k, h[k - 1], h[k])
             for k in range(1, len(h))
-            if h[k] != h[k - 1] and h[k] >= 0 and h[k - 1] >= 0
+            if h[k] >= 0 and h[k - 1] >= 0 and h[k] != h[k - 1]
         ]
 
 

@@ -122,6 +122,9 @@ def make_ecg_runner(
     s: int = 1,
     reorth: bool = False,
     rank_rtol: float | None = None,
+    precond: Callable | None = None,
+    gram2p: Callable | None = None,
+    precond_reseed: int | None = None,
 ) -> ECGRunner:
     """Build the ECG iteration machinery for one fixed configuration.
 
@@ -138,6 +141,12 @@ def make_ecg_runner(
     only the reduction-closure defaults, the convergence condition, and the
     breakdown-guarded while-loop; the per-iteration maths lives in the
     method spec.
+
+    ``precond`` is the preconditioner apply ``(V, k) -> M⁻¹ₖ V`` (see
+    :mod:`repro.precondition`); ``gram2p`` the matching 5-operand packed
+    reduction ``[PᵀR | APᵀW | AP_oldᵀW]`` (defaulted here sequentially, one
+    psum distributed) the preconditioned recurrence needs in place of the
+    symmetric ``gram2`` payload.
     """
     if policy is not None and chol_eps:
         raise ValueError(
@@ -157,6 +166,15 @@ def make_ecg_runner(
     # width-polymorphic jnp path regardless of ``backend`` — the SpMBV keeps
     # whatever backend the operator was built with.
     kernel_backend = backend if spec.name != "sstep" else "jnp"
+    if gram2p is None:
+        # preconditioned packed reduction: [PᵀR | APᵀW | AP_oldᵀW] — three
+        # asymmetric products the fused_gram kernel cannot express (its
+        # middle term is the symmetric APᵀAP), concatenated locally so the
+        # payload still rides ONE psum (the tail kernel is reused unchanged;
+        # the W correction is a single (n, t) add after it)
+        gram2p = lambda p, r, ap, apo, w: allreduce(
+            jnp.concatenate([p.T @ r, ap.T @ w, apo.T @ w], axis=1)
+        )
     if gram1 is None:
         gram1 = lambda z, az: allreduce(z.T @ az)
     if gram2 is None:
@@ -185,6 +203,7 @@ def make_ecg_runner(
         chol_eps=chol_eps, reorth=reorth, rank_rtol=rank_rtol,
         backend=backend, a_apply=a_apply, a_apply_masked=a_apply_masked,
         split_fn=split_fn, gram1=gram1, gram2=gram2, sqnorm=sqnorm, tail=tail,
+        precond=precond, gram2p=gram2p, precond_reseed=precond_reseed,
     )
     spec.validate(ctx)
     init, iterate = spec.build(ctx)
@@ -261,6 +280,9 @@ def _ecg_solve(
     s: int = 1,
     reorth: bool = False,
     rank_rtol: float | None = None,
+    precond: Callable | None = None,
+    gram2p: Callable | None = None,
+    precond_reseed: int | None = None,
 ) -> SolveResult:
     """One-shot functional ECG solve (the engine behind :func:`ecg_solve`).
 
@@ -286,6 +308,7 @@ def _ecg_solve(
         gram2=gram2, sqnorm=sqnorm, tail=tail, backend=backend, policy=policy,
         a_apply_masked=a_apply_masked, exit_below_width=exit_below_width,
         method=method, s=s, reorth=reorth, rank_rtol=rank_rtol,
+        precond=precond, gram2p=gram2p, precond_reseed=precond_reseed,
     )
     # Run the whole program (init + guarded loop) under one jit — the same
     # compiled shape the ECGSolver handle caches, so the one-shot legacy

@@ -71,6 +71,24 @@ class MethodContext:
     solver; ``split_fn`` is T_{r,t}.  ``rank_rtol`` overrides the pivot
     threshold of method-mandated rank-revealing factorizations (s-step);
     None defers to the policy's threshold or the dtype default.
+
+    ``precond`` is the preconditioner apply ``M⁻¹ₖ: (V, k) -> (n, t)`` (None
+    = unpreconditioned); when set, schemes orthogonalize the preconditioned
+    directions W = M⁻¹AP through ``gram2p`` — the 5-operand packed reduction
+    ``[PᵀR | APᵀW | AP_oldᵀW]``, still exactly one psum, so each scheme's
+    declared collective structure survives preconditioning.
+
+    ``precond_reseed`` (classic only) reseeds the direction chain from the
+    preconditioned residual every that-many iterations.  The classic chain
+    ``Z' = W − Pd − P_old d_old`` never re-reads the residual, so an
+    iteration-*varying* M⁻¹ₖ knocks it off the Krylov rails permanently —
+    the truncated-flexible failure mode of Notay (SISC 22(4), 2000); the
+    periodic reseed ``Z' = M⁻¹ₖR`` is the flexible restart that re-acquires
+    the lost error components, and costs zero extra collectives (the next
+    iteration's Gram/rank-revealing step absorbs the unorthogonalized
+    seed).  The s-step scheme reseeds from the residual every block by
+    construction and never needs it; pipelined cannot reseed at all (an
+    in-loop SpMBV would be needed to rebuild the AZ recurrence).
     """
 
     t: int
@@ -89,6 +107,9 @@ class MethodContext:
     gram2: Callable
     sqnorm: Callable
     tail: Callable
+    precond: Callable | None = None
+    gram2p: Callable | None = None
+    precond_reseed: int | None = None
 
 
 class MethodSpec:

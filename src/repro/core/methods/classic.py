@@ -38,6 +38,8 @@ class ClassicMethod(MethodSpec):
         a_apply_masked = ctx.a_apply_masked
         split_fn = ctx.split_fn
         gram1, gram2, sqnorm, tail = ctx.gram1, ctx.gram2, ctx.sqnorm, ctx.tail
+        precond, gram2p = ctx.precond, ctx.gram2p
+        reseed = ctx.precond_reseed if precond is not None else None
 
         def iterate(carry):
             big_x, big_r, z = carry["X"], carry["R"], carry["Z"]
@@ -60,11 +62,33 @@ class ClassicMethod(MethodSpec):
                 )
 
             # fused block inner products: one packed reduction of 3t² floats
-            packed = gram2(p, big_r, ap, ap_old)  # allreduce #2: 3t² floats
+            if precond is None:
+                packed = gram2(p, big_r, ap, ap_old)  # allreduce #2: 3t² floats
+            else:
+                # flexible/preconditioned recurrence: the new directions are
+                # built from W = M⁻¹AP, A-orthogonalized against P and P_old
+                # — d = APᵀW, d_old = AP_oldᵀW ride the SAME single psum
+                # (gram2p packs them with PᵀR), so preconditioning costs the
+                # scheme no extra collective
+                w = precond(ap, k)
+                packed = gram2p(p, big_r, ap, ap_old, w)  # allreduce #2
             c, d, d_old = jnp.split(packed, 3, axis=1)
 
             # fused tail: X += Pc, R -= APc, Z = AP − Pd − P_old d_old
             big_x, big_r, z_new = tail(big_x, big_r, p, ap, p_old, c, d, d_old)
+            if precond is not None:
+                # Z = W − Pd − P_old d_old = tail's Z + (W − AP): reuse the
+                # fused tail kernel unchanged, one extra (n, t) add
+                z_new = z_new + (w - ap)
+            if reseed is not None:
+                # flexible restart: every ``reseed``-th iteration the chain
+                # is reseeded from the preconditioned *updated* residual —
+                # the only point where the residual re-enters the direction
+                # sequence, which an iteration-varying M⁻¹ₖ requires (see
+                # MethodContext.precond_reseed).  No extra collective: the
+                # unorthogonalized seed goes through next iteration's Gram.
+                do_rs = (k + 1) % reseed == 0
+                z_new = jnp.where(do_rs, precond(big_r, k + 1), z_new)
             if policy is not None:
                 # flexible-ECG stagnation drops; a zeroed Z column stays dead
                 # (its G row/column is zero next iteration), so no mask needs
@@ -113,9 +137,11 @@ class ClassicMethod(MethodSpec):
             zeros_nt = jnp.zeros((n, t), dtype)
             r0 = b - _apply_vec(a_apply, x0, t)  # initial SpMV (Alg 3 line 1)
             big_r0 = split_fn(r0, t)
+            # preconditioned start: Z₀ = M⁻¹ T(r₀); R stays the true residual
+            z0 = big_r0 if precond is None else precond(big_r0, jnp.int32(0))
             rn0 = jnp.sqrt(sqnorm(r0))
             hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=dtype).at[0].set(rn0)
-            carry = dict(X=zeros_nt, R=big_r0, Z=big_r0, P=zeros_nt, AP=zeros_nt,
+            carry = dict(X=zeros_nt, R=big_r0, Z=z0, P=zeros_nt, AP=zeros_nt,
                          k=jnp.int32(0), rn=rn0, hist=hist0,
                          bd=~jnp.isfinite(rn0))
             if policy is not None:

@@ -63,6 +63,7 @@ class PipelinedMethod(MethodSpec):
         a_apply_masked = ctx.a_apply_masked
         gram1, gram2, sqnorm, tail = ctx.gram1, ctx.gram2, ctx.sqnorm, ctx.tail
         split_fn = ctx.split_fn
+        precond, gram2p = ctx.precond, ctx.gram2p
 
         def iterate(carry):
             big_x, big_r, z, az = carry["X"], carry["R"], carry["Z"], carry["AZ"]
@@ -84,17 +85,29 @@ class PipelinedMethod(MethodSpec):
             # pack mask is the *carried* act (ap's dead columns are zeros of
             # the previous mask, so packing with it is exact), keeping the
             # exchange independent of this iteration's gram2-derived mask.
-            packed = gram2(p, big_r, ap, ap_old)
-            if use_mask:
-                s_ap = a_apply_masked(ap, carry["act"])  # SpMBV [p2p]
+            # Preconditioned, the new directions come from W = M⁻¹AP: the
+            # packed psum reads (p, R, ap, ap_old, w) and the SpMBV acts on
+            # W — there is still no def-use path from the SpMBV into the
+            # reduction, so the overlap property survives preconditioning.
+            if precond is None:
+                w = ap
+                packed = gram2(p, big_r, ap, ap_old)
             else:
-                s_ap = a_apply(ap)  # SpMBV [p2p]
+                w = precond(ap, k)
+                packed = gram2p(p, big_r, ap, ap_old, w)
+            if use_mask:
+                s_w = a_apply_masked(w, carry["act"])  # SpMBV [p2p]
+            else:
+                s_w = a_apply(w)  # SpMBV [p2p]
             c, d, d_old = jnp.split(packed, 3, axis=1)
 
             big_x, big_r, z_new = tail(big_x, big_r, p, ap, p_old, c, d, d_old)
-            # AZ' = A·Z' by linearity: A(AP − Pd − P_old d_old)
+            if precond is not None:
+                # Z' = W − Pd − P_old d_old: the fused tail's Z plus (W − AP)
+                z_new = z_new + (w - ap)
+            # AZ' = A·Z' by linearity: A(W − Pd − P_old d_old)
             #     = S − AP d − AP_old d_old  — no second SpMBV
-            az_new = s_ap - ap @ d - ap_old @ d_old
+            az_new = s_w - ap @ d - ap_old @ d_old
             if policy is not None:
                 active = stagnation_mask(c, carry["rn"], active, policy)
                 colmask = active.astype(z_new.dtype)[None, :]
@@ -126,10 +139,11 @@ class PipelinedMethod(MethodSpec):
             zeros_nt = jnp.zeros((n, t), dtype)
             r0 = b - _apply_vec(a_apply, x0, t)
             big_r0 = split_fn(r0, t)
+            z0 = big_r0 if precond is None else precond(big_r0, jnp.int32(0))
             rn0 = jnp.sqrt(sqnorm(r0))
             hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=dtype).at[0].set(rn0)
-            carry = dict(X=zeros_nt, R=big_r0, Z=big_r0,
-                         AZ=a_apply(big_r0),  # seed the recurrence (init-only SpMBV)
+            carry = dict(X=zeros_nt, R=big_r0, Z=z0,
+                         AZ=a_apply(z0),  # seed the recurrence (init-only SpMBV)
                          P=zeros_nt, AP=zeros_nt,
                          k=jnp.int32(0), rn=rn0, hist=hist0,
                          bd=~jnp.isfinite(rn0))

@@ -97,6 +97,7 @@ class SStepMethod(MethodSpec):
         a_apply_masked = ctx.a_apply_masked
         split_fn = ctx.split_fn
         gram1, sqnorm = ctx.gram1, ctx.sqnorm
+        precond = ctx.precond
         # safeguard threshold: explicit override > policy's > dtype default
         rr_rtol = ctx.rank_rtol
         if rr_rtol is None and policy is not None:
@@ -110,12 +111,18 @@ class SStepMethod(MethodSpec):
             act_t = carry["act"] if policy is not None else None
 
             # residual-seeded monomial basis: s width-t SpMBVs, p2p exchange
-            # only — no collective fires inside this sweep
+            # only — no collective fires inside this sweep.  Preconditioned,
+            # the basis is the M⁻¹A-Krylov sequence [M⁻¹R, (M⁻¹A)M⁻¹R, …]
+            # with AV tracked exactly (avs[i] = A·vs[i] by construction), so
+            # the A-orthonormalization below — including the MANDATORY
+            # rank-revealing safeguard — is untouched: a preconditioned
+            # monomial basis conditions *better*, but the pivoted Cholesky
+            # still backstops whatever dependence survives.
             seed = big_r
             if policy is not None:
                 seed = seed * act_t.astype(seed.dtype)[None, :]
             vs, avs = [], []
-            cur = seed
+            cur = seed if precond is None else precond(seed, k)
             for _ in range(s):
                 if use_mask:
                     nxt = a_apply_masked(cur, act_t)  # A zero-col ⇒ zero-col
@@ -123,7 +130,7 @@ class SStepMethod(MethodSpec):
                     nxt = a_apply(cur)
                 vs.append(cur)
                 avs.append(nxt)
-                cur = nxt
+                cur = nxt if precond is None else precond(nxt, k)
             v = jnp.concatenate(vs, axis=1)    # (n, st)
             av = jnp.concatenate(avs, axis=1)  # = A·V
 

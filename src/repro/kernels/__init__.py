@@ -15,6 +15,7 @@ from repro.kernels.bsr_spmbv.ops import (
 )
 from repro.kernels.fused_gram.ops import fused_gram
 from repro.kernels.block_update.ops import block_update, ecg_tail
+from repro.kernels.block_trisolve.ops import block_trisolve
 from repro.kernels.halo_pack.ops import halo_pack, halo_unpack
 
 __all__ = [
@@ -29,4 +30,5 @@ __all__ = [
     "fused_gram",
     "block_update",
     "ecg_tail",
+    "block_trisolve",
 ]

@@ -1,0 +1,25 @@
+"""Public op: batched block-Cholesky solve (Pallas on TPU, oracle elsewhere).
+
+The apply kernel of the block-Jacobi preconditioner: given per-block lower
+Cholesky factors of ``blockdiag(A)``, solve every ``L Lᵀ y = x`` in one
+batched dispatch.  Dispatch follows the repo-wide convention
+(:func:`repro.kernels.dispatch.resolve_dispatch`): compiled Pallas on TPU,
+warn-once jnp oracle on GPU, interpret-mode when forced off-TPU.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.block_trisolve.kernel import block_trisolve_pallas
+from repro.kernels.block_trisolve.ref import block_trisolve_ref
+from repro.kernels.dispatch import resolve_dispatch
+
+
+def block_trisolve(l, x, use_pallas: bool | None = None):
+    """Solve ``L[i] L[i]ᵀ y[i] = x[i]`` for every block.
+
+    l: (nb, bs, bs) lower Cholesky factors; x: (nb, bs, t) → (nb, bs, t).
+    """
+    use_pallas, interpret = resolve_dispatch("block_trisolve", use_pallas)
+    if use_pallas:
+        return block_trisolve_pallas(l, x, interpret=interpret)
+    return block_trisolve_ref(l, x)

@@ -1,0 +1,38 @@
+"""jnp oracle: batched SPD block solve against precomputed Cholesky factors."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_trisolve_ref(l, x):
+    """Solve ``L[i] L[i]ᵀ y[i] = x[i]`` for every block.
+
+    l: (nb, bs, bs) lower Cholesky factors
+    x: (nb, bs, t)  right-hand-side blocks
+    returns (nb, bs, t)
+    """
+    l = l.astype(x.dtype)
+    solve = jax.vmap(lambda li, xi: jax.scipy.linalg.cho_solve((li, True), xi))
+    return solve(l, x)
+
+
+def block_trisolve_dense(l, x):
+    """Substitution-form oracle (no LAPACK): the exact arithmetic the Pallas
+    kernel performs, row by row — used to pin the kernel's numerics."""
+    nb, bs, _ = l.shape
+    l = l.astype(x.dtype)
+
+    def one(li, xi):
+        y = jnp.zeros_like(xi)
+        for i in range(bs):
+            s = li[i] @ y
+            y = y.at[i].set((xi[i] - s) / li[i, i])
+        z = jnp.zeros_like(xi)
+        for i in range(bs - 1, -1, -1):
+            s = li[:, i] @ z
+            z = z.at[i].set((y[i] - s) / li[i, i])
+        return z
+
+    return jax.vmap(one)(l, x)

@@ -108,7 +108,18 @@ def main():
     ap.add_argument("--reorth", action="store_true",
                     help="sstep only: per-block Cholesky-QR2 second pass "
                          "(one extra psum per block) for tougher spectra")
+    ap.add_argument("--precondition", default="none",
+                    choices=["none", "block_jacobi", "chebyshev", "inexact"],
+                    help="preconditioner: rank-local block-Jacobi, Chebyshev "
+                         "polynomial, or the iteration-varying inexact kind "
+                         "(flexible ECG; classic reseeds the residual, "
+                         "incompatible with --method pipelined)")
     args = ap.parse_args()
+    if args.method == "pipelined" and args.precondition == "inexact":
+        ap.error("--precondition inexact needs the flexible residual reseed, "
+                 "which --method pipelined cannot absorb into its AZ "
+                 "recurrence; use --method classic or sstep, or a fixed "
+                 "preconditioner")
     if args.method != "sstep":
         if args.s != 1:
             ap.error(f"--s {args.s} only applies to --method sstep")
@@ -172,7 +183,10 @@ def main():
         adaptive=AdaptiveConfig(policy=args.adaptive),
         tune=TuneConfig(mode=args.tune),
         method=MethodConfig(name=args.method, s=args.s, reorth=args.reorth),
+        precondition=args.precondition,
     )
+    if config.precondition.active:
+        print(f"preconditioner: {config.precondition.kind}")
     coll = get_method(args.method).collectives_per_iteration(args.s, args.reorth)
     mtag = args.method + (f"[s={args.s}]" if args.method == "sstep" else "")
     print(f"method: {mtag} ({coll:g} psums/iter)")

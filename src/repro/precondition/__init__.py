@@ -1,0 +1,22 @@
+"""Preconditioned + flexible ECG: config, operators, and builders.
+
+See :mod:`repro.precondition.config` for the knobs and
+``docs/preconditioning.md`` for the criterion, the flexible-ECG interaction
+with the adaptive controller, and the cost-model notes.
+"""
+
+from repro.precondition.build import (
+    build_distributed_preconditioner,
+    build_sequential_preconditioner,
+)
+from repro.precondition.chebyshev import estimate_lambda_max, make_chebyshev_apply
+from repro.precondition.config import PRECONDITIONS, PreconditionConfig
+
+__all__ = [
+    "PRECONDITIONS",
+    "PreconditionConfig",
+    "build_sequential_preconditioner",
+    "build_distributed_preconditioner",
+    "estimate_lambda_max",
+    "make_chebyshev_apply",
+]

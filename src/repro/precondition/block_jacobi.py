@@ -1,0 +1,94 @@
+"""Block-Jacobi preconditioner: M = blockdiag(A) with host Cholesky factors.
+
+Every block is a principal submatrix of the SPD operator, so M is SPD and
+its Cholesky factorization exists unconditionally.  Factorization happens
+once at build time on the host (numpy — the blocks are small and dense);
+each apply is a batched two-triangle solve ``L Lᵀ y = x`` per block, served
+by the :mod:`repro.kernels.block_trisolve` op (Pallas on TPU, jnp oracle
+elsewhere).
+
+Distributed, the blocks are carved *inside* each rank's padded slot range —
+a block never straddles ranks, so the apply is embarrassingly local (zero
+collectives, exactly what keeps the classic scheme's two-psum HLO invariant
+intact).  Padding slots get identity rows, which makes M the identity on
+the padding subspace: padded-slot zeros stay zero through every apply.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _csr_arrays(a):
+    return (
+        np.asarray(a.indptr),
+        np.asarray(a.indices),
+        np.asarray(a.data),
+    )
+
+
+def extract_blocks(a, row_of_slot: np.ndarray, block: int) -> np.ndarray:
+    """Dense diagonal blocks of A in *slot* order.
+
+    row_of_slot: (n_slots,) true-row id per slot, -1 for padding slots.
+    Returns (nb, block, block) with ``nb = n_slots // block`` (n_slots must
+    already be padded to a multiple of ``block``); slot pairs whose rows
+    live in the same block contribute ``A[ri, rj]``, padding slots
+    contribute an identity row/column.
+    """
+    n_slots = row_of_slot.shape[0]
+    if n_slots % block:
+        raise ValueError(f"n_slots={n_slots} not a multiple of block={block}")
+    indptr, indices, data = _csr_arrays(a)
+    nb = n_slots // block
+    out = np.zeros((nb, block, block), dtype=np.asarray(data).dtype)
+    for bi in range(nb):
+        rows = row_of_slot[bi * block : (bi + 1) * block]
+        # true-row id -> local position inside this block
+        local = {int(r): j for j, r in enumerate(rows) if r >= 0}
+        for j, r in enumerate(rows):
+            if r < 0:  # padding slot: identity row keeps M SPD and pads inert
+                out[bi, j, j] = 1.0
+                continue
+            lo, hi = int(indptr[r]), int(indptr[r + 1])
+            for c, v in zip(indices[lo:hi], data[lo:hi]):
+                jj = local.get(int(c))
+                if jj is not None:
+                    out[bi, j, jj] = v
+        if out[bi].diagonal().min() <= 0:
+            raise ValueError(
+                f"block {bi} has a non-positive diagonal entry — the operator "
+                "is not SPD (block-Jacobi needs an SPD matrix)"
+            )
+    return out
+
+
+def factor_blocks(blocks: np.ndarray) -> np.ndarray:
+    """Lower Cholesky factor per block: blocks[i] = L[i] @ L[i].T."""
+    return np.linalg.cholesky(blocks)
+
+
+def slot_layout(n: int, block: int) -> tuple[np.ndarray, int]:
+    """Sequential slot layout: rows 0..n-1 then identity padding slots up to
+    the next multiple of ``block``.  Returns (row_of_slot, n_slots)."""
+    n_slots = -(-n // block) * block
+    row_of_slot = np.full(n_slots, -1, dtype=np.int64)
+    row_of_slot[:n] = np.arange(n)
+    return row_of_slot, n_slots
+
+
+def rank_slot_layout(true_row_of_slot: np.ndarray, p: int, block: int) -> np.ndarray:
+    """Distributed slot layout: each rank's ``rmax`` slots padded (with -1
+    identity slots) to a multiple of ``block`` so no block straddles ranks.
+
+    true_row_of_slot: (p * rmax,) from ``DistributedSpMBV.true_row_of_slot``.
+    Returns (p * rmax_pad,) row-of-slot in the padded per-rank order.
+    """
+    rmax = true_row_of_slot.shape[0] // p
+    rmax_pad = -(-rmax // block) * block
+    out = np.full(p * rmax_pad, -1, dtype=np.int64)
+    for r in range(p):
+        out[r * rmax_pad : r * rmax_pad + rmax] = true_row_of_slot[
+            r * rmax : (r + 1) * rmax
+        ]
+    return out

@@ -1,0 +1,78 @@
+"""Inexact / iteration-varying preconditioner — the flexible-ECG path.
+
+Weighted-Jacobi sweeps whose damping depends on the (traced) iteration
+index: ``ω_k = ω · (1 − 1/16 · (k mod 2))`` — a deliberately *non-constant*
+M⁻¹ₖ.  Enlarged CG is structurally flexible (Moufawad arXiv:2305.19013):
+the recurrence orthogonalizes new directions only against the last two
+search blocks, so a preconditioner that changes every iteration perturbs
+but does not break the short recurrence — exactly the framework the
+adaptive width controller already borrows from.  This kind exists to
+exercise and test that path, and as the template for plugging in genuinely
+inexact inner solves.
+
+The variation is deliberately *mild* (a few percent in the damping, not a
+change of polynomial degree): the depth-2 truncated recurrence tolerates a
+slowly-varying M⁻¹ₖ but — like truncated flexible CG generally (Notay,
+SIAM J. Sci. Comput. 22(4), 2000) — can stagnate outright when M⁻¹ₖ jumps
+between structurally different operators every iteration.  That regime
+needs the residual-reseeded s-step scheme (whose per-block reseed is an
+implicit flexible restart) and is pinned as such in the test suite.
+
+Each sweep is ``y ← y + ω_k D⁻¹ (x − A y)`` from ``y₀ = ω_k D⁻¹ x``; for
+any fixed k the map ``x ↦ y`` is linear with a zero fixed point, so
+masked-out (zero) columns stay zero and the padded-slot convention
+(D = 1 on padding) keeps pads inert.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def extract_diagonal(a, row_of_slot: np.ndarray | None = None) -> np.ndarray:
+    """Diagonal of CSR ``a`` — in slot order when ``row_of_slot`` is given
+    (1.0 on padding slots so D⁻¹ is inert there)."""
+    indptr = np.asarray(a.indptr)
+    indices = np.asarray(a.indices)
+    data = np.asarray(a.data)
+    n = a.shape[0]
+    diag = np.zeros(n, dtype=data.dtype)
+    for i in range(n):
+        lo, hi = indptr[i], indptr[i + 1]
+        hit = np.nonzero(indices[lo:hi] == i)[0]
+        if hit.size:
+            diag[i] = data[lo + hit[0]]
+    if np.any(diag <= 0):
+        raise ValueError(
+            "matrix has a non-positive diagonal entry — weighted Jacobi "
+            "needs an SPD matrix"
+        )
+    if row_of_slot is None:
+        return diag
+    out = np.ones(row_of_slot.shape[0], dtype=data.dtype)
+    live = row_of_slot >= 0
+    out[live] = diag[row_of_slot[live]]
+    return out
+
+
+def make_inexact_apply(a_apply, diag, omega: float, sweeps: int):
+    """Return ``f(V, k) -> M⁻¹ₖ V``: ``sweeps`` damped-Jacobi sweeps whose
+    damping ``ω_k = ω (1 − (k mod 2)/16)`` varies with the iteration."""
+    inv_diag = 1.0 / jnp.asarray(diag)
+
+    def apply(x, k):
+        dinv = inv_diag[:, None].astype(x.dtype)
+        # k-dependent damping (traced): a mild parity wobble that keeps
+        # M⁻¹ₖ SPD (0 < ω_k ≤ ω ≤ 1) while making it genuinely non-constant
+        om = omega * (1.0 - (jnp.asarray(k, jnp.int32) % 2) / 16.0)
+        om = om.astype(x.dtype)
+        y0 = om * dinv * x
+
+        def sweep(_, y):
+            return y + om * dinv * (x - a_apply(y))
+
+        return jax.lax.fori_loop(0, sweeps - 1, sweep, y0)
+
+    return apply

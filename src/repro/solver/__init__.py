@@ -8,12 +8,14 @@
 
 One typed :class:`SolverConfig` (validated at construction, composed of
 :class:`CommConfig` / :class:`KernelConfig` / :class:`TuneConfig` /
-:class:`AdaptiveConfig` / :class:`MethodConfig`) replaces the stringly-typed keyword sprawl of the
+:class:`AdaptiveConfig` / :class:`MethodConfig` /
+:class:`~repro.precondition.PreconditionConfig`) replaces the stringly-typed keyword sprawl of the
 legacy ``ecg_solve`` / ``distributed_ecg`` / ``make_distributed_spmbv``
 spellings, which remain as deprecated wrappers.  See ``docs/api.md`` for
 the handle lifecycle, the config reference, and the migration table.
 """
 
+from repro.precondition.config import PreconditionConfig
 from repro.solver.config import (
     AdaptiveConfig,
     CommConfig,
@@ -29,6 +31,7 @@ __all__ = [
     "CommConfig",
     "KernelConfig",
     "MethodConfig",
+    "PreconditionConfig",
     "SolverConfig",
     "TuneConfig",
     "ECGSolver",

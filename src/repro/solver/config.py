@@ -16,6 +16,8 @@ one per subsystem:
   selection knobs → ``repro.adaptive``.
 * :class:`MethodConfig` — the iteration scheme (classic / pipelined /
   s-step and its knobs) → ``repro.core.methods``.
+* :class:`~repro.precondition.PreconditionConfig` — the preconditioner
+  (none / block_jacobi / chebyshev / inexact) → ``repro.precondition``.
 
 Validation happens at construction: a bad strategy/backend/mode raises
 ``ValueError`` immediately, not three layers down inside a traced solve.
@@ -34,6 +36,8 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Any
+
+from repro.precondition.config import PreconditionConfig
 
 STRATEGIES = ("standard", "2step", "3step", "optimal")
 BACKENDS = ("jnp", "pallas")
@@ -315,6 +319,14 @@ _FLAT_FIELDS = {
     "s": ("method", "s"),
     "depth": ("method", "depth"),
     "reorth": ("method", "reorth"),
+    "block": ("precondition", "block"),
+    "degree": ("precondition", "degree"),
+    "eig_bounds": ("precondition", "eig_bounds"),
+    "eig_ratio": ("precondition", "eig_ratio"),
+    "power_iters": ("precondition", "power_iters"),
+    "sweeps": ("precondition", "sweeps"),
+    "omega": ("precondition", "omega"),
+    "reseed": ("precondition", "reseed"),
 }
 
 
@@ -340,6 +352,9 @@ class SolverConfig:
     tune: TuneConfig = dataclasses.field(default_factory=TuneConfig)
     adaptive: AdaptiveConfig = dataclasses.field(default_factory=AdaptiveConfig)
     method: MethodConfig = dataclasses.field(default_factory=MethodConfig)
+    precondition: PreconditionConfig = dataclasses.field(
+        default_factory=PreconditionConfig
+    )
 
     def __post_init__(self):
         if isinstance(self.t, str):
@@ -364,6 +379,7 @@ class SolverConfig:
             tune=TuneConfig.coerce(self.tune),
             adaptive=AdaptiveConfig.coerce(self.adaptive),
             method=MethodConfig.coerce(self.method),
+            precondition=PreconditionConfig.coerce(self.precondition),
         )
         policy = self.adaptive.policy
         if (
@@ -375,6 +391,15 @@ class SolverConfig:
                 "method 'pipelined' cannot run a restart policy: re-enlarging "
                 "would need an extra in-loop SpMBV to rebuild the AZ "
                 "recurrence; use adaptive='reduce' (or method='classic')"
+            )
+        if self.method.name == "pipelined" and self.precondition.kind == "inexact":
+            raise ValueError(
+                "method 'pipelined' cannot run the iteration-varying "
+                "'inexact' preconditioner: a varying M needs the flexible "
+                "residual reseed, and rebuilding the AZ recurrence for a "
+                "reseeded Z would need an extra in-loop SpMBV; use "
+                "method='classic' (periodic reseed) or 'sstep' (reseeds "
+                "every block), or a fixed preconditioner kind"
             )
 
     def replace(self, **overrides) -> "SolverConfig":
@@ -393,6 +418,10 @@ class SolverConfig:
                 # replace(method="sstep", s=4) — route the string through the
                 # nested dict so it composes with the flat s/depth/reorth
                 nested.setdefault("method", {})["name"] = value
+            elif key == "precondition" and isinstance(value, str):
+                # replace(precondition="block_jacobi", block=64) — same
+                # routing so the kind string composes with the flat knobs
+                nested.setdefault("precondition", {})["kind"] = value
             elif key in _FLAT_FIELDS:
                 sub, field = _FLAT_FIELDS[key]
                 nested.setdefault(sub, {})[field] = value
@@ -485,7 +514,15 @@ def solverconfig_to_dict(cfg: SolverConfig) -> dict:
             explicit_off=bool(cfg.adaptive.explicit_off),
         ),
         method=dataclasses.asdict(cfg.method),
+        precondition=_precondition_dict(cfg.precondition),
     )
+
+
+def _precondition_dict(pc: PreconditionConfig) -> dict:
+    d = dataclasses.asdict(pc)
+    if d.get("eig_bounds") is not None:
+        d["eig_bounds"] = list(d["eig_bounds"])  # JSON has no tuples
+    return d
 
 
 def _tselection_dict(select) -> dict:
@@ -515,6 +552,9 @@ def solverconfig_from_dict(d: dict) -> SolverConfig:
     if adaptive.get("select") is not None:
         adaptive["select"] = tselection_from_dict(adaptive["select"])
     adaptive["t_candidates"] = tuple(adaptive["t_candidates"])
+    precondition = dict(d.get("precondition") or {})
+    if precondition.get("eig_bounds") is not None:
+        precondition["eig_bounds"] = tuple(precondition["eig_bounds"])
     return SolverConfig(
         t=d["t"],
         tol=d["tol"],
@@ -524,4 +564,5 @@ def solverconfig_from_dict(d: dict) -> SolverConfig:
         tune=TuneConfig(**tune),
         adaptive=AdaptiveConfig(**adaptive),
         method=MethodConfig(**d["method"]),
+        precondition=PreconditionConfig(**precondition),
     )

@@ -167,7 +167,9 @@ class ECGSolver:
         else:
             self._apply = lambda V: csr_spmbv(self.a, V)
         self._gram1 = self._gram2 = self._sqnorm = self._tail = None
+        self._gram2p = None
         self._split_fn = None
+        self._precond = self._build_precond()
 
     def _build_distributed(self):
         from repro.sparse.partition import partition_csr
@@ -236,6 +238,7 @@ class ECGSolver:
         self._segmented = self.policy is not None and not self.policy.restart
         self._apply = self.op.matvec_fn()
         self._build_reducers()
+        self._precond = self._build_precond()
 
     def _build_reducers(self):
         """The fused shard_map reductions of §3.1 (one psum each) and the
@@ -294,6 +297,20 @@ class ECGSolver:
             out_specs=P(),
             check_rep=False,
         )
+        # preconditioned packed reduction [PᵀR | APᵀW | AP_oldᵀW]: three
+        # asymmetric products the fused_gram kernel cannot express, fused
+        # locally so the payload still rides ONE psum — the §3.1 two-psum
+        # structure survives preconditioning (asserted in dist_worker.py)
+        self._gram2p = shard_map(
+            lambda pp, rr, ap, apo, w: jax.lax.psum(
+                jnp.concatenate([pp.T @ rr, ap.T @ w, apo.T @ w], axis=1),
+                axes,
+            ),
+            mesh=mesh,
+            in_specs=(vspec,) * 5,
+            out_specs=P(None, None),
+            check_rep=False,
+        )
 
         # T_{r,t} on the padded layout: subdomains follow *true* global row
         # ids so the splitting matches the sequential solver exactly.
@@ -310,6 +327,24 @@ class ECGSolver:
             return r[:, None] * self._onehot(r.dtype)
 
         self._split_fn = split
+
+    def _build_precond(self):
+        """Build the preconditioner apply for this handle's operator
+        (None when ``config.precondition`` is inactive)."""
+        cfg = self.config
+        if not cfg.precondition.active:
+            return None
+        if self.mesh is None:
+            from repro.precondition import build_sequential_preconditioner
+
+            return build_sequential_preconditioner(
+                self.a, cfg.precondition, self._apply
+            )
+        from repro.precondition import build_distributed_preconditioner
+
+        return build_distributed_preconditioner(
+            self.a, cfg.precondition, self.op, self.mesh, self._apply
+        )
 
     def _onehot(self, dtype):
         """Device-resident T_{r,t} one-hot for ``dtype``.
@@ -355,6 +390,12 @@ class ECGSolver:
                 a_apply_masked=masked, exit_below_width=exit_bw,
                 method=cfg.method.name, s=cfg.method.s,
                 reorth=cfg.method.reorth, rank_rtol=cfg.method.rank_rtol,
+                precond=self._precond, gram2p=self._gram2p,
+                precond_reseed=(
+                    cfg.precondition.reseed
+                    if cfg.precondition.kind == "inexact"
+                    else None
+                ),
             )
             self._runners[width] = runner
         return runner
@@ -522,7 +563,14 @@ class ECGSolver:
             clone._apply = self._apply
             clone._gram1, clone._gram2 = self._gram1, self._gram2
             clone._sqnorm, clone._tail = self._sqnorm, self._tail
+            clone._gram2p = self._gram2p
             clone._split_fn = self._split_fn
+            # the preconditioner depends only on (a, op, precondition cfg):
+            # operator reuse keeps it unless the precondition knobs changed
+            if new_cfg.precondition == self.config.precondition:
+                clone._precond = self._precond
+            else:
+                clone._precond = clone._build_precond()
             clone._onehot_cache = self._onehot_cache
             if self.mesh is not None:
                 clone._onehot_np = self._onehot_np

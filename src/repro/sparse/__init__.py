@@ -3,10 +3,12 @@
 from repro.sparse.csr import CSRMatrix, BSRMatrix, csr_to_bsr, csr_spmv, csr_spmbv
 from repro.sparse.partition import RowPartition, PartitionedMatrix, partition_csr
 from repro.sparse.matrices import (
+    aniso_laplace_2d,
     dg_laplace_2d,
     fd_laplace_2d,
     fd_laplace_3d,
     random_spd,
+    scaled_laplace_2d,
     suite_surrogate,
     SUITE_MATRICES,
     EXAMPLE_2_1,
@@ -21,10 +23,12 @@ __all__ = [
     "RowPartition",
     "PartitionedMatrix",
     "partition_csr",
+    "aniso_laplace_2d",
     "dg_laplace_2d",
     "fd_laplace_2d",
     "fd_laplace_3d",
     "random_spd",
+    "scaled_laplace_2d",
     "suite_surrogate",
     "SUITE_MATRICES",
     "EXAMPLE_2_1",

@@ -328,3 +328,75 @@ class TestKernelDispatch:
         assert use is False and interpret is True  # CPU host
         use, interpret = resolve_dispatch("fused_gram", True)
         assert use is True and interpret is True  # forced interpret-mode
+
+
+class TestReductionEventTrace:
+    """Regression: ``reduction_events()`` must report every recorded width
+    change by scanning the full valid (-1-padded) trace, independently of
+    ``n_iters`` bookkeeping — in particular a drop recorded on the *final*
+    iteration (capped or converged) used to fall off the sliced view."""
+
+    def test_events_do_not_depend_on_n_iters(self, system):
+        from repro.core.cg import SolveResult
+
+        # n_iters deliberately inconsistent with the trace: the events must
+        # come from the trace alone
+        res = SolveResult(
+            x=jnp.zeros(4), n_iters=0, res_hist=jnp.zeros(5),
+            converged=False, active_hist=jnp.asarray([4, 2, 2, 1, -1]),
+        )
+        assert res.reduction_events() == [(1, 4, 2), (3, 2, 1)]
+
+    def test_padding_never_generates_events(self):
+        from repro.core.cg import SolveResult
+
+        res = SolveResult(
+            x=jnp.zeros(4), n_iters=3, res_hist=jnp.zeros(5),
+            converged=True, active_hist=jnp.asarray([4, 4, 4, -1, -1]),
+        )
+        assert res.reduction_events() == []
+        assert SolveResult(
+            x=jnp.zeros(4), n_iters=0, res_hist=jnp.zeros(1),
+            converged=False, active_hist=None,
+        ).reduction_events() == []
+
+    def test_capped_final_iteration_drop_is_reported(self, system):
+        """max_iters caps the solve on exactly the iteration that drops the
+        width: the event must still be visible."""
+        a, _ = system
+        b = deficient_rhs(a.shape[0], 4, m=2)
+        res = ecg_solve(lambda V: csr_spmbv(a, V), jnp.asarray(b), t=4,
+                        tol=1e-9, max_iters=1, adaptive="reduce")
+        assert not res.converged
+        ah = np.asarray(res.active_hist)
+        assert ah[0] == 4 and ah[1] == 2
+        assert res.reduction_events() == [(1, 4, 2)]
+
+    @pytest.mark.parametrize("method,s", [("classic", 1), ("pipelined", 1),
+                                          ("sstep", 2)])
+    def test_first_iteration_drop_reported_for_every_scheme(
+        self, system, method, s
+    ):
+        a, _ = system
+        b = deficient_rhs(a.shape[0], 4, m=2)
+        res = ecg_solve(lambda V: csr_spmbv(a, V), jnp.asarray(b), t=4,
+                        tol=1e-9, max_iters=1500, adaptive="reduce",
+                        method=method, s=s)
+        assert res.converged
+        events = res.reduction_events()
+        assert events and events[0][0] == 1 and events[0][1] == 4
+        assert events[0][2] <= 2
+
+    def test_converge_and_drop_on_same_iteration(self, system):
+        """Width drop recorded on the convergence iteration itself: run the
+        reduced solve to convergence, then cap a fresh run at exactly that
+        count — both views must agree on the events."""
+        a, _ = system
+        b = deficient_rhs(a.shape[0], 4, m=2)
+        full = ecg_solve(lambda V: csr_spmbv(a, V), jnp.asarray(b), t=4,
+                         tol=1e-9, max_iters=1500, adaptive="reduce")
+        assert full.converged
+        capped = ecg_solve(lambda V: csr_spmbv(a, V), jnp.asarray(b), t=4,
+                           tol=1e-9, max_iters=full.n_iters,
+                           adaptive="reduce")
+        assert capped.reduction_events() == full.reduction_events()

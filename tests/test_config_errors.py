@@ -1,0 +1,181 @@
+"""Config validation error paths: every malformed spelling fails loudly.
+
+The frozen config dataclasses are the API surface users hit first, so a
+bad value must raise at *construction* with a message naming the field and
+the accepted range — not surface later as a shape error inside a jitted
+solve.  This file sweeps the rejection branches of
+:class:`repro.precondition.PreconditionConfig`,
+:class:`repro.solver.MethodConfig`, :class:`repro.solver.TuneConfig`, the
+cross-field gates on :class:`repro.solver.SolverConfig`, and the malformed
+inputs of the JSON / flat-override round-trips.
+"""
+
+import json
+
+import pytest
+
+from repro.precondition import PreconditionConfig
+from repro.solver import (
+    AdaptiveConfig,
+    CommConfig,
+    MethodConfig,
+    SolverConfig,
+    TuneConfig,
+)
+
+
+# ---------------------------------------------------- PreconditionConfig
+class TestPreconditionConfigErrors:
+    @pytest.mark.parametrize(
+        "kwargs,match",
+        [
+            (dict(kind="jacobi"), "unknown preconditioner kind"),
+            (dict(kind="ilu"), "unknown preconditioner kind"),
+            (dict(block=0), "block must be an int >= 1"),
+            (dict(block=16.0), "block must be an int >= 1"),
+            (dict(degree=0), "degree must be an int >= 1"),
+            (dict(eig_bounds=(1.0,)), "eig_bounds must be"),
+            (dict(eig_bounds=(2.0, 1.0)), "eig_bounds must be"),
+            (dict(eig_bounds=(0.0, 1.0)), "eig_bounds must be"),
+            (dict(eig_bounds=(-1.0, 1.0)), "eig_bounds must be"),
+            (dict(eig_ratio=1.0), "eig_ratio must be > 1"),
+            (dict(eig_ratio=-3.0), "eig_ratio must be > 1"),
+            (dict(power_iters=0), "power_iters must be an int >= 1"),
+            (dict(sweeps=0), "sweeps must be an int >= 1"),
+            (dict(omega=0.0), r"omega must be in \(0, 1\]"),
+            (dict(omega=1.5), r"omega must be in \(0, 1\]"),
+            (dict(reseed=1), "reseed must be an int >= 2"),
+            (dict(reseed=8.0), "reseed must be an int >= 2"),
+        ],
+    )
+    def test_rejected_at_construction(self, kwargs, match):
+        with pytest.raises(ValueError, match=match):
+            PreconditionConfig(**kwargs)
+
+    def test_coerce_rejects_foreign_types(self):
+        with pytest.raises(TypeError, match="precondition must be"):
+            PreconditionConfig.coerce(42)
+        with pytest.raises(ValueError, match="unknown preconditioner kind"):
+            PreconditionConfig.coerce("ssor")
+        with pytest.raises(TypeError):
+            PreconditionConfig.coerce({"kind": "none", "bogus": 1})
+
+    def test_frozen(self):
+        cfg = PreconditionConfig(kind="block_jacobi")
+        with pytest.raises(Exception):
+            cfg.kind = "chebyshev"
+
+
+# --------------------------------------------------------- MethodConfig
+class TestMethodConfigErrors:
+    @pytest.mark.parametrize(
+        "kwargs,match",
+        [
+            (dict(name="cg"), "unknown method"),
+            (dict(s=0), "s must be an int >= 1"),
+            (dict(s=2.0), "s must be an int >= 1"),
+            (dict(name="classic", s=2), "only applies to method 'sstep'"),
+            (dict(name="pipelined", s=4), "only applies to method 'sstep'"),
+            (dict(depth=2), "only depth-1 pipelining"),
+            (dict(name="classic", reorth=True),
+             "only applies to method 'sstep'"),
+            (dict(rank_rtol=0.0), "rank_rtol must be > 0"),
+            (dict(rank_rtol=-1e-8), "rank_rtol must be > 0"),
+        ],
+    )
+    def test_rejected_at_construction(self, kwargs, match):
+        with pytest.raises(ValueError, match=match):
+            MethodConfig(**kwargs)
+
+
+# ----------------------------------------------------------- TuneConfig
+class TestTuneConfigErrors:
+    def test_unknown_mode(self):
+        with pytest.raises(ValueError, match="unknown tune mode"):
+            TuneConfig(mode="exhaustive")
+
+    def test_tuned_must_look_like_tunedconfig(self):
+        with pytest.raises(TypeError, match="tuned must be"):
+            TuneConfig(mode="model", tuned=object())
+
+
+# --------------------------------------------- SolverConfig cross-field
+class TestSolverConfigGates:
+    def test_pipelined_rejects_inexact_with_reasoned_message(self):
+        with pytest.raises(ValueError) as e:
+            SolverConfig(method="pipelined", precondition="inexact")
+        msg = str(e.value)
+        assert "pipelined" in msg and "inexact" in msg
+        # the message explains *why* (the flexible reseed needs an SpMBV)
+        assert "reseed" in msg
+
+    def test_pipelined_accepts_fixed_preconditioners(self):
+        for kind in ("none", "block_jacobi", "chebyshev"):
+            cfg = SolverConfig(method="pipelined", precondition=kind)
+            assert cfg.precondition.kind == kind
+
+    def test_precondition_field_validates_nested_kind(self):
+        with pytest.raises(ValueError, match="unknown preconditioner kind"):
+            SolverConfig(precondition="amg")
+        with pytest.raises(ValueError, match="block must be an int >= 1"):
+            SolverConfig(precondition={"kind": "block_jacobi", "block": -4})
+
+
+# ------------------------------------------------- replace() / overrides
+class TestReplaceErrors:
+    def test_unknown_override_names_both_namespaces(self):
+        cfg = SolverConfig(t=4)
+        with pytest.raises(ValueError, match="unknown config override"):
+            cfg.replace(preconditioner="block_jacobi")  # near-miss spelling
+        with pytest.raises(ValueError, match="unknown config override"):
+            cfg.replace(blocksize=8)
+
+    def test_cannot_combine_nested_and_flat(self):
+        cfg = SolverConfig(t=4)
+        with pytest.raises(ValueError, match="cannot combine"):
+            cfg.replace(precondition=PreconditionConfig(kind="block_jacobi"),
+                        block=16)
+        with pytest.raises(ValueError, match="cannot combine"):
+            cfg.replace(comm=CommConfig(), strategy="3step")
+
+    def test_flat_override_still_validated(self):
+        cfg = SolverConfig(t=4)
+        with pytest.raises(ValueError, match="reseed must be an int >= 2"):
+            cfg.replace(precondition="inexact", reseed=1)
+        with pytest.raises(ValueError, match="degree must be an int >= 1"):
+            cfg.replace(precondition="chebyshev", degree=0)
+
+    def test_replace_cannot_sneak_pipelined_inexact(self):
+        cfg = SolverConfig(method="classic", precondition="inexact")
+        with pytest.raises(ValueError, match="pipelined"):
+            cfg.replace(method="pipelined")
+
+
+# ----------------------------------------------------------------- JSON
+class TestJsonErrors:
+    def test_malformed_precondition_kind_rejected_on_load(self):
+        d = json.loads(SolverConfig(t=4).to_json())
+        d["precondition"]["kind"] = "spai"
+        with pytest.raises(ValueError, match="unknown preconditioner kind"):
+            SolverConfig.from_json(json.dumps(d))
+
+    def test_malformed_method_rejected_on_load(self):
+        d = json.loads(SolverConfig(t=4).to_json())
+        d["method"]["name"] = "lanczos"
+        with pytest.raises(ValueError, match="unknown method"):
+            SolverConfig.from_json(json.dumps(d))
+
+    def test_malformed_field_value_rejected_on_load(self):
+        d = json.loads(SolverConfig(t=4).to_json())
+        d["max_iters"] = 0
+        with pytest.raises(ValueError, match="max_iters"):
+            SolverConfig.from_json(json.dumps(d))
+
+    def test_adaptive_probe_iters_rejected(self):
+        with pytest.raises(ValueError, match="probe_iters"):
+            AdaptiveConfig(probe_iters=1)
+
+    def test_round_trip_is_fixed_point_for_every_kind(self):
+        for kind in ("none", "block_jacobi", "chebyshev", "inexact"):
+            cfg = SolverConfig(t=4, precondition=kind)
+            assert SolverConfig.from_json(cfg.to_json()) == cfg

@@ -1,0 +1,364 @@
+"""Preconditioned + flexible ECG: builders, kernel parity, and convergence.
+
+Three layers are pinned here:
+
+1. **Pieces** — block extraction / Cholesky factoring / the batched
+   triangular-solve kernel (Pallas-interpret vs two independent oracles),
+   Chebyshev bound estimation and polynomial application, diagonal
+   extraction for the inexact smoother.
+2. **Operator properties** every preconditioner apply must satisfy for the
+   width-masked engine to stay correct: columnwise linearity (the apply
+   acts independently on each of the t columns) and the zero-column fixed
+   point (masked-out directions stay exactly zero).
+3. **End-to-end** — ``precondition="none"`` is bit-identical to the
+   unpreconditioned solve for every method; block-Jacobi and Chebyshev
+   reduce iterations on ill-conditioned operators; the iteration-varying
+   ``inexact`` kind converges on classic (via the periodic residual
+   reseed) and s-step (reseeds every block by construction), *stagnates*
+   on classic when the reseed is disabled (the truncated-FCG failure mode
+   documented in ``repro.precondition.inexact``), and is rejected outright
+   for pipelined at config validation.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ecg import _ecg_solve
+from repro.kernels import block_trisolve
+from repro.kernels.block_trisolve.ref import block_trisolve_dense, block_trisolve_ref
+from repro.precondition import (
+    PRECONDITIONS,
+    PreconditionConfig,
+    build_sequential_preconditioner,
+    estimate_lambda_max,
+    make_chebyshev_apply,
+)
+from repro.precondition.block_jacobi import (
+    extract_blocks,
+    factor_blocks,
+    rank_slot_layout,
+    slot_layout,
+)
+from repro.precondition.inexact import extract_diagonal, make_inexact_apply
+from repro.solver import ECGSolver, MethodConfig, SolverConfig
+from repro.sparse import aniso_laplace_2d, fd_laplace_2d, scaled_laplace_2d
+from repro.sparse.csr import csr_spmbv
+
+
+@pytest.fixture(scope="module")
+def system():
+    a = fd_laplace_2d(12)  # 144 rows
+    b = np.random.default_rng(0).standard_normal(a.shape[0])
+    return a, b
+
+
+def _dense(a):
+    return np.asarray(a.todense())
+
+
+# ------------------------------------------------------------- kernel
+class TestBlockTrisolve:
+    def _case(self, rng, nb=6, bs=8, t=4, dtype=np.float64):
+        m = rng.standard_normal((nb, bs, bs))
+        spd = m @ np.swapaxes(m, 1, 2) + bs * np.eye(bs)
+        l = np.linalg.cholesky(spd).astype(dtype)
+        x = rng.standard_normal((nb, bs, t)).astype(dtype)
+        return jnp.asarray(l), jnp.asarray(x), spd
+
+    def test_oracles_agree_with_direct_solve(self, rng):
+        l, x, spd = self._case(rng)
+        want = np.linalg.solve(spd, np.asarray(x))
+        np.testing.assert_allclose(np.asarray(block_trisolve_ref(l, x)), want,
+                                   rtol=1e-10, atol=1e-10)
+        np.testing.assert_allclose(np.asarray(block_trisolve_dense(l, x)), want,
+                                   rtol=1e-10, atol=1e-10)
+
+    @pytest.mark.parametrize("bs,t", [(8, 4), (16, 2), (32, 8)])
+    def test_pallas_interpret_matches_oracle(self, rng, bs, t):
+        l, x, _ = self._case(rng, nb=4, bs=bs, t=t)
+        got = block_trisolve(l, x, use_pallas=True)  # interpret off-TPU
+        want = block_trisolve_dense(l, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-9, atol=1e-9)
+
+    def test_default_dispatch_runs(self, rng):
+        l, x, spd = self._case(rng, nb=2, bs=8, t=2)
+        got = block_trisolve(l, x)
+        want = np.linalg.solve(spd, np.asarray(x))
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-8, atol=1e-8)
+
+
+# ------------------------------------------------------------ builders
+class TestBlockJacobiPieces:
+    def test_slot_layout_pads_to_block_multiple(self):
+        row_of_slot, n_slots = slot_layout(20, 8)
+        assert n_slots == 24 and len(row_of_slot) == 24
+        assert list(row_of_slot[:20]) == list(range(20))
+        assert all(r == -1 for r in row_of_slot[20:])
+
+    def test_rank_slot_layout_pads_each_rank(self):
+        # 2 ranks, rmax=5 → padded to 8 slots per rank
+        true_row = np.array([0, 1, 2, 3, 4, 5, 6, 7, 8, -1], dtype=np.int64)
+        ros = rank_slot_layout(true_row.reshape(2, 5).reshape(-1), 2, 4)
+        assert ros.shape == (16,)
+        assert list(ros[:5]) == [0, 1, 2, 3, 4] and list(ros[5:8]) == [-1] * 3
+        assert list(ros[8:13]) == [5, 6, 7, 8, -1] and list(ros[13:]) == [-1] * 3
+
+    def test_extract_blocks_matches_dense_submatrices(self):
+        a = fd_laplace_2d(6)  # 36 rows
+        row_of_slot, n_slots = slot_layout(a.shape[0], 9)
+        blocks = extract_blocks(a, np.asarray(row_of_slot), 9)
+        d = _dense(a)
+        for i in range(n_slots // 9):
+            sub = d[i * 9:(i + 1) * 9, i * 9:(i + 1) * 9]
+            np.testing.assert_allclose(np.asarray(blocks[i]), sub)
+
+    def test_extract_blocks_identity_on_padding(self):
+        a = fd_laplace_2d(5)  # 25 rows → 32 slots at block=8
+        row_of_slot, n_slots = slot_layout(a.shape[0], 8)
+        blocks = extract_blocks(a, np.asarray(row_of_slot), 8)
+        # last block has 7 padding rows: identity rows keep it SPD
+        last = np.asarray(blocks[-1])
+        np.testing.assert_allclose(last[1:, 1:], np.eye(7))
+        assert np.all(np.linalg.eigvalsh(np.asarray(blocks)) > 0)
+
+    def test_factor_blocks_is_lower_cholesky(self):
+        a = fd_laplace_2d(6)
+        row_of_slot, _ = slot_layout(a.shape[0], 12)
+        blocks = extract_blocks(a, np.asarray(row_of_slot), 12)
+        l = factor_blocks(blocks)
+        np.testing.assert_allclose(l @ np.swapaxes(l, 1, 2), np.asarray(blocks),
+                                   rtol=1e-12, atol=1e-12)
+        assert np.allclose(l, np.tril(l))
+
+
+class TestChebyshevPieces:
+    def test_lambda_max_estimate_brackets_spectrum(self):
+        a = fd_laplace_2d(10)
+        lmax_true = np.linalg.eigvalsh(_dense(a)).max()
+        est = estimate_lambda_max(a)
+        assert lmax_true <= est <= 1.3 * lmax_true
+
+    def test_apply_is_spd_polynomial_in_a(self, rng):
+        a = fd_laplace_2d(8)
+        d = _dense(a)
+        ev = np.linalg.eigvalsh(d)
+        app = make_chebyshev_apply(
+            lambda v: csr_spmbv(a, v), ev[0], ev[-1], degree=4
+        )
+        n = a.shape[0]
+        m = np.asarray(app(jnp.eye(n)))  # matrix representation
+        np.testing.assert_allclose(m, m.T, atol=1e-10)
+        assert np.all(np.linalg.eigvalsh(0.5 * (m + m.T)) > 0)
+        # M⁻¹A is far better conditioned than A
+        pa = m @ d
+        k_pa = np.linalg.cond(0.5 * (pa + pa.T))
+        assert k_pa < 0.2 * np.linalg.cond(d)
+
+
+class TestInexactPieces:
+    def test_extract_diagonal(self):
+        a = fd_laplace_2d(6)
+        d = np.asarray(extract_diagonal(a))
+        np.testing.assert_allclose(d, np.diag(_dense(a)))
+
+    def test_extract_diagonal_padding_slots_get_one(self):
+        a = fd_laplace_2d(5)
+        row_of_slot, _ = slot_layout(a.shape[0], 8)
+        d = np.asarray(extract_diagonal(a, row_of_slot=np.asarray(row_of_slot)))
+        assert d.shape == (32,)
+        np.testing.assert_allclose(d[25:], 1.0)
+
+    def test_varying_damping_differs_across_iterations(self, rng):
+        a = fd_laplace_2d(6)
+        app = make_inexact_apply(
+            lambda v: csr_spmbv(a, v), extract_diagonal(a), 2.0 / 3.0, 2
+        )
+        x = jnp.asarray(rng.standard_normal((a.shape[0], 3)))
+        y0, y1, y2 = app(x, 0), app(x, 1), app(x, 2)
+        assert not np.allclose(np.asarray(y0), np.asarray(y1))
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y2))  # period 2
+
+
+# ---------------------------------------------------- operator properties
+def _build_apply(kind, a):
+    cfg = PreconditionConfig(kind=kind, block=12, degree=3, sweeps=2)
+    return build_sequential_preconditioner(
+        a, cfg, lambda v: csr_spmbv(a, v)
+    )
+
+
+class TestApplyProperties:
+    """Every kind must be columnwise-linear with a zero fixed point —
+    otherwise masked (zeroed) directions of a reduced-width solve would
+    leak mass back into the active block."""
+
+    @pytest.mark.parametrize("kind", [k for k in PRECONDITIONS if k != "none"])
+    def test_columnwise_linear_and_zero_fixed_point(self, kind, rng):
+        a = fd_laplace_2d(6)
+        app = _build_apply(kind, a)
+        x = jnp.asarray(rng.standard_normal((a.shape[0], 4)))
+        for k in (0, 1):
+            y = np.asarray(app(x, k))
+            # column j of the output depends only on column j of the input
+            for j in range(4):
+                xj = jnp.zeros_like(x).at[:, j].set(x[:, j])
+                np.testing.assert_allclose(
+                    np.asarray(app(xj, k))[:, j], y[:, j], rtol=1e-12, atol=1e-13
+                )
+            # zero columns stay exactly zero (masked widths are safe)
+            xz = x.at[:, 2].set(0.0)
+            assert np.all(np.asarray(app(xz, k))[:, 2] == 0.0)
+            # homogeneity
+            np.testing.assert_allclose(
+                np.asarray(app(2.5 * x, k)), 2.5 * y, rtol=1e-12, atol=1e-12
+            )
+
+    def test_none_kind_builds_nothing(self):
+        a = fd_laplace_2d(6)
+        assert not PreconditionConfig().active
+        assert build_sequential_preconditioner(
+            a, PreconditionConfig(), lambda v: csr_spmbv(a, v)
+        ) is None
+
+    def test_block_jacobi_is_exact_blockdiag_inverse(self, rng):
+        a = fd_laplace_2d(6)
+        app = _build_apply("block_jacobi", a)
+        d = _dense(a)
+        n = a.shape[0]
+        x = jnp.asarray(rng.standard_normal((n, 2)))
+        want = np.zeros((n, 2))
+        for i in range(0, n, 12):
+            sub = d[i:i + 12, i:i + 12]
+            want[i:i + 12] = np.linalg.solve(sub, np.asarray(x)[i:i + 12])
+        np.testing.assert_allclose(np.asarray(app(x, 0)), want,
+                                   rtol=1e-10, atol=1e-10)
+
+
+# ----------------------------------------------------------- end-to-end
+class TestSolverIntegration:
+    @pytest.mark.parametrize("method", ["classic", "pipelined", "sstep"])
+    def test_none_bit_identical_to_unpreconditioned(self, system, method):
+        a, b = system
+        mc = MethodConfig(name=method, s=2 if method == "sstep" else 1)
+        kw = dict(t=4, max_iters=300, method=mc)
+        plain = ECGSolver.build(a, config=SolverConfig(**kw)).solve(b)
+        noop = ECGSolver.build(
+            a, config=SolverConfig(precondition="none", **kw)
+        ).solve(b)
+        assert np.array_equal(np.asarray(plain.x), np.asarray(noop.x))
+        assert plain.n_iters == noop.n_iters
+
+    @pytest.mark.parametrize("method", ["classic", "pipelined", "sstep"])
+    @pytest.mark.parametrize("kind", ["block_jacobi", "chebyshev"])
+    def test_fixed_preconditioners_cut_iterations(self, system, method, kind):
+        a, b = system
+        mc = MethodConfig(name=method, s=2 if method == "sstep" else 1)
+        kw = dict(t=4, tol=1e-10, max_iters=300, method=mc)
+        base = ECGSolver.build(a, config=SolverConfig(**kw)).solve(b)
+        prec = ECGSolver.build(
+            a, config=SolverConfig(precondition=kind, **kw)
+        ).solve(b)
+        assert base.converged and prec.converged
+        assert prec.n_iters < base.n_iters
+        x_ref = np.linalg.solve(_dense(a), b)
+        np.testing.assert_allclose(np.asarray(prec.x), x_ref, rtol=1e-6)
+
+    @pytest.mark.parametrize(
+        "gen,kind",
+        [
+            (lambda: aniso_laplace_2d(16, eps=0.01), "block_jacobi"),
+            (lambda: aniso_laplace_2d(16, eps=0.01), "chebyshev"),
+            (lambda: scaled_laplace_2d(16, decades=4.0), "block_jacobi"),
+        ],
+    )
+    def test_ill_conditioned_acceptance(self, gen, kind):
+        """ISSUE acceptance: preconditioning reduces iterations on
+        ill-conditioned operators at the same t / method.  (Chebyshev with
+        default bounds is honest about its limits: it is *not* asserted on
+        the diagonally-scaled matrix, whose κ≈1e8 defeats eig_ratio=30.)"""
+        a = gen()
+        b = np.random.default_rng(1).standard_normal(a.shape[0])
+        kw = dict(t=4, tol=1e-9, max_iters=3000)
+        base = ECGSolver.build(a, config=SolverConfig(**kw)).solve(b)
+        prec = ECGSolver.build(
+            a, config=SolverConfig(precondition=kind, **kw)
+        ).solve(b)
+        assert prec.converged
+        assert (not base.converged) or prec.n_iters < base.n_iters
+
+    def test_inexact_flexible_converges_on_classic_and_sstep(self, system):
+        a, b = system
+        for mc in (MethodConfig(name="classic"),
+                   MethodConfig(name="sstep", s=2)):
+            res = ECGSolver.build(a, config=SolverConfig(
+                t=4, tol=1e-10, max_iters=300, method=mc,
+                precondition="inexact",
+            )).solve(b)
+            assert res.converged, f"inexact did not converge for {mc.name}"
+            x_ref = np.linalg.solve(_dense(a), b)
+            np.testing.assert_allclose(np.asarray(res.x), x_ref, rtol=1e-6)
+
+    def test_pipelined_rejects_inexact(self):
+        with pytest.raises(ValueError, match="pipelined.*inexact"):
+            SolverConfig(method="pipelined", precondition="inexact")
+
+    def test_classic_inexact_without_reseed_stagnates(self, system):
+        """Pin the flexible-ECG finding: the classic direction chain never
+        re-reads the residual, so an iteration-varying M⁻¹ₖ *without* the
+        periodic residual reseed stagnates (truncated-FCG failure mode,
+        Notay SISC 22(4) 2000).  The reseed is what makes it converge."""
+        a, b = system
+        cfg = PreconditionConfig(kind="inexact")
+        app = build_sequential_preconditioner(
+            a, cfg, lambda v: csr_spmbv(a, v)
+        )
+        kw = dict(tol=1e-10, max_iters=250, precond=app)
+        bad = _ecg_solve(lambda v: csr_spmbv(a, v), jnp.asarray(b), 4,
+                         precond_reseed=None, **kw)
+        good = _ecg_solve(lambda v: csr_spmbv(a, v), jnp.asarray(b), 4,
+                          precond_reseed=cfg.reseed, **kw)
+        assert good.converged and not bad.converged
+
+    def test_with_config_reuses_operator_and_precond(self, system):
+        a, b = system
+        s = ECGSolver.build(a, config=SolverConfig(
+            t=4, max_iters=300, precondition="block_jacobi"))
+        s2 = s.with_config(tol=1e-6)
+        assert s2.stats.op_reused
+        assert s2.solve(b).converged
+        # changing the preconditioner keeps the operator, rebuilds the apply
+        s3 = s.with_config(precondition="chebyshev")
+        assert s3.stats.op_reused
+        assert s3.config.precondition.kind == "chebyshev"
+        assert s3.solve(b).converged
+
+
+# --------------------------------------------------------------- config
+class TestPreconditionConfigRoundTrip:
+    def test_json_round_trip(self):
+        cfg = SolverConfig(
+            t=4, precondition=PreconditionConfig(
+                kind="chebyshev", degree=5, eig_bounds=(0.1, 7.5)),
+        )
+        back = SolverConfig.from_json(cfg.to_json())
+        assert back == cfg
+        assert back.precondition.eig_bounds == (0.1, 7.5)
+
+    def test_flat_replace_spellings(self):
+        cfg = SolverConfig(t=4)
+        c2 = cfg.replace(precondition="block_jacobi", block=16)
+        assert c2.precondition.kind == "block_jacobi"
+        assert c2.precondition.block == 16
+        assert cfg.precondition.kind == "none"  # original untouched
+
+    def test_coerce_forms(self):
+        assert PreconditionConfig.coerce(None) == PreconditionConfig()
+        assert PreconditionConfig.coerce("chebyshev").kind == "chebyshev"
+        assert PreconditionConfig.coerce(
+            {"kind": "block_jacobi", "block": 8}).block == 8
+        c = PreconditionConfig(kind="inexact", sweeps=3)
+        assert PreconditionConfig.coerce(c) is c
