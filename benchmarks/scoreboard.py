@@ -17,8 +17,12 @@ The full grid crosses
 * **t** — 2 and 8.
 
 Every row records iterations (and effective iterations for sstep),
-convergence, breakdown, true relative residual, and wall seconds for the
-*second* (compile-free) solve.  Unconverged rows are kept — the
+convergence, breakdown, true relative residual, wall seconds for the
+*second* (compile-free) solve, and the solve's event telemetry —
+``recoveries`` (rank-revealing drops the solve recovered from: every
+s-step block whose mandatory safeguard rejected candidate columns, and
+every adaptive classic/pipelined iteration whose factorization lost live
+width) and ``reseeds`` (flexible-restart firings of the inexact kind).  Unconverged rows are kept — the
 scoreboard is honest about where a preconditioner does NOT pay
 (Chebyshev's default ``eig_ratio`` misses the ~1e8 condition number of
 the diagonally-scaled operator, for instance).  Block-Jacobi runs with
@@ -123,6 +127,10 @@ def run_grid(ops, schemes, cands, preconds, tol, max_iters):
                         np.asarray(csr_spmv(a, jnp.asarray(res.x)))
                         - b) / bn)
                     label = method + (f"[s={s}]" if s > 1 else "")
+                    # event telemetry: rank-revealing drops the solve
+                    # recovered from, and flexible-reseed firings (inexact)
+                    recoveries = res.n_recoveries
+                    reseeds = res.n_reseeds
                     rows.append(dict(
                         operator=op_name, n=n, precond=kind, method=label,
                         t=t, iters=int(res.n_iters),
@@ -130,11 +138,14 @@ def run_grid(ops, schemes, cands, preconds, tol, max_iters):
                         converged=bool(res.converged),
                         breakdown=bool(res.breakdown), relres=relres,
                         wall_s=wall_s,
+                        recoveries=recoveries, reseeds=reseeds,
                     ))
                     print(f"{op_name:<12} t={t} {label:<10} {kind:<12} "
                           f"iters={res.n_iters:>5} "
                           f"conv={str(bool(res.converged)):<5} "
                           f"relres={relres:.2e}"
+                          + (f" recov={recoveries}" if recoveries else "")
+                          + (f" reseed={reseeds}" if reseeds else "")
                           + (" BREAKDOWN" if res.breakdown else ""))
     return rows
 
@@ -178,6 +189,8 @@ def summarize(rows, tol):
                 ))
     return dict(
         precond_helps_ill=bool(helps) and all(helps),
+        n_recoveries=sum(r.get("recoveries", 0) for r in rows),
+        n_reseeds=sum(r.get("reseeds", 0) for r in rows),
         none_rows_all_converged_except_scaled=all(
             r["converged"] for r in rows
             if r["precond"] == "none" and r["operator"] != "scaled2d"

@@ -1,0 +1,233 @@
+"""Serving-layer benchmark: batched throughput, warm-start latency, hit rate.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--json PATH]
+                                                    [--check BASELINE]
+
+Three phases over the standard synthetic trace (32 single-RHS requests in
+shuffled arrival order across 3 operators, 8 duplicate payloads — the
+same generator as ``repro.launch.serve``):
+
+* **warm-start restart** — a ``t="auto"`` server registers the three
+  operators cold (probes + selection paid, outcome persisted to the
+  warm-start cache), then a second server on the same cache directory
+  simulates the restart: every build must load its tuning from disk
+  (``warm_retunes == 0``) and the summed build latency must drop ≥ 5×.
+* **throughput** — the trace replayed through (a) a *sequential* server
+  (``max_batch=1``, dedup off: one dispatch per request) and (b) a
+  *batched* server (per-operator coalescing + dedup + pipelined
+  dispatch).  Both are compile-warmed first; best-of-``--repeats`` wall
+  time.  Gate: batched requests/s ≥ sequential.
+* **bit-identity** — every batched result must equal a solo
+  ``ECGSolver.solve`` of the same request bit-for-bit.
+
+``--check BASELINE`` is the CI gate against the committed
+``BENCH_serve.json``: the deterministic counters (registry hits/misses,
+dedup shares, batch layout, warm retunes, bit-identity) must match the
+baseline exactly — they are pure functions of the trace, independent of
+machine speed.  Wall-clock numbers are informational except for the two
+ratio gauges above, which compare a run against itself.
+
+``--smoke`` shrinks the operators and skips repeat timing; the trace
+structure (and therefore every checked counter) is identical to the full
+run.
+"""
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+
+
+def register_all(server, ops):
+    """Force-register every operator; returns the build records."""
+    for _, a in ops:
+        server.registry.get(a)
+    return server.registry.stats()
+
+
+def replay_sequential(server, ops, trace):
+    for op_i, b in trace:
+        server.solve(ops[op_i][1], b)
+
+
+def replay_batched(server, ops, trace):
+    tickets = [server.submit(ops[op_i][1], b) for op_i, b in trace]
+    server.flush()
+    return tickets
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small operators for CI")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--dups", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timed replays per mode (best-of); default 3, 1 smoke")
+    ap.add_argument("--json", default="BENCH_serve.json")
+    ap.add_argument("--check", metavar="BASELINE", default=None,
+                    help="fail unless deterministic counters match this JSON")
+    args = ap.parse_args()
+    repeats = args.repeats or (1 if args.smoke else 3)
+    scale = 4 if args.smoke else 8
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    import numpy as np
+
+    from repro.launch.serve import build_trace
+    from repro.serve import ECGServer, ServeConfig
+    from repro.solver import ECGSolver, SolverConfig
+
+    ops, trace = build_trace(args.requests, args.dups, scale)
+    print(f"# serve bench: {len(trace)} requests / {len(ops)} operators "
+          f"({', '.join(f'{n}={a.shape[0]}' for n, a in ops)}), "
+          f"{args.dups} dups" + (" [smoke]" if args.smoke else ""))
+
+    # ---- phase 1: cold vs warm builds through the warm-start cache
+    auto_solver = SolverConfig(t="auto", tol=1e-8)
+    with tempfile.TemporaryDirectory() as cache_dir:
+        cfg_auto = ServeConfig(solver=auto_solver, cache_dir=cache_dir)
+        cold = register_all(ECGServer(cfg_auto), ops)
+        warm = register_all(ECGServer(cfg_auto), ops)  # simulated restart
+    cold_s = sum(r["build_s"] for r in cold["builds"])
+    warm_s = sum(r["build_s"] for r in warm["builds"])
+    warm_retunes = warm["cold_builds"]
+    build_speedup = cold_s / warm_s if warm_s > 0 else float("inf")
+    print(f"builds: cold {cold_s:.3f}s -> warm {warm_s:.3f}s "
+          f"({build_speedup:.1f}x, {warm_retunes} re-tuned after restart)")
+
+    # ---- phase 2: batched vs sequential throughput (fixed-t template)
+    fixed = ServeConfig(solver=SolverConfig(t=4, tol=1e-8, adaptive="rankrev"))
+    seq_server = ECGServer(fixed.replace(max_batch=1, dedup=False))
+    bat_server = ECGServer(fixed)
+    # compile-warm both (one solve per operator) so timing excludes traces
+    for _, a in ops:
+        b0 = np.zeros(a.shape[0])
+        b0[0] = 1.0
+        seq_server.solve(a, b0)
+        bat_server.solve(a, b0)
+    seq_wall = min(
+        _timed(replay_sequential, seq_server, ops, trace) for _ in range(repeats)
+    )
+    bat_wall = min(
+        _timed(replay_batched, bat_server, ops, trace) for _ in range(repeats)
+    )
+    seq_rps = len(trace) / seq_wall
+    bat_rps = len(trace) / bat_wall
+    print(f"throughput: sequential {seq_rps:.1f} req/s, "
+          f"batched {bat_rps:.1f} req/s ({bat_rps / seq_rps:.2f}x)")
+
+    # ---- phase 3: bit-identity of the batched trace vs solo solves
+    bat_fresh = ECGServer(fixed)
+    tickets = replay_batched(bat_fresh, ops, trace)
+    solo = {name: ECGSolver.build(a, config=fixed.solver) for name, a in ops}
+    bit_identical = True
+    for (op_i, b), tk in zip(trace, tickets):
+        name, a = ops[op_i]
+        ref = solo[name].solve(b)
+        same = (
+            np.array_equal(np.asarray(tk.result.x), np.asarray(ref.x))
+            and tk.result.n_iters == ref.n_iters
+            and bool(tk.result.converged) == bool(ref.converged)
+        )
+        bit_identical = bit_identical and same
+    st = bat_fresh.stats()
+    reg, q = st["registry"], st["queue"]
+    hit_rate = reg["hits"] / max(reg["hits"] + reg["misses"], 1)
+    print(f"bit-identity vs solo solves: {bit_identical}; "
+          f"registry hit rate {hit_rate:.2f}; "
+          f"{q['batches']} batches {q['batch_sizes']}, "
+          f"{q['dedup_shared']} dedup-shared")
+
+    summary = dict(
+        bit_identical=bool(bit_identical),
+        batched_not_slower=bool(bat_rps >= seq_rps),
+        warm_speedup_5x=bool(build_speedup >= 5.0),
+        warm_retunes=int(warm_retunes),
+    )
+    out = dict(
+        config=dict(
+            requests=len(trace), dups=args.dups, operators={
+                n: int(a.shape[0]) for n, a in ops
+            }, scale=scale, repeats=repeats, smoke=args.smoke,
+            max_batch=fixed.max_batch, t=4, auto_t_for_builds=True,
+        ),
+        builds=dict(
+            cold_s=cold_s, warm_s=warm_s, speedup=build_speedup,
+            cold=cold["builds"], warm=warm["builds"],
+            warm_retunes=int(warm_retunes),
+        ),
+        throughput=dict(
+            sequential_rps=seq_rps, batched_rps=bat_rps,
+            ratio=bat_rps / seq_rps,
+            sequential_wall_s=seq_wall, batched_wall_s=bat_wall,
+        ),
+        batched=dict(
+            hits=reg["hits"], misses=reg["misses"], hit_rate=hit_rate,
+            batches=q["batches"], batch_sizes=q["batch_sizes"],
+            dedup_shared=q["dedup_shared"],
+        ),
+        summary=summary,
+    )
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"summary: {json.dumps(summary)}")
+    print(f"wrote {args.json}")
+
+    failures = []
+    if not summary["bit_identical"]:
+        failures.append("batched results are not bit-identical to solo solves")
+    if not summary["batched_not_slower"]:
+        failures.append(
+            f"batched throughput regressed below sequential "
+            f"({bat_rps:.1f} < {seq_rps:.1f} req/s)"
+        )
+    if not summary["warm_speedup_5x"]:
+        failures.append(
+            f"warm-start build speedup {build_speedup:.1f}x < 5x"
+        )
+    if summary["warm_retunes"]:
+        failures.append(
+            f"{warm_retunes} operator(s) re-tuned after restart (want 0)"
+        )
+    if args.check:
+        failures += check_counters(out, args.check)
+        if not failures:
+            print(f"counter gate OK vs {args.check}")
+    if failures:
+        print("SERVE GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        sys.exit(1)
+
+
+def _timed(fn, *args):
+    t0 = time.perf_counter()
+    fn(*args)
+    return time.perf_counter() - t0
+
+
+def check_counters(out: dict, baseline_path: str) -> list[str]:
+    """Deterministic counters must match the committed baseline exactly."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failures = []
+    for section, field in (
+        ("config", "requests"), ("config", "dups"),
+        ("batched", "hits"), ("batched", "misses"),
+        ("batched", "batches"), ("batched", "batch_sizes"),
+        ("batched", "dedup_shared"),
+        ("builds", "warm_retunes"),
+        ("summary", "bit_identical"),
+    ):
+        got, want = out[section][field], base[section][field]
+        if got != want:
+            failures.append(f"{section}.{field}: {got!r} != baseline {want!r}")
+    return failures
+
+
+if __name__ == "__main__":
+    main()

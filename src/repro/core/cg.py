@@ -18,6 +18,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+#: ``SolveResult.event_hist`` bitmask values.
+EV_RECOVERY = 1  # rank-revealing factorization dropped live directions
+EV_RESEED = 2    # flexible restart reseeded Z from the preconditioned residual
+
 
 @dataclasses.dataclass
 class SolveResult:
@@ -38,6 +42,15 @@ class SolveResult:
     comm_segments: list | None = None  # [(exchange width, iterations)] per
     #                                  width segment of the re-sliced solve
     #                                  (width-aware distributed ECG only)
+    event_hist: jax.Array | None = None  # (max_iters + 1,) int32 event bitmask
+    #                                  per iteration: EV_RECOVERY (the
+    #                                  rank-revealing factorization dropped
+    #                                  live directions — an in-flight
+    #                                  breakdown recovery), EV_RESEED (the
+    #                                  flexible restart reseeded the chain
+    #                                  from the preconditioned residual).
+    #                                  -1 past the recorded end; None when no
+    #                                  tracked mechanism was active.
     final_carry: dict | None = dataclasses.field(default=None, repr=False)
     #                                ^ loop carry at exit — the resume handle
     #                                  the segmented solver threads between
@@ -68,6 +81,39 @@ class SolveResult:
             for k in range(1, len(h))
             if h[k] >= 0 and h[k - 1] >= 0 and h[k] != h[k - 1]
         ]
+
+    def _event_iters(self, bit: int) -> list[int]:
+        """Iterations whose event-bitmask entry carries ``bit`` (valid
+        entries only — the trace is -1-padded past the recorded end, same
+        full-valid-prefix convention as :meth:`reduction_events`)."""
+        if self.event_hist is None:
+            return []
+        import numpy as np
+
+        h = np.asarray(self.event_hist).tolist()
+        return [k for k in range(len(h)) if h[k] >= 0 and int(h[k]) & bit]
+
+    def recovery_events(self) -> list[int]:
+        """Iterations where the rank-revealing factorization dropped live
+        directions — the breakdown-recovery trace.  Classic/pipelined record
+        a drop of the entering active width; s-step records every block
+        whose mandatory safeguard rejected candidate basis columns (the
+        monomial basis losing rank is the event the safeguard exists for)."""
+        return self._event_iters(EV_RECOVERY)
+
+    def reseed_events(self) -> list[int]:
+        """Iterations where the flexible restart reseeded the direction
+        chain from the preconditioned residual (classic + an
+        iteration-varying preconditioner, every ``reseed``-th iteration)."""
+        return self._event_iters(EV_RESEED)
+
+    @property
+    def n_recoveries(self) -> int:
+        return len(self.recovery_events())
+
+    @property
+    def n_reseeds(self) -> int:
+        return len(self.reseed_events())
 
 
 def _guarded_while(cond_extra, body_fn, init: dict):

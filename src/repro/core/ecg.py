@@ -247,6 +247,7 @@ def finalize_result(
         active_hist=out["ahist"] if policy is not None else None,
         restarts=int(out["restarts"]) if policy is not None else 0,
         selection=selection,
+        event_hist=out.get("evhist"),
         final_carry=out,
     )
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.adaptive.rankrev import rank_revealing_apply
 from repro.adaptive.reduce import plateau_update, stagnation_mask
+from repro.core.cg import EV_RECOVERY, EV_RESEED
 from repro.core.methods.base import MethodContext, MethodSpec, _apply_vec, _chol_inv_apply
 
 
@@ -40,6 +41,9 @@ class ClassicMethod(MethodSpec):
         gram1, gram2, sqnorm, tail = ctx.gram1, ctx.gram2, ctx.sqnorm, ctx.tail
         precond, gram2p = ctx.precond, ctx.gram2p
         reseed = ctx.precond_reseed if precond is not None else None
+        # telemetry: record rank-revealing drops (EV_RECOVERY) and flexible
+        # reseeds (EV_RESEED) per iteration whenever either mechanism runs
+        track_events = policy is not None or reseed is not None
 
         def iterate(carry):
             big_x, big_r, z = carry["X"], carry["R"], carry["Z"]
@@ -51,6 +55,7 @@ class ClassicMethod(MethodSpec):
             else:
                 az = a_apply(z)  # SpMBV  [p2p]
             g = gram1(z, az)  # allreduce #1: t² floats
+            ev = jnp.int32(0)
             if policy is None:
                 p, ap = _chol_inv_apply(g, z, az, eps=chol_eps)  # local chol + TRSMs
                 active = None
@@ -60,6 +65,10 @@ class ClassicMethod(MethodSpec):
                 (p, ap), _rank, active = rank_revealing_apply(
                     g, z, az, rtol=policy.rank_rtol
                 )
+                # fewer accepted pivots than live entering directions = a
+                # rank drop the factorization just recovered from (the
+                # entering width is last iteration's ahist entry)
+                ev = ev | jnp.where(_rank < carry["ahist"][k], EV_RECOVERY, 0)
 
             # fused block inner products: one packed reduction of 3t² floats
             if precond is None:
@@ -89,6 +98,7 @@ class ClassicMethod(MethodSpec):
                 # unorthogonalized seed goes through next iteration's Gram.
                 do_rs = (k + 1) % reseed == 0
                 z_new = jnp.where(do_rs, precond(big_r, k + 1), z_new)
+                ev = ev | jnp.where(do_rs, EV_RESEED, 0)
             if policy is not None:
                 # flexible-ECG stagnation drops; a zeroed Z column stays dead
                 # (its G row/column is zero next iteration), so no mask needs
@@ -104,6 +114,8 @@ class ClassicMethod(MethodSpec):
                 X=big_x, R=big_r, Z=z_new, P=p, AP=ap, k=k + 1, rn=rn, hist=hist,
                 bd=carry["bd"],
             )
+            if track_events:
+                out["evhist"] = carry["evhist"].at[k + 1].set(ev)
             if use_mask:
                 out["act"] = active
             if policy is not None:
@@ -150,6 +162,10 @@ class ClassicMethod(MethodSpec):
                     since=jnp.int32(0),
                     restarts=jnp.int32(0),
                     ahist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(t),
+                )
+            if track_events:
+                carry["evhist"] = (
+                    jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(0)
                 )
             if use_mask:
                 carry["act"] = jnp.ones((t,), bool)

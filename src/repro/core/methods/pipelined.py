@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.adaptive.rankrev import rank_revealing_apply
 from repro.adaptive.reduce import plateau_update, stagnation_mask
+from repro.core.cg import EV_RECOVERY
 from repro.core.methods.base import MethodContext, MethodSpec, _apply_vec, _chol_inv_apply
 
 
@@ -130,6 +131,11 @@ class PipelinedMethod(MethodSpec):
                 out.update(
                     best_rn=best_rn, since=since, restarts=carry["restarts"],
                     ahist=carry["ahist"].at[k + 1].set(n_active),
+                    # telemetry: pivots accepted below the entering active
+                    # width = a rank drop the factorization recovered from
+                    evhist=carry["evhist"].at[k + 1].set(
+                        jnp.where(_rank < carry["ahist"][k], EV_RECOVERY, 0)
+                    ),
                 )
             return out
 
@@ -153,6 +159,7 @@ class PipelinedMethod(MethodSpec):
                     since=jnp.int32(0),
                     restarts=jnp.int32(0),
                     ahist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(t),
+                    evhist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(0),
                 )
             if use_mask:
                 carry["act"] = jnp.ones((t,), bool)

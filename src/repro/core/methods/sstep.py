@@ -55,6 +55,7 @@ import jax.numpy as jnp
 
 from repro.adaptive.rankrev import rank_revealing_apply
 from repro.adaptive.reduce import plateau_update, stagnation_mask
+from repro.core.cg import EV_RECOVERY
 from repro.core.methods.base import MethodContext, MethodSpec, _apply_vec
 
 
@@ -148,10 +149,19 @@ class SStepMethod(MethodSpec):
 
             # mandatory safeguard: pivoted rank-revealing A-orthonormalization
             (p, ap), _rank, _active_st = rank_revealing_apply(g, v, av, rtol=rr_rtol)
+            # telemetry: live candidate columns = s per live seed column (a
+            # dead seed spawns only zero basis vectors); fewer accepted
+            # pivots means the safeguard just absorbed a rank loss of the
+            # monomial basis — the breakdown-recovery event this scheme's
+            # mandatory factorization exists for
+            live = s * (jnp.sum(act_t).astype(jnp.int32) if policy is not None
+                        else jnp.int32(t))
+            recovered = _rank < live
             if reorth:
                 # Cholesky-QR2 second pass: one extra (st)² psum per block
                 g2 = gram1(p, ap)
                 (p, ap), _rank2, _act2 = rank_revealing_apply(g2, p, ap, rtol=rr_rtol)
+                recovered = recovered | (_rank2 < _rank)
 
             c = gram1(p, big_r)  # psum #2: (st, t) coefficient block = PᵀR
             # exact A-norm error projection onto span(P): monotone per block
@@ -164,6 +174,9 @@ class SStepMethod(MethodSpec):
             out = dict(
                 X=big_x, R=big_r, P=p, AP=ap, Pp=p1, APp=ap1,
                 k=k + 1, rn=rn, hist=hist, bd=carry["bd"],
+                evhist=carry["evhist"].at[k + 1].set(
+                    jnp.where(recovered, EV_RECOVERY, 0)
+                ),
             )
             if policy is not None:
                 # seed-level stagnation: score residual column l by its
@@ -203,7 +216,9 @@ class SStepMethod(MethodSpec):
             carry = dict(X=jnp.zeros((n, t), dtype), R=big_r0,
                          P=zeros_nst, AP=zeros_nst, Pp=zeros_nst, APp=zeros_nst,
                          k=jnp.int32(0), rn=rn0, hist=hist0,
-                         bd=~jnp.isfinite(rn0))
+                         bd=~jnp.isfinite(rn0),
+                         evhist=jnp.full((max_iters + 1,), -1,
+                                         jnp.int32).at[0].set(0))
             if policy is not None:
                 carry.update(
                     act=jnp.ones((t,), bool),

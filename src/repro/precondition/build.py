@@ -26,7 +26,11 @@ from repro.precondition.block_jacobi import (
     rank_slot_layout,
     slot_layout,
 )
-from repro.precondition.chebyshev import make_chebyshev_apply, resolve_bounds
+from repro.precondition.chebyshev import (
+    distributed_power_matvec,
+    make_chebyshev_apply,
+    resolve_bounds,
+)
 from repro.precondition.config import PreconditionConfig
 from repro.precondition.inexact import extract_diagonal, make_inexact_apply
 
@@ -62,6 +66,8 @@ def build_sequential_preconditioner(a, cfg: PreconditionConfig, a_apply):
         factors = factor_blocks(extract_blocks(a, row_of_slot, cfg.block))
         return _block_apply(factors, n, cfg.block)
     if cfg.kind == "chebyshev":
+        # λmax power iteration through the vectorized CSR SpMV (the
+        # default matvec of estimate_lambda_max) — never a host row loop
         lmin, lmax = resolve_bounds(a, cfg)
         cheb = make_chebyshev_apply(a_apply, lmin, lmax, cfg.degree)
         return lambda x, k: cheb(x)
@@ -81,7 +87,10 @@ def build_distributed_preconditioner(a, cfg: PreconditionConfig, op, mesh, a_app
     if not cfg.active:
         return None
     if cfg.kind == "chebyshev":
-        lmin, lmax = resolve_bounds(a, cfg)
+        # λmax power iteration runs *distributed*: width-1 SpMBV sub-plan,
+        # p2p halo exchange only — no densified operator on any host, and
+        # zero all-reduces (pinned in tests/dist_worker.py)
+        lmin, lmax = resolve_bounds(a, cfg, matvec=distributed_power_matvec(op))
         cheb = make_chebyshev_apply(a_apply, lmin, lmax, cfg.degree)
         return lambda x, k: cheb(x)
     if cfg.kind == "inexact":

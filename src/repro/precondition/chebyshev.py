@@ -13,10 +13,16 @@ applications, i.e. p2p SpMBV exchanges only — the preconditioner adds
 **zero** collectives to the iteration, which is what lets the classic
 scheme keep its two-psum HLO invariant under preconditioning.
 
-λmax is estimated once at build time by host-side power iteration on the
-assembled CSR (deterministic seed); λmin defaults to λmax / eig_ratio —
-clipping the lowest modes is the usual Chebyshev-preconditioning trade
-(they are cheap for CG itself to resolve).
+λmax is estimated once at build time by power iteration *through the
+operator apply* (deterministic seed): the sequential builder runs the
+vectorized CSR SpMV, the distributed builder the width-1 node-aware
+SpMBV sub-plan — p2p halo exchange only, no densification and no
+collective beyond the plan's collective-permutes (the Rayleigh quotient
+and norms reduce host-side after unshard; the zero-all-reduce property
+is pinned in ``tests/dist_worker.py``).  λmin defaults to
+λmax / eig_ratio — clipping the lowest modes is the usual
+Chebyshev-preconditioning trade (they are cheap for CG itself to
+resolve).
 """
 
 from __future__ import annotations
@@ -24,26 +30,28 @@ from __future__ import annotations
 import numpy as np
 
 
-def estimate_lambda_max(a, iters: int = 25, seed: int = 0) -> float:
+def estimate_lambda_max(a, iters: int = 25, seed: int = 0, *, matvec=None) -> float:
     """Power-iteration estimate of the largest eigenvalue of SPD ``a``
-    (host-side numpy; returns the final Rayleigh quotient × 1.05 safety)."""
-    indptr = np.asarray(a.indptr)
-    indices = np.asarray(a.indices)
-    data = np.asarray(a.data, dtype=np.float64)
+    (returns the final Rayleigh quotient × 1.05 safety).
+
+    ``matvec`` is the ``(n,) -> (n,)`` operator apply the iteration runs
+    through; the default is the vectorized CSR SpMV (never the historical
+    per-row host loop).  The distributed builder passes
+    :func:`distributed_power_matvec` so the estimate exercises the same
+    p2p exchange path the solve itself will run.
+    """
     n = a.shape[0]
+    if matvec is None:
+        import jax.numpy as jnp
 
-    def matvec(v):
-        out = np.zeros(n)
-        for i in range(n):
-            lo, hi = indptr[i], indptr[i + 1]
-            out[i] = data[lo:hi] @ v[indices[lo:hi]]
-        return out
+        from repro.sparse.csr import csr_spmv
 
+        matvec = lambda v: np.asarray(csr_spmv(a, jnp.asarray(v)))
     v = np.random.default_rng(seed).standard_normal(n)
     v /= np.linalg.norm(v)
     lam = 1.0
     for _ in range(iters):
-        w = matvec(v)
+        w = np.asarray(matvec(v), dtype=np.float64)
         lam = float(v @ w)
         nw = np.linalg.norm(w)
         if nw == 0:
@@ -52,12 +60,33 @@ def estimate_lambda_max(a, iters: int = 25, seed: int = 0) -> float:
     return 1.05 * lam
 
 
-def resolve_bounds(a, cfg) -> tuple[float, float]:
+def distributed_power_matvec(op):
+    """``(n,) -> (n,)`` matvec through the distributed SpMBV for the λmax
+    power iteration.
+
+    Runs the width-1 sub-plan (``plan.at_width(1)``), so the halo exchange
+    moves exactly one column of bytes through the plan's
+    collective-permutes and the lowered step program carries **zero**
+    all-reduces — the Rayleigh quotient and norms are reduced host-side
+    after :meth:`~repro.sparse.spmbv.DistributedSpMBV.unshard`.  The
+    collective structure is pinned in ``tests/dist_worker.py``.
+    """
+    import jax
+
+    step = jax.jit(op.matvec_fn(t_active=1))
+
+    def matvec(v):
+        return op.unshard(step(op.shard_vector(np.asarray(v)[:, None])))[:, 0]
+
+    return matvec
+
+
+def resolve_bounds(a, cfg, *, matvec=None) -> tuple[float, float]:
     """The Chebyshev interval: explicit ``eig_bounds`` or the power-iteration
     estimate with ``λmin = λmax / eig_ratio``."""
     if cfg.eig_bounds is not None:
         return cfg.eig_bounds
-    lmax = estimate_lambda_max(a, iters=cfg.power_iters)
+    lmax = estimate_lambda_max(a, iters=cfg.power_iters, matvec=matvec)
     return lmax / cfg.eig_ratio, lmax
 
 

@@ -1,0 +1,30 @@
+"""ECG-as-a-service: operator registry, warm-start cache, request batching.
+
+The serving layer for the many-clients / few-operators regime — see
+:mod:`repro.serve.server` for the model and ``docs/serve.md`` for the
+lifecycle walkthrough.
+
+    from repro.serve import ECGServer, ServeConfig
+"""
+
+from repro.serve.batching import RequestQueue, ServeOverloaded, Ticket, payload_key
+from repro.serve.cache import WarmStartCache, config_digest, mesh_tag
+from repro.serve.config import ServeConfig
+from repro.serve.fingerprint import fingerprint_csr, operator_nbytes
+from repro.serve.registry import OperatorRegistry
+from repro.serve.server import ECGServer
+
+__all__ = [
+    "ECGServer",
+    "OperatorRegistry",
+    "RequestQueue",
+    "ServeConfig",
+    "ServeOverloaded",
+    "Ticket",
+    "WarmStartCache",
+    "config_digest",
+    "fingerprint_csr",
+    "mesh_tag",
+    "operator_nbytes",
+    "payload_key",
+]

@@ -1,0 +1,187 @@
+"""Request queue + batching policy: coalesce single-RHS traffic per operator.
+
+Every serving request is one ``(operator, b)`` pair, and every registered
+session is a compiled **(n, t) block** program — the enlargement already
+*is* the batch.  The queue's job is therefore not to pack columns (mixing
+requests into one splitting would entangle their Gram matrices and break
+per-request bit-identity) but to:
+
+* group pending requests by operator fingerprint, so consecutive solves
+  reuse one compiled program with zero retraces (each request's RHS is
+  split to the session's compiled width ``t`` — no shape ever changes);
+* deduplicate identical ``(operator, b, x0)`` payloads — concurrent
+  clients asking for the same solve share one result, bit-identical by
+  construction;
+* dispatch each group through ``ECGSolver.solve_many`` — the handle
+  enqueues every solve on the device before the first host sync, so the
+  host-side finalize of request *i* overlaps the device compute of
+  request *i+1*;
+* apply backpressure: a bounded pending queue that rejects with the typed
+  :class:`ServeOverloaded` instead of growing without bound.
+
+Batches close on three triggers: a per-operator group reaching
+``max_batch`` distinct payloads (checked at ``submit``), the oldest
+pending request aging past ``max_wait_s`` (checked at ``submit``;
+disabled at the default ``0``), or an explicit ``flush()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+
+import numpy as np
+
+
+class ServeOverloaded(RuntimeError):
+    """Raised by ``submit`` when the pending queue is at ``max_pending``.
+
+    The typed rejection is the backpressure contract: a client sees it
+    *before* any device work is enqueued and can retry after a drain —
+    nothing about the queue or the registry changed.
+    """
+
+
+def payload_key(fingerprint: str, b, x0=None) -> str:
+    """Dedup key: operator fingerprint + exact RHS/x0 bytes."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(fingerprint.encode())
+    b = np.asarray(b)
+    h.update(b.dtype.str.encode())
+    h.update(np.ascontiguousarray(b).tobytes())
+    if x0 is not None:
+        x0 = np.asarray(x0)
+        h.update(x0.dtype.str.encode())
+        h.update(np.ascontiguousarray(x0).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One submitted request and (after dispatch) its outcome.
+
+    ``result`` is the request's own
+    :class:`~repro.core.cg.SolveResult` — convergence, iteration count,
+    and residual history are per-request even when the solve was shared
+    (``deduped``) or dispatched in a group (``batch_id``/``batch_size``).
+    """
+
+    request_id: int
+    fingerprint: str
+    b: np.ndarray
+    x0: np.ndarray | None
+    key: str
+    submitted_s: float
+    solver: object = dataclasses.field(repr=False, default=None)
+    result: object = None
+    batch_id: int | None = None
+    batch_size: int = 0
+    deduped: bool = False
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class RequestQueue:
+    """Bounded pending queue with the grouping/dedup/flush policy."""
+
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.0,
+                 max_pending: int = 256, dedup: bool = True):
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.max_pending = max_pending
+        self.dedup = dedup
+        self.pending: list[Ticket] = []
+        self.submitted = 0
+        self.rejected = 0
+        self.batches = 0
+        self.batch_sizes: list[int] = []
+        self.dedup_shared = 0
+        self.completed = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, fingerprint: str, b, x0=None, solver=None) -> Ticket:
+        if len(self.pending) >= self.max_pending:
+            self.rejected += 1
+            raise ServeOverloaded(
+                f"{len(self.pending)} requests pending (max_pending="
+                f"{self.max_pending}); flush or retry after a drain"
+            )
+        ticket = Ticket(
+            request_id=self.submitted,
+            fingerprint=fingerprint,
+            b=np.asarray(b),
+            x0=None if x0 is None else np.asarray(x0),
+            key=payload_key(fingerprint, b, x0),
+            submitted_s=time.monotonic(),
+            solver=solver,
+        )
+        self.pending.append(ticket)
+        self.submitted += 1
+        return ticket
+
+    def due(self) -> bool:
+        """A batch-closing trigger fired: some operator group holds
+        ``max_batch`` distinct payloads, or the oldest request aged out."""
+        if not self.pending:
+            return False
+        if (
+            self.max_wait_s > 0
+            and time.monotonic() - self.pending[0].submitted_s >= self.max_wait_s
+        ):
+            return True
+        distinct: dict[str, set] = {}
+        for tk in self.pending:
+            keys = distinct.setdefault(tk.fingerprint, set())
+            keys.add(tk.key if self.dedup else tk.request_id)
+            if len(keys) >= self.max_batch:
+                return True
+        return False
+
+    # ----------------------------------------------------------- dispatch
+    def drain(self) -> list[Ticket]:
+        """Dispatch every pending request; returns them in submit order.
+
+        Requests are grouped by operator (one compiled program per group),
+        deduplicated, chunked to ``max_batch``, and pushed through
+        ``solve_many``.  Results are split back out per ticket.
+        """
+        drained, self.pending = self.pending, []
+        groups: OrderedDict[str, OrderedDict[str, list[Ticket]]] = OrderedDict()
+        for tk in drained:
+            per_op = groups.setdefault(tk.fingerprint, OrderedDict())
+            key = tk.key if self.dedup else f"req{tk.request_id}"
+            per_op.setdefault(key, []).append(tk)
+        for per_op in groups.values():
+            unique = list(per_op.values())
+            for lo in range(0, len(unique), self.max_batch):
+                chunk = unique[lo:lo + self.max_batch]
+                leads = [tickets[0] for tickets in chunk]
+                solver = leads[0].solver
+                results = solver.solve_many(
+                    [tk.b for tk in leads], [tk.x0 for tk in leads]
+                )
+                batch_id = self.batches
+                self.batches += 1
+                self.batch_sizes.append(len(leads))
+                for tickets, res in zip(chunk, results):
+                    for i, tk in enumerate(tickets):
+                        tk.result = res
+                        tk.batch_id = batch_id
+                        tk.batch_size = len(leads)
+                        tk.deduped = i > 0
+                        self.completed += 1
+                    self.dedup_shared += len(tickets) - 1
+        return drained
+
+    # -------------------------------------------------------------- state
+    def stats(self) -> dict:
+        return dict(
+            submitted=self.submitted, completed=self.completed,
+            pending=len(self.pending), rejected=self.rejected,
+            batches=self.batches, batch_sizes=list(self.batch_sizes),
+            dedup_shared=self.dedup_shared,
+        )

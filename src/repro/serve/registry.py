@@ -1,0 +1,155 @@
+"""Operator registry: build each ECGSolver session exactly once.
+
+The registry is the serving layer's answer to the paper's §4 premise —
+setup cost (partitioning, exchange planning, tuning, compilation) is paid
+once per *operator*, then amortized across every request that names it.
+Operators are keyed by content fingerprint
+(:func:`~repro.serve.fingerprint_csr`), so clients never hold handles:
+re-sending the same CSR (even with rows assembled in a different entry
+order) lands on the already-built, already-compiled session.
+
+Eviction is LRU under a byte budget counted in CSR bytes
+(:func:`~repro.serve.operator_nbytes`); the most recently used entry
+always survives, even when it alone exceeds the budget — a server must
+never evict the session it is about to solve with.
+
+Every build consults the :class:`~repro.serve.cache.WarmStartCache` (when
+configured): a hit feeds the persisted ``TunedConfig``/``TSelection``
+back through ``SolverConfig.replace(tuned=..., select=...)``, so the
+rebuilt session skips its convergence probes and tuner evaluation — a
+restarted server re-tunes **zero** operators (gated in
+``benchmarks/serve_bench.py``); a miss stores this build's outcome for
+the next restart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+
+from repro.serve.cache import WarmStartCache, config_digest, mesh_tag
+from repro.serve.config import ServeConfig
+from repro.serve.fingerprint import fingerprint_csr, operator_nbytes
+
+
+@dataclasses.dataclass
+class _Entry:
+    solver: object
+    nbytes: int
+
+
+class OperatorRegistry:
+    """Fingerprint-keyed LRU of built :class:`~repro.solver.ECGSolver`
+    sessions (see module docstring).
+
+    Counters: ``hits`` / ``misses`` (lookups vs builds), ``evictions``,
+    and per-build records ``build_records`` — dicts with the fingerprint,
+    whether the warm-start cache answered (``warm``), and the build wall
+    time (``build_s``, the cold-vs-warm latency the benchmark reports).
+    """
+
+    def __init__(self, config: ServeConfig | None = None, mesh=None):
+        self.config = ServeConfig.coerce(config)
+        self.mesh = mesh
+        self._entries: OrderedDict[str, _Entry] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.build_records: list[dict] = []
+        self._cache = (
+            WarmStartCache(self.config.cache_dir)
+            if self.config.cache_dir is not None else None
+        )
+        self._cfg_digest = config_digest(self.config.solver)
+        self._mesh_tag = mesh_tag(mesh)
+
+    # ------------------------------------------------------------- lookup
+    def fingerprint(self, a) -> str:
+        return fingerprint_csr(a)
+
+    def get(self, a, fingerprint: str | None = None):
+        """Return ``(fingerprint, solver)`` for operator ``a``, building
+        (and possibly evicting) on a miss."""
+        key = fingerprint if fingerprint is not None else fingerprint_csr(a)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return key, entry.solver
+        self.misses += 1
+        solver, warm, build_s = self._build(a, key)
+        self._entries[key] = _Entry(solver=solver, nbytes=operator_nbytes(a))
+        self.build_records.append(dict(
+            fingerprint=key, warm=warm, build_s=build_s,
+            n=int(a.shape[0]), t=int(solver.t),
+        ))
+        self._evict()
+        return key, solver
+
+    # ------------------------------------------------------------- builds
+    def _build(self, a, key: str):
+        from repro.solver import ECGSolver
+
+        cfg = self.config.solver
+        warm = False
+        if self._cache is not None:
+            warm, tuned, select = self._cache.load(
+                key, self._cfg_digest, self._mesh_tag
+            )
+            overrides = {}
+            if tuned is not None:
+                overrides["tuned"] = tuned
+            if select is not None:
+                overrides["select"] = select
+            if overrides:
+                cfg = cfg.replace(**overrides)
+        t0 = time.perf_counter()
+        solver = ECGSolver.build(a, self.mesh, cfg)
+        build_s = time.perf_counter() - t0
+        if self._cache is not None and not warm:
+            self._cache.store(
+                key, self._cfg_digest, self._mesh_tag,
+                solver.tuned, solver.selection,
+            )
+        return solver, warm, build_s
+
+    # ----------------------------------------------------------- eviction
+    def _evict(self):
+        budget = self.config.registry_bytes
+        while len(self._entries) > 1 and self.total_bytes > budget:
+            self._entries.popitem(last=False)  # oldest-used first
+            self.evictions += 1
+
+    # -------------------------------------------------------------- state
+    @property
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, fingerprint: str) -> bool:
+        return fingerprint in self._entries
+
+    def fingerprints(self) -> list[str]:
+        """Resident fingerprints, least- to most-recently used."""
+        return list(self._entries)
+
+    def stats(self) -> dict:
+        """JSON-safe counter snapshot (composes the per-session
+        :class:`~repro.solver.handle.SolverStats` of every resident
+        solver)."""
+        return dict(
+            hits=self.hits, misses=self.misses, evictions=self.evictions,
+            resident=len(self._entries), resident_bytes=self.total_bytes,
+            builds=[dict(r) for r in self.build_records],
+            warm_builds=sum(1 for r in self.build_records if r["warm"]),
+            cold_builds=sum(1 for r in self.build_records if not r["warm"]),
+            solver_traces={
+                f: e.solver.stats.traces for f, e in self._entries.items()
+            },
+            solver_solves={
+                f: e.solver.stats.solves for f, e in self._entries.items()
+            },
+        )

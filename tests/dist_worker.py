@@ -703,6 +703,49 @@ def check_preconditioned_solver():
     )
 
 
+def check_chebyshev_lambda_max_p2p():
+    """The Chebyshev λmax power iteration runs through the width-1 SpMBV
+    sub-plan, never a densified or host-looped operator:
+
+    * the lowered power-step program carries ZERO all-reduces (the Rayleigh
+      quotient and norms reduce host-side after unshard) and exactly the
+      width-1 plan's collective-permutes — i.e. the estimate adds only p2p
+      exchange, the same kind (and count) of collective as one SpMBV sweep;
+    * the distributed estimate agrees with the sequential one (identical
+      deterministic start vector, same iteration count — only SpMBV
+      summation order differs);
+    * a col_split > 1 plan re-slices to width 1 through its rebuild closure
+      (the path a nodal-optimal operator takes at build time).
+    """
+    from repro.precondition.chebyshev import (
+        distributed_power_matvec,
+        estimate_lambda_max,
+    )
+
+    mesh = jax.make_mesh((2, 4), ("node", "proc"))
+    a = dg_laplace_2d((8, 6), block=4)
+    lam_seq = estimate_lambda_max(a)
+    for strategy, col_split in (("2step", 1), ("optimal", 2)):
+        op = make_distributed_spmbv(
+            a, mesh, strategy, t=4, machine=BLUE_WATERS, col_split=col_split
+        )
+        plan1 = op.plan.at_width(1)
+        n_perm = sum(1 for s in plan1.steps if s.offset)
+        sds = jax.ShapeDtypeStruct((op.n_padded, 1), jnp.float64)
+        txt = jax.jit(op.matvec_fn(t_active=1)).lower(sds).compile().as_text()
+        n_ar = txt.count(" all-reduce(")
+        n_cp = txt.count(" collective-permute(") + txt.count(
+            " collective-permute-start(")
+        assert n_ar == 0, (strategy, "power step must issue no all-reduce", n_ar)
+        assert n_cp == n_perm, (strategy, n_cp, n_perm)
+        lam_dist = estimate_lambda_max(a, matvec=distributed_power_matvec(op))
+        assert abs(lam_dist - lam_seq) <= 1e-9 * abs(lam_seq), (
+            strategy, lam_dist, lam_seq,
+        )
+    print(f"chebyshev lambda-max p2p OK (0 all-reduce, plan-exact permutes, "
+          f"lmax={lam_seq:.6f} sequential == distributed)")
+
+
 if __name__ == "__main__":
     assert len(jax.devices()) == 8
     check_spmbv_strategies()
@@ -718,4 +761,5 @@ if __name__ == "__main__":
     check_method_collective_structure()
     check_method_segmented_resume()
     check_rank_methods_structural()
+    check_chebyshev_lambda_max_p2p()
     print("ALL DISTRIBUTED CHECKS PASSED")

@@ -1,0 +1,389 @@
+"""repro.serve: fingerprinting, registry LRU, warm-start cache, batching.
+
+The serving layer's core contract is *transparency*: a request dispatched
+through the server — grouped, deduplicated, pipelined — must return
+exactly what a solo ``ECGSolver.solve`` of the same ``(A, b)`` would
+(bit-identical solution, iteration count, convergence flag).  Everything
+else here pins the bookkeeping that makes the layer worth having:
+content-stable fingerprints, LRU eviction under a byte budget, the
+poisoned-cache fallback, zero retraces across a trace, and the typed
+backpressure rejection.
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.serve import (
+    ECGServer,
+    OperatorRegistry,
+    ServeConfig,
+    ServeOverloaded,
+    WarmStartCache,
+    config_digest,
+    fingerprint_csr,
+    mesh_tag,
+    operator_nbytes,
+)
+from repro.solver import ECGSolver, SolverConfig
+from repro.sparse import aniso_laplace_2d, dg_laplace_2d, fd_laplace_2d
+
+
+@pytest.fixture(scope="module")
+def operators():
+    return [fd_laplace_2d(12), aniso_laplace_2d(10, eps=0.01),
+            dg_laplace_2d((4, 3), block=4)]
+
+
+def _reorder_rows(a):
+    """Same matrix, each row's entries stored in reversed order."""
+    indptr = np.asarray(a.indptr)
+    indices = np.asarray(a.indices).copy()
+    data = np.asarray(a.data).copy()
+    for i in range(a.shape[0]):
+        lo, hi = indptr[i], indptr[i + 1]
+        indices[lo:hi] = indices[lo:hi][::-1]
+        data[lo:hi] = data[lo:hi][::-1]
+    return dataclasses.replace(a, indices=indices, data=data)
+
+
+# ---------------------------------------------------------------- fingerprint
+class TestFingerprint:
+    def test_stable_under_within_row_reorder(self, operators):
+        a = operators[0]
+        assert fingerprint_csr(a) == fingerprint_csr(_reorder_rows(a))
+
+    def test_value_perturbation_changes_key(self, operators):
+        a = operators[0]
+        data = np.asarray(a.data).copy()
+        data[7] += 1e-13
+        assert fingerprint_csr(a) != fingerprint_csr(
+            dataclasses.replace(a, data=data)
+        )
+
+    def test_distinct_operators_distinct_keys(self, operators):
+        keys = {fingerprint_csr(a) for a in operators}
+        assert len(keys) == len(operators)
+
+    def test_deterministic_across_calls(self, operators):
+        assert fingerprint_csr(operators[1]) == fingerprint_csr(operators[1])
+
+    def test_operator_nbytes_counts_csr_arrays(self, operators):
+        a = operators[0]
+        expect = sum(
+            np.asarray(x).nbytes for x in (a.indptr, a.indices, a.data)
+        )
+        assert operator_nbytes(a) == expect
+
+
+# ------------------------------------------------------------------- registry
+class TestRegistryLRU:
+    def _registry(self, budget_ops, operators):
+        """Budget sized to hold ``budget_ops`` of the test operators."""
+        nbytes = max(operator_nbytes(a) for a in operators)
+        return OperatorRegistry(ServeConfig(
+            solver=SolverConfig(t=2, max_iters=50),
+            registry_bytes=budget_ops * nbytes,
+        ))
+
+    def test_hit_returns_same_session(self, operators):
+        reg = self._registry(4, operators)
+        key1, s1 = reg.get(operators[0])
+        key2, s2 = reg.get(operators[0])
+        assert key1 == key2 and s1 is s2
+        assert (reg.hits, reg.misses) == (1, 1)
+
+    def test_eviction_is_lru_order(self, operators):
+        reg = self._registry(2, operators)
+        keys = [reg.get(a)[0] for a in operators]
+        # third insert overflows the 2-operator budget: oldest key evicted
+        assert keys[0] not in reg
+        assert keys[1] in reg and keys[2] in reg
+        assert reg.evictions == 1
+
+    def test_use_refreshes_lru_position(self, operators):
+        reg = self._registry(2, operators)
+        k0, _ = reg.get(operators[0])
+        k1, _ = reg.get(operators[1])
+        reg.get(operators[0])  # touch: k1 becomes the LRU victim
+        k2, _ = reg.get(operators[2])
+        assert k1 not in reg
+        assert k0 in reg and k2 in reg
+
+    def test_newest_survives_even_over_budget(self, operators):
+        nbytes = operator_nbytes(operators[0])
+        reg = OperatorRegistry(ServeConfig(
+            solver=SolverConfig(t=2, max_iters=50),
+            registry_bytes=max(nbytes // 2, 1),  # below one operator
+        ))
+        key, solver = reg.get(operators[0])
+        assert key in reg and len(reg) == 1
+        # an eviction pass must never remove the session about to solve
+        _, again = reg.get(operators[0])
+        assert again is solver
+
+
+# ------------------------------------------------------------ warm-start cache
+class TestWarmStartCache:
+    CFG = dict(t="auto", tol=1e-8, max_iters=200)
+
+    def test_restart_skips_probes(self, operators, tmp_path):
+        a = operators[1]
+        serve_cfg = ServeConfig(
+            solver=SolverConfig(**self.CFG), cache_dir=str(tmp_path)
+        )
+        cold = OperatorRegistry(serve_cfg)
+        _, s_cold = cold.get(a)
+        assert cold.stats()["cold_builds"] == 1
+        warm = OperatorRegistry(serve_cfg)  # simulated restart
+        _, s_warm = warm.get(a)
+        st = warm.stats()
+        assert st["cold_builds"] == 0 and st["warm_builds"] == 1
+        # the warm session resolved the same t without re-probing
+        assert s_warm.t == s_cold.t
+
+    def test_roundtrip_preserves_solution(self, operators, tmp_path):
+        a = operators[1]
+        b = np.random.default_rng(3).standard_normal(a.shape[0])
+        serve_cfg = ServeConfig(
+            solver=SolverConfig(**self.CFG), cache_dir=str(tmp_path)
+        )
+        res_cold = OperatorRegistry(serve_cfg).get(a)[1].solve(b)
+        res_warm = OperatorRegistry(serve_cfg).get(a)[1].solve(b)
+        assert np.array_equal(np.asarray(res_cold.x), np.asarray(res_warm.x))
+        assert res_cold.n_iters == res_warm.n_iters
+
+    def test_poisoned_entry_falls_back_cold(self, operators, tmp_path):
+        a = operators[1]
+        serve_cfg = ServeConfig(
+            solver=SolverConfig(**self.CFG), cache_dir=str(tmp_path)
+        )
+        OperatorRegistry(serve_cfg).get(a)
+        entries = os.listdir(tmp_path)
+        assert len(entries) == 1
+        path = tmp_path / entries[0]
+        path.write_text("{not json")
+        with pytest.warns(UserWarning, match="unreadable"):
+            reg = OperatorRegistry(serve_cfg)
+            reg.get(a)
+        assert reg.stats()["cold_builds"] == 1  # fell back, did not crash
+        # the cold rebuild overwrote the poisoned entry
+        json.loads(path.read_text())
+
+    def test_unknown_schema_is_a_miss(self, operators, tmp_path):
+        a = operators[1]
+        serve_cfg = ServeConfig(
+            solver=SolverConfig(**self.CFG), cache_dir=str(tmp_path)
+        )
+        OperatorRegistry(serve_cfg).get(a)
+        path = tmp_path / os.listdir(tmp_path)[0]
+        d = json.loads(path.read_text())
+        d["schema"] = 99
+        path.write_text(json.dumps(d))
+        with pytest.warns(UserWarning, match="unreadable"):
+            reg = OperatorRegistry(serve_cfg)
+            reg.get(a)
+        assert reg.stats()["cold_builds"] == 1
+
+    def test_key_separates_configs_and_meshes(self):
+        c1 = config_digest(SolverConfig(t=4))
+        c2 = config_digest(SolverConfig(t=4, tol=1e-10))
+        assert c1 != c2
+        assert mesh_tag(None) == "seq"
+        cache = WarmStartCache.__new__(WarmStartCache)
+        cache.root = "/tmp"
+        p1 = cache.path("f" * 32, c1, "seq")
+        p2 = cache.path("f" * 32, c2, "seq")
+        assert p1 != p2
+
+    def test_payload_does_not_key_the_lookup(self, operators):
+        # the digest identifies the BASE template: loading a selection into
+        # it must not change which cache entry the next lookup reads
+        base = SolverConfig(**self.CFG)
+        solver = ECGSolver.build(operators[1], config=base)
+        assert solver.selection is not None
+        warmed = base.replace(select=solver.selection)
+        assert config_digest(base) == config_digest(warmed)
+
+
+# ------------------------------------------------------- batching / dispatch
+class TestBatching:
+    def _config(self, **kw):
+        defaults = dict(
+            solver=SolverConfig(t=4, tol=1e-8, adaptive="rankrev"),
+            max_batch=4,
+        )
+        defaults.update(kw)
+        return ServeConfig(**defaults)
+
+    def test_trace_bit_identical_to_solo(self, operators):
+        server = ECGServer(self._config())
+        rng = np.random.default_rng(1)
+        reqs = []
+        for i in range(12):
+            a = operators[i % 3]
+            b = rng.standard_normal(a.shape[0])
+            reqs.append((a, b, server.submit(a, b)))
+        server.flush()
+        solo = [ECGSolver.build(a, config=server.config.solver)
+                for a in operators]
+        for i, (a, b, tk) in enumerate(reqs):
+            ref = solo[i % 3].solve(b)
+            assert np.array_equal(np.asarray(tk.result.x), np.asarray(ref.x))
+            assert tk.result.n_iters == ref.n_iters
+            assert bool(tk.result.converged) == bool(ref.converged)
+
+    def test_localized_rhs_bit_identical(self, operators):
+        # zero outside the first quarter: some split columns are exactly
+        # zero, exercising the rankrev-masked width machinery inside a batch
+        a = operators[0]
+        n = a.shape[0]
+        b = np.zeros(n)
+        b[: n // 4] = np.random.default_rng(2).standard_normal(n // 4)
+        server = ECGServer(self._config())
+        tk = server.submit(a, b)
+        tk2 = server.submit(a, np.random.default_rng(3).standard_normal(n))
+        server.flush()
+        ref = ECGSolver.build(a, config=server.config.solver).solve(b)
+        assert np.array_equal(np.asarray(tk.result.x), np.asarray(ref.x))
+        assert bool(tk.result.converged)
+        assert tk.batch_id == tk2.batch_id  # dispatched as one group
+
+    def test_dedup_shares_one_solve(self, operators):
+        a = operators[0]
+        b = np.random.default_rng(4).standard_normal(a.shape[0])
+        server = ECGServer(self._config())
+        t1 = server.submit(a, b)
+        t2 = server.submit(a, b.copy())  # equal bytes, distinct array
+        server.flush()
+        assert t1.result is t2.result
+        assert not t1.deduped and t2.deduped
+        assert server.queue.dedup_shared == 1
+        solves = sum(server.registry.stats()["solver_solves"].values())
+        assert solves == 1
+
+    def test_dedup_off_solves_separately(self, operators):
+        a = operators[0]
+        b = np.random.default_rng(4).standard_normal(a.shape[0])
+        server = ECGServer(self._config(dedup=False))
+        t1 = server.submit(a, b)
+        t2 = server.submit(a, b.copy())
+        server.flush()
+        assert t1.result is not t2.result
+        assert np.array_equal(np.asarray(t1.result.x), np.asarray(t2.result.x))
+
+    def test_max_batch_dispatches_eagerly(self, operators):
+        a = operators[0]
+        rng = np.random.default_rng(5)
+        server = ECGServer(self._config(max_batch=2))
+        t1 = server.submit(a, rng.standard_normal(a.shape[0]))
+        assert not t1.done
+        t2 = server.submit(a, rng.standard_normal(a.shape[0]))
+        # the second distinct payload reached max_batch: dispatched inline
+        assert t1.done and t2.done
+        assert t1.batch_size == 2
+
+    def test_zero_retraces_across_trace(self, operators):
+        server = ECGServer(self._config())
+        rng = np.random.default_rng(6)
+        for a in operators:  # first solve per operator owns the trace
+            server.solve(a, rng.standard_normal(a.shape[0]))
+        traces0 = dict(server.registry.stats()["solver_traces"])
+        for i in range(9):
+            a = operators[i % 3]
+            server.submit(a, rng.standard_normal(a.shape[0]))
+        server.flush()
+        assert server.registry.stats()["solver_traces"] == traces0
+
+    def test_backpressure_rejects_typed(self, operators):
+        a = operators[0]
+        rng = np.random.default_rng(7)
+        server = ECGServer(self._config(max_pending=2, max_batch=100))
+        server.submit(a, rng.standard_normal(a.shape[0]))
+        server.submit(a, rng.standard_normal(a.shape[0]))
+        with pytest.raises(ServeOverloaded, match="max_pending"):
+            server.submit(a, rng.standard_normal(a.shape[0]))
+        assert server.queue.stats()["rejected"] == 1
+        assert server.queue.stats()["pending"] == 2  # rejection changed nothing
+        server.flush()
+        tk = server.submit(a, rng.standard_normal(a.shape[0]))  # drained: ok
+        server.flush()
+        assert tk.done
+
+    def test_stream_residuals_matches_history(self, operators):
+        a = operators[0]
+        b = np.random.default_rng(8).standard_normal(a.shape[0])
+        server = ECGServer(self._config())
+        tk = server.submit(a, b)
+        hist = list(server.stream_residuals(tk))  # dispatches implicitly
+        res = tk.result
+        assert len(hist) == res.n_iters + 1
+        np.testing.assert_array_equal(
+            hist, np.asarray(res.res_hist)[: res.n_iters + 1]
+        )
+        assert hist[-1] <= server.config.solver.tol * 10
+
+    def test_solution_returns_global_vector(self, operators):
+        from repro.sparse.csr import csr_spmv
+        import jax.numpy as jnp
+
+        a = operators[0]
+        b = np.random.default_rng(9).standard_normal(a.shape[0])
+        server = ECGServer(self._config())
+        x = server.solution(server.submit(a, b))
+        relres = np.linalg.norm(
+            np.asarray(csr_spmv(a, jnp.asarray(x))) - b
+        ) / np.linalg.norm(b)
+        assert relres < 1e-7
+
+
+# ------------------------------------------------------------------- config
+class TestServeConfig:
+    def test_defaults_coerce(self):
+        cfg = ServeConfig.coerce(None)
+        assert cfg.solver.adaptive.policy is not None  # rankrev default
+
+    def test_dict_solver_coerces(self):
+        cfg = ServeConfig(solver=dict(t=2, tol=1e-6))
+        assert cfg.solver.t == 2
+
+    @pytest.mark.parametrize("bad", [
+        dict(registry_bytes=0),
+        dict(max_batch=0),
+        dict(max_wait_s=-1.0),
+        dict(max_pending=0),
+        dict(cache_dir=123),
+    ])
+    def test_validation_errors(self, bad):
+        with pytest.raises(ValueError):
+            ServeConfig(**bad)
+
+    def test_replace_rejects_unknown(self):
+        with pytest.raises(ValueError, match="unknown ServeConfig override"):
+            ServeConfig().replace(no_such_field=1)
+
+    def test_replace_derives(self):
+        cfg = ServeConfig().replace(max_batch=3, dedup=False)
+        assert cfg.max_batch == 3 and cfg.dedup is False
+
+
+# --------------------------------------------------------------- solve_many
+class TestSolveManyPipelined:
+    def test_matches_individual_solves(self, operators):
+        a = operators[2]
+        rng = np.random.default_rng(10)
+        bs = [rng.standard_normal(a.shape[0]) for _ in range(4)]
+        solver = ECGSolver.build(a, config=SolverConfig(t=4, tol=1e-8))
+        many = solver.solve_many(bs)
+        solo = ECGSolver.build(a, config=SolverConfig(t=4, tol=1e-8))
+        for b, res in zip(bs, many):
+            ref = solo.solve(b)
+            assert np.array_equal(np.asarray(res.x), np.asarray(ref.x))
+            assert res.n_iters == ref.n_iters
+        assert solver.stats.solves == 4
+        assert solver.stats.traces == solo.stats.traces  # one program each
