@@ -1,31 +1,43 @@
-"""Serving-layer benchmark: batched throughput, warm-start latency, hit rate.
+"""Serving-layer benchmark: packed/batched/sequential throughput + latency.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--json PATH]
                                                     [--check BASELINE]
+                                                    [--seed N] [--repeats K]
 
-Three phases over the standard synthetic trace (32 single-RHS requests in
+Phases over the standard synthetic trace (32 single-RHS requests in
 shuffled arrival order across 3 operators, 8 duplicate payloads — the
-same generator as ``repro.launch.serve``):
+same generator as ``repro.launch.serve``; ``--seed`` picks the trace):
 
-* **warm-start restart** — a ``t="auto"`` server registers the three
-  operators cold (probes + selection paid, outcome persisted to the
+* **warm-start restart** — a ``t="auto"`` server on the Pallas kernel
+  path registers the three operators cold (probes + selection + the
+  CSR→Block-ELL tile analysis paid, everything persisted to the
   warm-start cache), then a second server on the same cache directory
   simulates the restart: every build must load its tuning from disk
-  (``warm_retunes == 0``) and the summed build latency must drop ≥ 5×.
-* **throughput** — the trace replayed through (a) a *sequential* server
-  (``max_batch=1``, dedup off: one dispatch per request) and (b) a
-  *batched* server (per-operator coalescing + dedup + pipelined
-  dispatch).  Both are compile-warmed first; best-of-``--repeats`` wall
-  time.  Gate: batched requests/s ≥ sequential.
-* **bit-identity** — every batched result must equal a solo
-  ``ECGSolver.solve`` of the same request bit-for-bit.
+  (``warm_retunes == 0``), the summed build latency must drop ≥ 5×, and
+  **zero** builds may re-run the conversion analysis
+  (``warm_conv_analyses == 0`` — the eviction-aware conversion cache).
+* **throughput + latency** — the trace replayed through three policies:
+  *sequential* (``max_batch=1``, dedup off), *batched* (per-operator
+  coalescing + dedup + pipelined dispatch), and *packed*
+  (``packing="width"``: compatible requests coalesce into one enlarged
+  block solve with per-request retirement).  All are compile-warmed
+  first; median-of-``--repeats`` wall time, plus p50/p95/p99 per-request
+  latency per policy.  Gates: batched req/s ≥ sequential; packed req/s ≥
+  1.2× batched (≥ 1× in ``--smoke``, where the operators are too small
+  to amortize); every packed request's measured true relative residual
+  ≤ its tolerance (the packing contract — packed results are *not*
+  bit-identical to solo solves, so the server measures what it promises).
+* **bit-identity** — every *batched* (pack off) result must equal a solo
+  ``ECGSolver.solve`` of the same request bit-for-bit; the packed policy
+  being opt-in means this guarantee is untouched.
 
 ``--check BASELINE`` is the CI gate against the committed
 ``BENCH_serve.json``: the deterministic counters (registry hits/misses,
-dedup shares, batch layout, warm retunes, bit-identity) must match the
-baseline exactly — they are pure functions of the trace, independent of
-machine speed.  Wall-clock numbers are informational except for the two
-ratio gauges above, which compare a run against itself.
+dedup shares, batch layout, pack layout, warm retunes, conversion
+analyses, bit-identity) must match the baseline exactly — they are pure
+functions of the trace, independent of machine speed.  Wall-clock
+numbers are informational except for the ratio gauges above, which
+compare a run against itself.
 
 ``--smoke`` shrinks the operators and skips repeat timing; the trace
 structure (and therefore every checked counter) is identical to the full
@@ -47,8 +59,12 @@ def register_all(server, ops):
 
 
 def replay_sequential(server, ops, trace):
+    tickets = []
     for op_i, b in trace:
-        server.solve(ops[op_i][1], b)
+        tk = server.submit(ops[op_i][1], b)  # max_batch=1 -> dispatches now
+        server.flush()
+        tickets.append(tk)
+    return tickets
 
 
 def replay_batched(server, ops, trace):
@@ -62,8 +78,12 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true", help="small operators for CI")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--dups", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace seed (RHS draws + arrival shuffle)")
     ap.add_argument("--repeats", type=int, default=None,
-                    help="timed replays per mode (best-of); default 3, 1 smoke")
+                    help="timed replays per policy (median-of); "
+                         "default 3, 1 smoke")
+    ap.add_argument("--max-pack-width", type=int, default=16)
     ap.add_argument("--json", default="BENCH_serve.json")
     ap.add_argument("--check", metavar="BASELINE", default=None,
                     help="fail unless deterministic counters match this JSON")
@@ -78,16 +98,20 @@ def main() -> None:
     import numpy as np
 
     from repro.launch.serve import build_trace
-    from repro.serve import ECGServer, ServeConfig
+    from repro.serve import ECGServer, ServeConfig, latency_percentiles
     from repro.solver import ECGSolver, SolverConfig
 
-    ops, trace = build_trace(args.requests, args.dups, scale)
+    ops, trace = build_trace(args.requests, args.dups, scale, seed=args.seed)
     print(f"# serve bench: {len(trace)} requests / {len(ops)} operators "
           f"({', '.join(f'{n}={a.shape[0]}' for n, a in ops)}), "
-          f"{args.dups} dups" + (" [smoke]" if args.smoke else ""))
+          f"{args.dups} dups, seed {args.seed}"
+          + (" [smoke]" if args.smoke else ""))
 
-    # ---- phase 1: cold vs warm builds through the warm-start cache
-    auto_solver = SolverConfig(t="auto", tol=1e-8)
+    # ---- phase 1: cold vs warm builds through the warm-start cache.
+    # kernel="pallas" puts the CSR->Block-ELL conversion on the build path
+    # so the restart also exercises the persisted tile analysis.
+    auto_solver = SolverConfig(t="auto", tol=1e-8,
+                               kernel=dict(backend="pallas"))
     with tempfile.TemporaryDirectory() as cache_dir:
         cfg_auto = ServeConfig(solver=auto_solver, cache_dir=cache_dir)
         cold = register_all(ECGServer(cfg_auto), ops)
@@ -95,32 +119,50 @@ def main() -> None:
     cold_s = sum(r["build_s"] for r in cold["builds"])
     warm_s = sum(r["build_s"] for r in warm["builds"])
     warm_retunes = warm["cold_builds"]
+    warm_conv_analyses = warm["conv_analyzed"]
     build_speedup = cold_s / warm_s if warm_s > 0 else float("inf")
     print(f"builds: cold {cold_s:.3f}s -> warm {warm_s:.3f}s "
-          f"({build_speedup:.1f}x, {warm_retunes} re-tuned after restart)")
+          f"({build_speedup:.1f}x, {warm_retunes} re-tuned, "
+          f"{warm_conv_analyses} conversions re-analyzed after restart)")
 
-    # ---- phase 2: batched vs sequential throughput (fixed-t template)
+    # ---- phase 2: sequential vs batched vs packed throughput + latency
     fixed = ServeConfig(solver=SolverConfig(t=4, tol=1e-8, adaptive="rankrev"))
-    seq_server = ECGServer(fixed.replace(max_batch=1, dedup=False))
-    bat_server = ECGServer(fixed)
-    # compile-warm both (one solve per operator) so timing excludes traces
-    for _, a in ops:
-        b0 = np.zeros(a.shape[0])
-        b0[0] = 1.0
-        seq_server.solve(a, b0)
-        bat_server.solve(a, b0)
-    seq_wall = min(
-        _timed(replay_sequential, seq_server, ops, trace) for _ in range(repeats)
+    packed_cfg = fixed.replace(
+        packing=dict(pack="width", max_pack_width=args.max_pack_width)
     )
-    bat_wall = min(
-        _timed(replay_batched, bat_server, ops, trace) for _ in range(repeats)
+    policies = dict(
+        sequential=(fixed.replace(max_batch=1, dedup=False), replay_sequential),
+        batched=(fixed, replay_batched),
+        packed=(packed_cfg, replay_batched),
     )
-    seq_rps = len(trace) / seq_wall
-    bat_rps = len(trace) / bat_wall
-    print(f"throughput: sequential {seq_rps:.1f} req/s, "
-          f"batched {bat_rps:.1f} req/s ({bat_rps / seq_rps:.2f}x)")
+    walls, lats = {}, {}
+    for name, (cfg, replay) in policies.items():
+        server = ECGServer(cfg)
+        # compile-warm with one untimed replay: the trace itself visits
+        # every (operator, dispatch shape) the policy will trace — packed
+        # programs are keyed by pack layout, so a per-operator solo solve
+        # would leave them cold
+        replay(server, ops, trace)
+        runs = []
+        tickets = None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            tickets = replay(server, ops, trace)
+            runs.append(time.perf_counter() - t0)
+        walls[name] = float(np.median(runs))
+        lats[name] = latency_percentiles(tickets)
+    rps = {name: len(trace) / w for name, w in walls.items()}
+    for name in policies:
+        p = lats[name]
+        print(f"  {name:<10} {rps[name]:7.1f} req/s   "
+              f"p50={p['p50'] * 1e3:7.1f}ms p95={p['p95'] * 1e3:7.1f}ms "
+              f"p99={p['p99'] * 1e3:7.1f}ms")
+    pack_speedup = rps["packed"] / rps["batched"]
+    print(f"throughput: batched/sequential {rps['batched'] / rps['sequential']:.2f}x, "
+          f"packed/batched {pack_speedup:.2f}x")
 
-    # ---- phase 3: bit-identity of the batched trace vs solo solves
+    # ---- phase 3: deterministic counters + contracts on fresh servers
+    # (a) batched bit-identity vs solo solves (the pack="off" guarantee)
     bat_fresh = ECGServer(fixed)
     tickets = replay_batched(bat_fresh, ops, trace)
     solo = {name: ECGSolver.build(a, config=fixed.solver) for name, a in ops}
@@ -142,33 +184,71 @@ def main() -> None:
           f"{q['batches']} batches {q['batch_sizes']}, "
           f"{q['dedup_shared']} dedup-shared")
 
+    # (b) packed relres contract + pack layout
+    pack_fresh = ECGServer(packed_cfg)
+    ptickets = replay_batched(pack_fresh, ops, trace)
+    tol = fixed.solver.tol
+    relres_ok = all(
+        tk.relres is not None and tk.relres <= tk.result.pack["tol"]
+        for tk in ptickets
+    )
+    worst_relres = max(tk.relres for tk in ptickets)
+    pq = pack_fresh.stats()["queue"]
+    pack_groups = [lay["groups"] for lay in pq["pack_layouts"]]
+    pack_widths = [lay["width"] for lay in pq["pack_layouts"]]
+    print(f"packed: {pq['packs']} packs groups={pack_groups}, "
+          f"worst relres {worst_relres:.2e} (tol {tol:.0e}), "
+          f"contract {'OK' if relres_ok else 'VIOLATED'}")
+
+    pct_present = all(
+        np.isfinite([p["p50"], p["p95"], p["p99"]]).all() and p["n"] == len(trace)
+        for p in lats.values()
+    )
+    packed_floor = 1.0 if args.smoke else 1.2
     summary = dict(
         bit_identical=bool(bit_identical),
-        batched_not_slower=bool(bat_rps >= seq_rps),
+        batched_not_slower=bool(rps["batched"] >= rps["sequential"]),
+        packed_speedup=float(pack_speedup),
+        packed_speedup_ok=bool(pack_speedup >= packed_floor),
+        packed_relres_ok=bool(relres_ok),
+        percentiles_present=bool(pct_present),
         warm_speedup_5x=bool(build_speedup >= 5.0),
         warm_retunes=int(warm_retunes),
+        warm_conv_analyses=int(warm_conv_analyses),
     )
     out = dict(
         config=dict(
             requests=len(trace), dups=args.dups, operators={
                 n: int(a.shape[0]) for n, a in ops
-            }, scale=scale, repeats=repeats, smoke=args.smoke,
-            max_batch=fixed.max_batch, t=4, auto_t_for_builds=True,
+            }, scale=scale, seed=args.seed, repeats=repeats, smoke=args.smoke,
+            max_batch=fixed.max_batch, max_pack_width=args.max_pack_width,
+            t=4, auto_t_for_builds=True,
         ),
         builds=dict(
             cold_s=cold_s, warm_s=warm_s, speedup=build_speedup,
             cold=cold["builds"], warm=warm["builds"],
             warm_retunes=int(warm_retunes),
+            warm_conv_analyses=int(warm_conv_analyses),
         ),
-        throughput=dict(
-            sequential_rps=seq_rps, batched_rps=bat_rps,
-            ratio=bat_rps / seq_rps,
-            sequential_wall_s=seq_wall, batched_wall_s=bat_wall,
-        ),
+        throughput={
+            **{f"{name}_rps": rps[name] for name in policies},
+            **{f"{name}_wall_s": walls[name] for name in policies},
+            "batched_over_sequential": rps["batched"] / rps["sequential"],
+            "packed_over_batched": pack_speedup,
+        },
+        latency={name: lats[name] for name in policies},
         batched=dict(
             hits=reg["hits"], misses=reg["misses"], hit_rate=hit_rate,
             batches=q["batches"], batch_sizes=q["batch_sizes"],
             dedup_shared=q["dedup_shared"],
+        ),
+        packed=dict(
+            packs=pq["packs"], pack_groups=pack_groups,
+            pack_widths=pack_widths,
+            batch_sizes=pq["batch_sizes"],
+            dedup_shared=pq["dedup_shared"],
+            worst_relres=float(worst_relres), tol=float(tol),
+            relres_ok=bool(relres_ok),
         ),
         summary=summary,
     )
@@ -183,8 +263,20 @@ def main() -> None:
     if not summary["batched_not_slower"]:
         failures.append(
             f"batched throughput regressed below sequential "
-            f"({bat_rps:.1f} < {seq_rps:.1f} req/s)"
+            f"({rps['batched']:.1f} < {rps['sequential']:.1f} req/s)"
         )
+    if not summary["packed_speedup_ok"]:
+        failures.append(
+            f"packed throughput {pack_speedup:.2f}x batched "
+            f"< required {packed_floor:.1f}x"
+        )
+    if not summary["packed_relres_ok"]:
+        failures.append(
+            f"packed relres contract violated (worst {worst_relres:.2e} "
+            f"> tol {tol:.0e})"
+        )
+    if not summary["percentiles_present"]:
+        failures.append("latency percentiles missing for some policy")
     if not summary["warm_speedup_5x"]:
         failures.append(
             f"warm-start build speedup {build_speedup:.1f}x < 5x"
@@ -192,6 +284,11 @@ def main() -> None:
     if summary["warm_retunes"]:
         failures.append(
             f"{warm_retunes} operator(s) re-tuned after restart (want 0)"
+        )
+    if summary["warm_conv_analyses"]:
+        failures.append(
+            f"{warm_conv_analyses} conversion(s) re-analyzed after restart "
+            f"(want 0)"
         )
     if args.check:
         failures += check_counters(out, args.check)
@@ -204,23 +301,20 @@ def main() -> None:
         sys.exit(1)
 
 
-def _timed(fn, *args):
-    t0 = time.perf_counter()
-    fn(*args)
-    return time.perf_counter() - t0
-
-
 def check_counters(out: dict, baseline_path: str) -> list[str]:
     """Deterministic counters must match the committed baseline exactly."""
     with open(baseline_path) as f:
         base = json.load(f)
     failures = []
     for section, field in (
-        ("config", "requests"), ("config", "dups"),
+        ("config", "requests"), ("config", "dups"), ("config", "seed"),
         ("batched", "hits"), ("batched", "misses"),
         ("batched", "batches"), ("batched", "batch_sizes"),
         ("batched", "dedup_shared"),
-        ("builds", "warm_retunes"),
+        ("packed", "packs"), ("packed", "pack_groups"),
+        ("packed", "pack_widths"), ("packed", "dedup_shared"),
+        ("packed", "relres_ok"),
+        ("builds", "warm_retunes"), ("builds", "warm_conv_analyses"),
         ("summary", "bit_identical"),
     ):
         got, want = out[section][field], base[section][field]

@@ -19,6 +19,7 @@ Entry points: ``ecg_solve(..., adaptive="reduce")``,
 adaptive=...)``, and ``python -m repro.launch.solve --t auto``.
 """
 
+from repro.adaptive.groups import GroupSpec
 from repro.adaptive.rankrev import (
     default_rank_rtol,
     pivoted_cholesky,
@@ -45,6 +46,7 @@ from repro.adaptive.select_t import (
 )
 
 __all__ = [
+    "GroupSpec",
     "default_rank_rtol",
     "pivoted_cholesky",
     "rank_revealing_apply",

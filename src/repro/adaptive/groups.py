@@ -1,0 +1,59 @@
+"""Per-request column groups for packed (multi-RHS) enlarged solves.
+
+Width packing coalesces k compatible right-hand sides into ONE enlarged
+block solve of width ``k·t′``: request j owns the contiguous column slab
+``[j·t′, (j+1)·t′)``.  The per-column residual invariant of the enlarged
+splitting (each R column tracks its own share of its request's residual,
+coupling enters only through the shared search directions) means each
+request's true residual is recoverable per iteration by summing its own
+slab — which is what lets every request converge against its *own*
+tolerance and retire independently.
+
+This is the flexible-ECG license (Moufawad, arXiv:2305.19013): the
+enlargement width may shrink mid-solve as long as retired directions are
+zero-masked, which is exactly the adaptive machinery the solver already
+carries for rank/stagnation drops.  A retired request's R *and* Z slabs
+are zeroed — its X freezes at the retirement iterate (the c = PᵀR rows
+feeding its X columns are zero from then on), its directions leave the
+search space, and the width-compacted exchange stops paying its bytes.
+
+:class:`GroupSpec` is the static (hashable) description the method
+closures and the solver's jit cache key both consume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """Static layout of a packed solve: ``n_groups`` requests × ``t_each``
+    columns, each group converging against its own absolute tolerance.
+
+    Hashable on purpose — it is part of the solver handle's runner/jit
+    cache key, so two packs with the same (k, tolerances) layout reuse one
+    compiled program.
+    """
+
+    t_each: int
+    tols: tuple[float, ...]
+
+    def __post_init__(self):
+        if not isinstance(self.t_each, int) or self.t_each < 1:
+            raise ValueError(f"t_each must be an int >= 1, got {self.t_each!r}")
+        if not self.tols:
+            raise ValueError("a packed solve needs at least one group")
+        tols = tuple(float(t) for t in self.tols)
+        if any(t <= 0 for t in tols):
+            raise ValueError(f"group tolerances must be positive, got {tols}")
+        object.__setattr__(self, "tols", tols)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.tols)
+
+    @property
+    def width(self) -> int:
+        """Total packed enlargement width k·t′."""
+        return self.n_groups * self.t_each

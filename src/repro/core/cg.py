@@ -51,6 +51,13 @@ class SolveResult:
     #                                  from the preconditioned residual).
     #                                  -1 past the recorded end; None when no
     #                                  tracked mechanism was active.
+    pack: dict | None = None         # width-packing telemetry when this
+    #                                  result came out of a packed multi-RHS
+    #                                  solve (repro.serve width packing):
+    #                                  total width, group layout, this
+    #                                  request's group index/tolerance,
+    #                                  retirement iteration, total packed
+    #                                  iterations — None for solo solves
     final_carry: dict | None = dataclasses.field(default=None, repr=False)
     #                                ^ loop carry at exit — the resume handle
     #                                  the segmented solver threads between

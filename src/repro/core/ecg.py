@@ -125,6 +125,8 @@ def make_ecg_runner(
     precond: Callable | None = None,
     gram2p: Callable | None = None,
     precond_reseed: int | None = None,
+    groups: object = None,
+    sqnorm_cols: Callable | None = None,
 ) -> ECGRunner:
     """Build the ECG iteration machinery for one fixed configuration.
 
@@ -147,6 +149,15 @@ def make_ecg_runner(
     reduction ``[PᵀR | APᵀW | AP_oldᵀW]`` (defaulted here sequentially, one
     psum distributed) the preconditioned recurrence needs in place of the
     symmetric ``gram2`` payload.
+
+    ``groups`` (a :class:`~repro.adaptive.GroupSpec`, classic only) turns
+    the runner into a *packed* multi-RHS program: ``t`` is the total width
+    ``n_groups · t_each``, ``init`` takes (n, n_groups) operands, each group
+    converges against its own tolerance and retires independently, and the
+    loop runs while any group is live.  ``sqnorm_cols`` is the per-column
+    squared-norm reduction ``(n, g) -> (g,)`` that replaces the scalar
+    ``sqnorm`` collective in group mode (identity-wrapped local sum by
+    default; one psum of g floats distributed).
     """
     if policy is not None and chol_eps:
         raise ValueError(
@@ -196,6 +207,32 @@ def make_ecg_runner(
     split_fn = split if split is not None else (
         lambda r_, t_: split_residual(r_, t_, mapping)
     )
+    if groups is not None:
+        if spec.name != "classic":
+            raise ValueError(
+                f"packed group solves require method 'classic', got {spec.name!r}"
+            )
+        if groups.width != t:
+            raise ValueError(
+                f"groups describe width {groups.width} "
+                f"({groups.n_groups}×{groups.t_each}) but t={t}"
+            )
+        if policy is None:
+            raise ValueError(
+                "packed group solves require a rank-revealing policy "
+                "(adaptive='rankrev' at minimum): retirement zeroes Z "
+                "columns, so the Gram matrix is structurally singular from "
+                "the first retirement on, and the direction budget is "
+                "enforced through the pivoted factorization's column mask"
+            )
+        if policy.restart:
+            raise ValueError(
+                "packed group solves cannot run a restart policy: the "
+                "re-enlarge rebuilds the splitting from the summed residual, "
+                "which would mix request boundaries"
+            )
+        if sqnorm_cols is None:
+            sqnorm_cols = lambda m: jnp.sum(m * m, axis=0)
     use_mask = a_apply_masked is not None and policy is not None
 
     ctx = MethodContext(
@@ -204,12 +241,18 @@ def make_ecg_runner(
         backend=backend, a_apply=a_apply, a_apply_masked=a_apply_masked,
         split_fn=split_fn, gram1=gram1, gram2=gram2, sqnorm=sqnorm, tail=tail,
         precond=precond, gram2p=gram2p, precond_reseed=precond_reseed,
+        groups=groups, sqnorm_cols=sqnorm_cols,
     )
     spec.validate(ctx)
     init, iterate = spec.build(ctx)
 
     def cond(c):
-        go = (c["rn"] > tol) & (c["k"] < max_iters)
+        if groups is None:
+            go = (c["rn"] > tol) & (c["k"] < max_iters)
+        else:
+            # packed solve: run while ANY request is live — each group's own
+            # tolerance already gated its retirement inside the iteration
+            go = jnp.any(c["grp_live"]) & (c["k"] < max_iters)
         if exit_below_width is not None and use_mask:
             # width-reduction event: hand control back so the caller can
             # re-slice the exchange plan at the shrunken width and resume

@@ -89,6 +89,15 @@ class MethodContext:
     seed).  The s-step scheme reseeds from the residual every block by
     construction and never needs it; pipelined cannot reseed at all (an
     in-loop SpMBV would be needed to rebuild the AZ recurrence).
+
+    ``groups`` (classic only) is a :class:`~repro.adaptive.GroupSpec`
+    describing a *packed* multi-RHS solve: ``t`` becomes the total width
+    ``n_groups · t_each``, ``init`` takes (n, n_groups) operands, and each
+    group converges against its own tolerance and retires (R and Z slabs
+    zeroed) independently.  ``sqnorm_cols`` is the matching per-column
+    squared-norm reduction ``(n, g) -> (g,)`` — it *replaces* the scalar
+    ``sqnorm`` collective in group mode (one psum of g floats instead of
+    one float), so the scheme's collective count is unchanged.
     """
 
     t: int
@@ -110,6 +119,8 @@ class MethodContext:
     precond: Callable | None = None
     gram2p: Callable | None = None
     precond_reseed: int | None = None
+    groups: object | None = None
+    sqnorm_cols: Callable | None = None
 
 
 class MethodSpec:

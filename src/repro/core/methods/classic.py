@@ -17,6 +17,7 @@ equality checks in the test suite).
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.adaptive.rankrev import rank_revealing_apply
 from repro.adaptive.reduce import plateau_update, stagnation_mask
@@ -41,9 +42,59 @@ class ClassicMethod(MethodSpec):
         gram1, gram2, sqnorm, tail = ctx.gram1, ctx.gram2, ctx.sqnorm, ctx.tail
         precond, gram2p = ctx.precond, ctx.gram2p
         reseed = ctx.precond_reseed if precond is not None else None
+        groups, sqnorm_cols = ctx.groups, ctx.sqnorm_cols
         # telemetry: record rank-revealing drops (EV_RECOVERY) and flexible
         # reseeds (EV_RESEED) per iteration whenever either mechanism runs
         track_events = policy is not None or reseed is not None
+
+        def group_retire(big_r, z_new, active, k, carry):
+            """Per-group convergence + retirement (packed multi-RHS solve).
+
+            The per-column residual invariant of the splitting makes group
+            j's true residual the sum of its own column slab; its norm rides
+            ONE psum of g floats (``sqnorm_cols``) that *replaces* the scalar
+            ``sqnorm`` collective — same collective count as a solo solve.
+
+            Retirement has two independent halves, because R columns are
+            group-owned but direction columns are not (the pivoted
+            factorization reorders P/Z columns by pivot magnitude every
+            iteration):
+
+            * the retired group's **R slab** is zeroed — its c = PᵀR rows
+              are zero from now on, so its X freezes at the retirement
+              iterate (exact frozen-at-retirement semantics);
+            * the **direction budget** shrinks to ``t′ · live_groups``: the
+              trailing (smallest-pivot) active directions are dropped — the
+              flexible-ECG width reduction, reusing the same zero-mask
+              mechanics as the rank/stagnation drops — which is what lets
+              the width-compacted exchange stop paying the retired bytes.
+            """
+            g_n, te = groups.n_groups, groups.t_each
+            rsum_g = big_r.reshape(big_r.shape[0], g_n, te).sum(axis=2)
+            grp_sq = sqnorm_cols(rsum_g)  # the iteration's ONE norm psum
+            live_prev = carry["grp_live"]
+            # retired groups carry their retirement-time norm forward
+            grp_rn = jnp.where(live_prev, jnp.sqrt(grp_sq), carry["grp_rn"])
+            tols = jnp.asarray(groups.tols, grp_rn.dtype)
+            newly = live_prev & (grp_rn <= tols)
+            grp_live = live_prev & ~newly
+            grp_iter = jnp.where(newly, k + 1, carry["grp_iter"])
+            live_cols = jnp.repeat(grp_live, te, total_repeat_length=g_n * te)
+            # direction budget: keep the strongest t′·live pivot directions
+            n_live_dirs = te * jnp.sum(grp_live).astype(jnp.int32)
+            dir_act = active & (
+                jnp.cumsum(active.astype(jnp.int32)) <= n_live_dirs
+            )
+            # stacked norm over groups: the guard/history scalar (breakdown
+            # NaNs propagate through it; retired entries are frozen <= tol)
+            rn = jnp.sqrt(jnp.sum(grp_rn * grp_rn))
+            grp = dict(
+                grp_rn=grp_rn, grp_live=grp_live, grp_iter=grp_iter,
+                grp_hist=carry["grp_hist"].at[k + 1].set(grp_rn),
+            )
+            big_r = big_r * live_cols.astype(big_r.dtype)[None, :]
+            z_new = z_new * dir_act.astype(z_new.dtype)[None, :]
+            return big_r, z_new, dir_act, rn, grp
 
         def iterate(carry):
             big_x, big_r, z = carry["X"], carry["R"], carry["Z"]
@@ -107,13 +158,20 @@ class ClassicMethod(MethodSpec):
                 # to know which columns to pack.
                 active = stagnation_mask(c, carry["rn"], active, policy)
                 z_new = z_new * active.astype(z_new.dtype)[None, :]
-            rsum = big_r.sum(axis=1)
-            rn = jnp.sqrt(sqnorm(rsum))
+            if groups is None:
+                rsum = big_r.sum(axis=1)
+                rn = jnp.sqrt(sqnorm(rsum))
+            else:
+                big_r, z_new, active, rn, grp = group_retire(
+                    big_r, z_new, active, k, carry
+                )
             hist = hist.at[k + 1].set(rn)
             out = dict(
                 X=big_x, R=big_r, Z=z_new, P=p, AP=ap, k=k + 1, rn=rn, hist=hist,
                 bd=carry["bd"],
             )
+            if groups is not None:
+                out.update(grp)
             if track_events:
                 out["evhist"] = carry["evhist"].at[k + 1].set(ev)
             if use_mask:
@@ -147,28 +205,72 @@ class ClassicMethod(MethodSpec):
             n = b.shape[0]
             dtype = b.dtype
             zeros_nt = jnp.zeros((n, t), dtype)
-            r0 = b - _apply_vec(a_apply, x0, t)  # initial SpMV (Alg 3 line 1)
-            big_r0 = split_fn(r0, t)
-            # preconditioned start: Z₀ = M⁻¹ T(r₀); R stays the true residual
-            z0 = big_r0 if precond is None else precond(big_r0, jnp.int32(0))
-            rn0 = jnp.sqrt(sqnorm(r0))
+            if groups is None:
+                r0 = b - _apply_vec(a_apply, x0, t)  # initial SpMV (Alg 3 line 1)
+                big_r0 = split_fn(r0, t)
+                # preconditioned start: Z₀ = M⁻¹T(r₀); R stays the true residual
+                z0 = big_r0 if precond is None else precond(big_r0, jnp.int32(0))
+                rn0 = jnp.sqrt(sqnorm(r0))
+                live_cols0 = None
+            else:
+                # packed start: b/x0 are (n, g); group j's initial guess rides
+                # column j·t′ of one full-width SpMBV (one apply for all k
+                # requests), and its residual is split at the per-group width
+                # t′ into its own column slab
+                g_n, te = groups.n_groups, groups.t_each
+                offs = np.arange(g_n) * te
+                x0w = jnp.zeros((n, t), dtype).at[:, offs].set(x0)
+                r0 = b - a_apply(x0w)[:, offs]  # (n, g) per-request residuals
+                big_r0 = jnp.concatenate(
+                    [split_fn(r0[:, j], te) for j in range(g_n)], axis=1
+                )
+                grp_sq0 = sqnorm_cols(r0)
+                grp_rn0 = jnp.sqrt(grp_sq0)
+                tols = jnp.asarray(groups.tols, dtype)
+                # a request already at its tolerance retires at iteration 0
+                grp_live0 = grp_rn0 > tols
+                live_cols0 = jnp.repeat(
+                    grp_live0, te, total_repeat_length=t
+                )
+                colf = live_cols0.astype(dtype)[None, :]
+                big_r0 = big_r0 * colf
+                z0 = (
+                    big_r0 if precond is None
+                    else precond(big_r0, jnp.int32(0)) * colf
+                )
+                rn0 = jnp.sqrt(jnp.sum(grp_rn0 * grp_rn0))
             hist0 = jnp.full((max_iters + 1,), jnp.nan, dtype=dtype).at[0].set(rn0)
             carry = dict(X=zeros_nt, R=big_r0, Z=z0, P=zeros_nt, AP=zeros_nt,
                          k=jnp.int32(0), rn=rn0, hist=hist0,
                          bd=~jnp.isfinite(rn0))
+            if groups is not None:
+                carry.update(
+                    grp_rn=grp_rn0,
+                    grp_live=grp_live0,
+                    grp_iter=jnp.where(grp_live0, jnp.int32(-1), jnp.int32(0)),
+                    grp_hist=jnp.full(
+                        (max_iters + 1, g_n), jnp.nan, dtype=dtype
+                    ).at[0].set(grp_rn0),
+                )
             if policy is not None:
+                w0 = (
+                    jnp.int32(t) if groups is None
+                    else jnp.sum(live_cols0).astype(jnp.int32)
+                )
                 carry.update(
                     best_rn=rn0,
                     since=jnp.int32(0),
                     restarts=jnp.int32(0),
-                    ahist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(t),
+                    ahist=jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(w0),
                 )
             if track_events:
                 carry["evhist"] = (
                     jnp.full((max_iters + 1,), -1, jnp.int32).at[0].set(0)
                 )
             if use_mask:
-                carry["act"] = jnp.ones((t,), bool)
+                carry["act"] = (
+                    jnp.ones((t,), bool) if groups is None else live_cols0
+                )
             return carry
 
         return init, iterate

@@ -12,6 +12,9 @@ from repro.kernels.bsr_spmbv.ops import (
     csr_arrays_to_block_ell,
     count_block_ell_tiles,
     make_block_ell_apply,
+    make_block_ell_apply_from_arrays,
+    block_ell_meta,
+    block_ell_arrays,
 )
 from repro.kernels.fused_gram.ops import fused_gram
 from repro.kernels.block_update.ops import block_update, ecg_tail
@@ -27,6 +30,9 @@ __all__ = [
     "csr_arrays_to_block_ell",
     "count_block_ell_tiles",
     "make_block_ell_apply",
+    "make_block_ell_apply_from_arrays",
+    "block_ell_meta",
+    "block_ell_arrays",
     "fused_gram",
     "block_update",
     "ecg_tail",

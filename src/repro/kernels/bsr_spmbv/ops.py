@@ -100,6 +100,89 @@ def csr_arrays_to_block_ell(
     return blocks, ell_idx
 
 
+def block_ell_meta(a: CSRMatrix, br: int, bc: int) -> dict:
+    """Tile analysis of the CSR -> Block-ELL conversion — JSON-serializable.
+
+    This is the *choice* part of the conversion (which tile grid, how many
+    tile slots per block row, how much zero padding) separated from the
+    *fill* part (scattering nonzeros into the slots): persisting the meta
+    lets a rebuilt handle skip the analysis pass and direct-fill via
+    :func:`csr_arrays_to_block_ell` (the serve layer's eviction-aware warm
+    start).  ``pad_hist[k]`` counts block rows holding exactly k tiles —
+    the padding histogram behind the ``kmax`` waste.
+    """
+    indptr = np.asarray(a.indptr, dtype=np.int64)
+    indices = np.asarray(a.indices, dtype=np.int64)
+    n, m = a.shape
+    n_pad = (n + br - 1) // br * br
+    m_pad = (m + bc - 1) // bc * bc
+    nbr, nbc = n_pad // br, m_pad // bc
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    tiles = np.unique((rows // br) * nbc + indices // bc)
+    per_row = np.bincount((tiles // nbc).astype(np.int64), minlength=nbr)
+    kmax = int(per_row.max()) if len(tiles) else 0
+    return dict(
+        br=int(br), bc=int(bc), shape=[int(n), int(m)], nnz=int(a.nnz),
+        nbr=int(nbr), nbc=int(nbc), kmax=kmax,
+        n_pad=int(n_pad), m_pad=int(m_pad),
+        pad_hist=np.bincount(per_row, minlength=kmax + 1).tolist(),
+    )
+
+
+def _meta_matches(meta: dict | None, a: CSRMatrix, br: int, bc: int) -> bool:
+    if not isinstance(meta, dict):
+        return False
+    try:
+        return (
+            int(meta["br"]) == br
+            and int(meta["bc"]) == bc
+            and [int(s) for s in meta["shape"]] == [int(s) for s in a.shape]
+            and int(meta["nnz"]) == a.nnz
+            and int(meta["kmax"]) >= 0
+        )
+    except (KeyError, TypeError, ValueError):
+        return False
+
+
+def block_ell_arrays(a: CSRMatrix, br: int, bc: int, meta: dict | None = None):
+    """CSR -> Block-ELL device arrays, optionally skipping the analysis.
+
+    Returns ``(blocks, indices, m_pad, meta, analyzed)``.  With a valid
+    ``meta`` (from :func:`block_ell_meta` of the *same* matrix/tile) the
+    tile-counting analysis is skipped and the nonzeros are direct-filled
+    into the known (nbr, kmax) layout (``analyzed=False``); a stale or
+    missing meta triggers a fresh analysis (``analyzed=True``), never an
+    error.  The produced layout is bit-identical to the historical
+    CSR -> BSR -> Block-ELL path (both fill tiles in ascending block-column
+    order per block row).
+    """
+    analyzed = not _meta_matches(meta, a, br, bc)
+    if analyzed:
+        meta = block_ell_meta(a, br, bc)
+    n, m = a.shape
+    blocks, indices = csr_arrays_to_block_ell(
+        a.indptr, a.indices, a.data, n, m, br, bc,
+        nbr=int(meta["nbr"]), kmax=int(meta["kmax"]),
+    )
+    return (
+        jnp.asarray(blocks), jnp.asarray(indices), int(meta["m_pad"]),
+        meta, analyzed,
+    )
+
+
+def make_block_ell_apply_from_arrays(blocks, indices, m_pad: int, n: int,
+                                     use_pallas: bool | None = None):
+    """``apply(V: (n, t)) -> (n, t)`` over precomputed Block-ELL arrays —
+    the closure :func:`make_block_ell_apply` builds, minus the conversion."""
+
+    def apply(v):
+        vp = jnp.pad(v, ((0, m_pad - v.shape[0]), (0, 0)))
+        w = bsr_spmbv(blocks, indices, vp, use_pallas=use_pallas)
+        return w[:n]
+
+    return apply
+
+
 def make_block_ell_apply(
     a: CSRMatrix, block: int | tuple[int, int] = 8, use_pallas: bool | None = None
 ):

@@ -1,7 +1,8 @@
 """ECG serving driver: replay a synthetic request trace through ECGServer.
 
     PYTHONPATH=src python -m repro.launch.serve [--requests 32] [--t 4] \
-        [--max-batch 8] [--cache-dir DIR] [--devices 8 --ppn 4] [--dups 8]
+        [--max-batch 8] [--cache-dir DIR] [--devices 8 --ppn 4] [--dups 8] \
+        [--pack width --max-pack-width 16 --max-wait-s 0.05]
 
 The driver synthesizes a single-RHS request trace over three operators
 (2D Laplacian, anisotropic Laplacian, DG block operator) in shuffled
@@ -18,6 +19,12 @@ cross-request dedup case), and replays it through one
 
 Run it twice with the same ``--cache-dir`` to see the warm-start restart:
 the second run's builds skip tuning/probes entirely.
+
+``--pack width`` turns on cross-request width packing: compatible
+requests coalesce into one enlarged block solve with per-request
+retirement (see ``docs/serve.md``).  The summary then also prints the
+pack layouts and each request's measured true relative residual, plus
+p50/p95/p99 per-request latency for whichever policy ran.
 """
 
 from __future__ import annotations
@@ -71,6 +78,16 @@ def main():
     ap.add_argument("--devices", type=int, default=0,
                     help="force host devices for a distributed server (re-execs)")
     ap.add_argument("--ppn", type=int, default=4)
+    ap.add_argument("--pack", choices=["off", "width"], default="off",
+                    help="width-packing policy (off = dispatch batching)")
+    ap.add_argument("--max-pack-width", type=int, default=16,
+                    help="total packed column budget (requests per pack = "
+                         "max-pack-width // t)")
+    ap.add_argument("--max-wait-s", type=float, default=0.0,
+                    help="packing deadline: close a partial pack once the "
+                         "oldest pending request is this old (0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace seed (RHS draws + arrival shuffle)")
     args = ap.parse_args()
     if args.dups >= args.requests:
         ap.error(f"--dups must be < --requests, got {args.dups} >= {args.requests}")
@@ -83,7 +100,7 @@ def main():
 
     jax.config.update("jax_enable_x64", True)
 
-    from repro.serve import ECGServer, ServeConfig
+    from repro.serve import ECGServer, ServeConfig, latency_percentiles
     from repro.solver import SolverConfig
 
     t = "auto" if args.t == "auto" else int(args.t)
@@ -98,11 +115,17 @@ def main():
             max_batch=args.max_batch,
             max_pending=args.max_pending,
             cache_dir=args.cache_dir,
+            packing=dict(
+                pack=args.pack,
+                max_pack_width=args.max_pack_width,
+                max_wait_s=args.max_wait_s,
+            ),
         ),
         mesh=mesh,
     )
 
-    ops, trace = build_trace(args.requests, args.dups, args.scale)
+    ops, trace = build_trace(args.requests, args.dups, args.scale,
+                             seed=args.seed)
     names = [name for name, _ in ops]
     print(f"# trace: {len(trace)} requests over {len(ops)} operators "
           f"({', '.join(f'{n}={a.shape[0]} rows' for n, a in ops)}), "
@@ -117,14 +140,18 @@ def main():
     for op_i, tk in tickets:
         res = tk.result
         tag = " dedup" if tk.deduped else ""
-        print(f"  req {tk.request_id:>3} {names[op_i]:<8} "
-              f"batch {tk.batch_id:>2} (x{tk.batch_size}) "
+        if tk.pack_id is not None:
+            where = f"pack  {tk.pack_id:>2} (w{tk.pack_width} g{tk.group_index})"
+            tag += f" relres={tk.relres:.1e}"
+        else:
+            where = f"batch {tk.batch_id:>2} (x{tk.batch_size})"
+        print(f"  req {tk.request_id:>3} {names[op_i]:<8} {where} "
               f"iters={res.n_iters:>4} conv={bool(res.converged)}{tag}")
 
     st = server.stats()
     reg, q = st["registry"], st["queue"]
     print(f"\n{len(trace)} requests in {wall:.3f}s "
-          f"({len(trace) / wall:.1f} req/s)")
+          f"({len(trace) / wall:.1f} req/s, policy={args.pack})")
     print(f"registry: {reg['hits']} hits / {reg['misses']} misses "
           f"({reg['evictions']} evictions, {reg['resident']} resident)")
     for rec in reg["builds"]:
@@ -133,6 +160,16 @@ def main():
               f"{kind} {rec['build_s']:.3f}s")
     print(f"batching: {q['batches']} batches {q['batch_sizes']}, "
           f"{q['dedup_shared']} requests served by dedup")
+    if q["packs"]:
+        for lay in q["pack_layouts"]:
+            segs = "".join(
+                f" {w}x{it}" for w, it in lay["comm_segments"]
+            ) or " (unsegmented)"
+            print(f"  pack {lay['pack_id']:>2}: width {lay['width']} = "
+                  f"{lay['groups']} x t{lay['t_each']}, exchange{segs}")
+    lat = latency_percentiles([tk for _, tk in tickets])
+    print(f"latency: p50={lat['p50'] * 1e3:.1f}ms p95={lat['p95'] * 1e3:.1f}ms "
+          f"p99={lat['p99'] * 1e3:.1f}ms over {lat['n']} requests")
     if args.cache_dir and any(not r["warm"] for r in reg["builds"]):
         print(f"re-run with --cache-dir {args.cache_dir} for warm builds")
 

@@ -11,20 +11,30 @@ from repro.serve.batching import RequestQueue, ServeOverloaded, Ticket, payload_
 from repro.serve.cache import WarmStartCache, config_digest, mesh_tag
 from repro.serve.config import ServeConfig
 from repro.serve.fingerprint import fingerprint_csr, operator_nbytes
+from repro.serve.packing import (
+    PackingConfig,
+    WidthPacker,
+    latency_percentiles,
+    true_relres,
+)
 from repro.serve.registry import OperatorRegistry
 from repro.serve.server import ECGServer
 
 __all__ = [
     "ECGServer",
     "OperatorRegistry",
+    "PackingConfig",
     "RequestQueue",
     "ServeConfig",
     "ServeOverloaded",
     "Ticket",
     "WarmStartCache",
+    "WidthPacker",
     "config_digest",
     "fingerprint_csr",
+    "latency_percentiles",
     "mesh_tag",
     "operator_nbytes",
     "payload_key",
+    "true_relres",
 ]

@@ -2,9 +2,9 @@
 
 Every serving request is one ``(operator, b)`` pair, and every registered
 session is a compiled **(n, t) block** program — the enlargement already
-*is* the batch.  The queue's job is therefore not to pack columns (mixing
-requests into one splitting would entangle their Gram matrices and break
-per-request bit-identity) but to:
+*is* the batch.  By default the queue does not pack columns (mixing
+requests into one splitting entangles their Gram matrices and breaks
+per-request bit-identity); its job is to:
 
 * group pending requests by operator fingerprint, so consecutive solves
   reuse one compiled program with zero retraces (each request's RHS is
@@ -23,6 +23,19 @@ Batches close on three triggers: a per-operator group reaching
 ``max_batch`` distinct payloads (checked at ``submit``), the oldest
 pending request aging past ``max_wait_s`` (checked at ``submit``;
 disabled at the default ``0``), or an explicit ``flush()``.
+
+With the **opt-in** width-packing policy
+(:class:`~repro.serve.packing.PackingConfig`, ``pack="width"``) the
+entanglement trade is made deliberately: per-operator dedup groups are
+chunked to the pack capacity and dispatched through
+``ECGSolver.solve_packed`` — one enlarged ``(n, k·t)`` solve whose k
+requests retire independently against their own tolerances.  Packed
+results are *not* bit-identical to solo solves; each ticket instead
+carries its measured true relative residual (``Ticket.relres``) and pack
+telemetry.  Packs additionally close when a per-operator group reaches
+the pack capacity or the oldest pending request ages past the packing
+deadline ``PackingConfig.max_wait_s``.  ``pack="off"`` leaves every
+code path above byte-for-byte as it was.
 """
 
 from __future__ import annotations
@@ -34,6 +47,8 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.serve.packing import PackingConfig, WidthPacker
+
 
 class ServeOverloaded(RuntimeError):
     """Raised by ``submit`` when the pending queue is at ``max_pending``.
@@ -44,8 +59,10 @@ class ServeOverloaded(RuntimeError):
     """
 
 
-def payload_key(fingerprint: str, b, x0=None) -> str:
-    """Dedup key: operator fingerprint + exact RHS/x0 bytes."""
+def payload_key(fingerprint: str, b, x0=None, tol=None) -> str:
+    """Dedup key: operator fingerprint + exact RHS/x0 bytes (+ per-request
+    tolerance when one was given — two requests for the same payload at
+    different tolerances must not share a solve)."""
     h = hashlib.blake2b(digest_size=16)
     h.update(fingerprint.encode())
     b = np.asarray(b)
@@ -55,6 +72,8 @@ def payload_key(fingerprint: str, b, x0=None) -> str:
         x0 = np.asarray(x0)
         h.update(x0.dtype.str.encode())
         h.update(np.ascontiguousarray(x0).tobytes())
+    if tol is not None:  # hashed only when set: default-tol keys are
+        h.update(repr(float(tol)).encode())  # unchanged across versions
     return h.hexdigest()
 
 
@@ -79,6 +98,15 @@ class Ticket:
     batch_id: int | None = None
     batch_size: int = 0
     deduped: bool = False
+    # --- width-packing / latency telemetry (None outside pack="width")
+    tol: float | None = None          # per-request tolerance (packed only)
+    completed_s: float | None = None  # dispatch completion stamp (all
+    #                                   policies — latency percentiles)
+    pack_id: int | None = None        # which pack solved this request
+    pack_width: int | None = None     # total packed column width
+    group_index: int | None = None    # this request's column-slab index
+    relres: float | None = None       # measured true ‖Ax−b‖/‖b‖ (the packed
+    #                                   relres contract; None when unmeasured)
 
     @property
     def done(self) -> bool:
@@ -89,11 +117,17 @@ class RequestQueue:
     """Bounded pending queue with the grouping/dedup/flush policy."""
 
     def __init__(self, max_batch: int = 8, max_wait_s: float = 0.0,
-                 max_pending: int = 256, dedup: bool = True):
+                 max_pending: int = 256, dedup: bool = True,
+                 packing: PackingConfig | None = None, clock=None):
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.max_pending = max_pending
         self.dedup = dedup
+        self.packing = PackingConfig.coerce(packing)
+        self.packer = WidthPacker(self.packing)
+        # injectable clock (same contract as time.monotonic) — deadline
+        # timers become deterministic under a test-controlled clock
+        self._clock = time.monotonic if clock is None else clock
         self.pending: list[Ticket] = []
         self.submitted = 0
         self.rejected = 0
@@ -103,7 +137,8 @@ class RequestQueue:
         self.completed = 0
 
     # ------------------------------------------------------------- intake
-    def submit(self, fingerprint: str, b, x0=None, solver=None) -> Ticket:
+    def submit(self, fingerprint: str, b, x0=None, solver=None,
+               tol=None) -> Ticket:
         if len(self.pending) >= self.max_pending:
             self.rejected += 1
             raise ServeOverloaded(
@@ -115,9 +150,10 @@ class RequestQueue:
             fingerprint=fingerprint,
             b=np.asarray(b),
             x0=None if x0 is None else np.asarray(x0),
-            key=payload_key(fingerprint, b, x0),
-            submitted_s=time.monotonic(),
+            key=payload_key(fingerprint, b, x0, tol),
+            submitted_s=self._clock(),
             solver=solver,
+            tol=None if tol is None else float(tol),
         )
         self.pending.append(ticket)
         self.submitted += 1
@@ -125,19 +161,27 @@ class RequestQueue:
 
     def due(self) -> bool:
         """A batch-closing trigger fired: some operator group holds
-        ``max_batch`` distinct payloads, or the oldest request aged out."""
+        ``max_batch`` distinct payloads (pack capacity under
+        ``pack="width"``), or the oldest request aged out."""
         if not self.pending:
             return False
-        if (
-            self.max_wait_s > 0
-            and time.monotonic() - self.pending[0].submitted_s >= self.max_wait_s
-        ):
+        age = self._clock() - self.pending[0].submitted_s
+        if self.max_wait_s > 0 and age >= self.max_wait_s:
             return True
+        if (
+            self.packing.active
+            and self.packing.max_wait_s > 0
+            and age >= self.packing.max_wait_s
+        ):
+            return True  # packing deadline: close a partial pack
         distinct: dict[str, set] = {}
         for tk in self.pending:
             keys = distinct.setdefault(tk.fingerprint, set())
             keys.add(tk.key if self.dedup else tk.request_id)
-            if len(keys) >= self.max_batch:
+            close_at = self.max_batch
+            if self.packing.active and tk.solver is not None:
+                close_at = min(close_at, self.packer.capacity(tk.solver))
+            if len(keys) >= close_at:
                 return True
         return False
 
@@ -155,6 +199,17 @@ class RequestQueue:
             per_op = groups.setdefault(tk.fingerprint, OrderedDict())
             key = tk.key if self.dedup else f"req{tk.request_id}"
             per_op.setdefault(key, []).append(tk)
+        if self.packing.active:
+            self._drain_packed(groups)
+        else:
+            self._drain_batched(groups)
+        now = self._clock()
+        for tk in drained:
+            tk.completed_s = now
+        return drained
+
+    def _drain_batched(self, groups) -> None:
+        """Dispatch-pipelined batching (the default, bit-identical path)."""
         for per_op in groups.values():
             unique = list(per_op.values())
             for lo in range(0, len(unique), self.max_batch):
@@ -175,7 +230,20 @@ class RequestQueue:
                         tk.deduped = i > 0
                         self.completed += 1
                     self.dedup_shared += len(tickets) - 1
-        return drained
+
+    def _drain_packed(self, groups) -> None:
+        """Width packing: per-operator dedup groups chunked to the pack
+        capacity and solved as one enlarged block program each."""
+        for per_op in groups.values():
+            unique = list(per_op.values())
+            solver = unique[0][0].solver
+            cap = self.packer.capacity(solver)
+            for lo in range(0, len(unique), cap):
+                chunk = unique[lo:lo + cap]
+                self.completed += self.packer.dispatch(chunk)
+                self.batches += 1
+                self.batch_sizes.append(len(chunk))
+                self.dedup_shared += sum(len(ts) - 1 for ts in chunk)
 
     # -------------------------------------------------------------- state
     def stats(self) -> dict:
@@ -184,4 +252,7 @@ class RequestQueue:
             pending=len(self.pending), rejected=self.rejected,
             batches=self.batches, batch_sizes=list(self.batch_sizes),
             dedup_shared=self.dedup_shared,
+            pack=self.packing.pack,
+            packs=self.packer.packs,
+            pack_layouts=[dict(d) for d in self.packer.pack_layouts],
         )

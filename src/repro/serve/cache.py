@@ -9,6 +9,14 @@ straight back into a build through ``SolverConfig.replace(tuned=...,
 select=...)`` — so one small JSON file per operator turns every restart
 rebuild into a probe-free warm build.
 
+Schema 2 entries additionally persist the CSR→Block-ELL **conversion
+meta** (:func:`~repro.kernels.block_ell_meta` — tile choice, ``kmax``,
+padding histogram) when the build ran the Pallas kernel path: a restarted
+or re-admitted-after-eviction operator then direct-fills its Block-ELL
+arrays without re-running the tile analysis
+(``SolverStats.conv_analyzed`` stays False — gated in
+``benchmarks/serve_bench.py``).
+
 Keying: ``(operator fingerprint, base-config digest, mesh tag)``.  The
 config digest hashes the solver template *with its tuned/select payload
 nulled* — a cached selection is only valid for the base configuration
@@ -30,7 +38,7 @@ import warnings
 
 from repro.solver.config import SolverConfig, solverconfig_to_dict
 
-_SCHEMA = 1
+_SCHEMA = 2
 
 
 def config_digest(cfg: SolverConfig) -> str:
@@ -61,14 +69,16 @@ class WarmStartCache:
         return os.path.join(self.root, f"{fingerprint}-{cfg_digest}-{tag}.json")
 
     def load(self, fingerprint: str, cfg_digest: str, tag: str):
-        """Return ``(hit, tuned, select)``; corrupt entries are misses."""
+        """Return ``(hit, tuned, select, conversion)``; corrupt entries are
+        misses.  Schema-1 entries (no conversion meta) still hit — their
+        ``conversion`` is None and the next store upgrades them in place."""
         path = self.path(fingerprint, cfg_digest, tag)
         if not os.path.exists(path):
-            return False, None, None
+            return False, None, None, None
         try:
             with open(path) as f:
                 d = json.load(f)
-            if d.get("schema") != _SCHEMA:
+            if d.get("schema") not in (1, _SCHEMA):
                 raise ValueError(f"unknown warm-start schema {d.get('schema')!r}")
             tuned = select = None
             if d.get("tuned") is not None:
@@ -79,19 +89,27 @@ class WarmStartCache:
                 from repro.adaptive.select_t import tselection_from_dict
 
                 select = tselection_from_dict(d["select"])
-            return True, tuned, select
+            conversion = d.get("conversion")
+            if conversion is not None and not isinstance(conversion, dict):
+                conversion = None
+            return True, tuned, select, conversion
         except Exception as e:  # poisoned entry -> cold build, then overwrite
             warnings.warn(
                 f"warm-start cache entry {path} unreadable ({e}); "
                 "falling back to a cold build",
                 stacklevel=3,
             )
-            return False, None, None
+            return False, None, None, None
 
     def store(self, fingerprint: str, cfg_digest: str, tag: str,
-              tuned, select) -> str:
-        """Persist a build's tuning outcome (atomic rename write)."""
-        d = dict(schema=_SCHEMA, fingerprint=fingerprint, tuned=None, select=None)
+              tuned, select, conversion=None) -> str:
+        """Persist a build's tuning outcome (atomic rename write).
+
+        ``conversion`` is the JSON-safe tile-analysis meta from
+        :func:`~repro.kernels.block_ell_meta` (or None when the build had
+        no Pallas conversion to remember)."""
+        d = dict(schema=_SCHEMA, fingerprint=fingerprint, tuned=None,
+                 select=None, conversion=conversion)
         if tuned is not None:
             from repro.tune.autotune import tunedconfig_to_dict
 

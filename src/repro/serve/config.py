@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+from repro.serve.packing import PackingConfig
 from repro.solver.config import SolverConfig
 
 
@@ -53,6 +54,13 @@ class ServeConfig:
     dedup:          share one solve among concurrent requests with
                     identical (operator, b, x0) payloads — cross-request
                     result reuse, bit-identical by construction.
+    packing:        the opt-in width-packing policy
+                    (:class:`~repro.serve.PackingConfig`; a pack-mode
+                    string or dict coerces).  ``pack="width"`` coalesces
+                    compatible requests into one enlarged block solve with
+                    per-request retirement — higher req/s, measured-relres
+                    contract instead of bit-identity.  The default
+                    (``pack="off"``) changes nothing.
     """
 
     solver: SolverConfig = dataclasses.field(default_factory=_default_solver)
@@ -62,6 +70,7 @@ class ServeConfig:
     max_wait_s: float = 0.0
     max_pending: int = 256
     dedup: bool = True
+    packing: PackingConfig = dataclasses.field(default_factory=PackingConfig)
 
     def __post_init__(self):
         object.__setattr__(self, "solver", SolverConfig.coerce(self.solver))
@@ -80,6 +89,7 @@ class ServeConfig:
         if self.cache_dir is not None and not isinstance(self.cache_dir, str):
             raise ValueError(f"cache_dir must be a str or None, got {self.cache_dir!r}")
         object.__setattr__(self, "dedup", bool(self.dedup))
+        object.__setattr__(self, "packing", PackingConfig.coerce(self.packing))
 
     @classmethod
     def coerce(cls, value) -> "ServeConfig":

@@ -20,6 +20,15 @@ rebuilt session skips its convergence probes and tuner evaluation — a
 restarted server re-tunes **zero** operators (gated in
 ``benchmarks/serve_bench.py``); a miss stores this build's outcome for
 the next restart.
+
+Builds on the Pallas kernel path also produce CSR→Block-ELL conversion
+artifacts (``ECGSolver.conversion``).  The registry keeps the *device
+arrays* in a small in-memory side table that survives LRU eviction of the
+session itself — a re-admitted evicted operator rebuilds with **zero
+re-conversions** (``conv_reused``) — and persists the JSON tile-analysis
+*meta* in the warm-start cache, so even a restarted process skips the
+analysis pass (``conv_analyzed=False``).  Both are gated in
+``benchmarks/serve_bench.py``.
 """
 
 from __future__ import annotations
@@ -49,6 +58,11 @@ class OperatorRegistry:
     time (``build_s``, the cold-vs-warm latency the benchmark reports).
     """
 
+    #: cap of the in-memory conversion-array side table — device arrays of
+    #: the Block-ELL layout are a few× the CSR bytes, so the table is kept
+    #: small and LRU'd independently of the session registry
+    _CONV_CAP = 64
+
     def __init__(self, config: ServeConfig | None = None, mesh=None):
         self.config = ServeConfig.coerce(config)
         self.mesh = mesh
@@ -57,6 +71,7 @@ class OperatorRegistry:
         self.misses = 0
         self.evictions = 0
         self.build_records: list[dict] = []
+        self._conv_arrays: OrderedDict[str, dict] = OrderedDict()
         self._cache = (
             WarmStartCache(self.config.cache_dir)
             if self.config.cache_dir is not None else None
@@ -83,6 +98,8 @@ class OperatorRegistry:
         self.build_records.append(dict(
             fingerprint=key, warm=warm, build_s=build_s,
             n=int(a.shape[0]), t=int(solver.t),
+            conv_analyzed=bool(solver.stats.conv_analyzed),
+            conv_reused=bool(solver.stats.conv_reused),
         ))
         self._evict()
         return key, solver
@@ -93,8 +110,9 @@ class OperatorRegistry:
 
         cfg = self.config.solver
         warm = False
+        conv_meta = None
         if self._cache is not None:
-            warm, tuned, select = self._cache.load(
+            warm, tuned, select, conv_meta = self._cache.load(
                 key, self._cfg_digest, self._mesh_tag
             )
             overrides = {}
@@ -104,15 +122,43 @@ class OperatorRegistry:
                 overrides["select"] = select
             if overrides:
                 cfg = cfg.replace(**overrides)
+        conversion = None
+        conv_arrays = self._conv_arrays.get(key)
+        if conv_arrays is not None or conv_meta is not None:
+            conversion = dict(arrays=conv_arrays, meta=conv_meta)
         t0 = time.perf_counter()
-        solver = ECGSolver.build(a, self.mesh, cfg)
+        solver = ECGSolver.build(a, self.mesh, cfg, conversion=conversion)
         build_s = time.perf_counter() - t0
+        self._harvest_conversion(key, solver, warm, conv_meta)
         if self._cache is not None and not warm:
             self._cache.store(
                 key, self._cfg_digest, self._mesh_tag,
                 solver.tuned, solver.selection,
+                conversion=self._solver_conv_meta(solver),
             )
         return solver, warm, build_s
+
+    @staticmethod
+    def _solver_conv_meta(solver):
+        return None if solver.conversion is None else solver.conversion["meta"]
+
+    def _harvest_conversion(self, key: str, solver, warm: bool, conv_meta):
+        """Remember a build's Block-ELL artifacts: device arrays in the
+        in-memory side table (survives session eviction), tile meta in the
+        warm-start cache (survives restarts — stored as an in-place upgrade
+        when a pre-conversion warm entry lacked it)."""
+        if solver.conversion is None:
+            return
+        self._conv_arrays[key] = solver.conversion["arrays"]
+        self._conv_arrays.move_to_end(key)
+        while len(self._conv_arrays) > self._CONV_CAP:
+            self._conv_arrays.popitem(last=False)
+        if self._cache is not None and warm and conv_meta is None:
+            self._cache.store(
+                key, self._cfg_digest, self._mesh_tag,
+                solver.tuned, solver.selection,
+                conversion=solver.conversion["meta"],
+            )
 
     # ----------------------------------------------------------- eviction
     def _evict(self):
@@ -146,6 +192,13 @@ class OperatorRegistry:
             builds=[dict(r) for r in self.build_records],
             warm_builds=sum(1 for r in self.build_records if r["warm"]),
             cold_builds=sum(1 for r in self.build_records if not r["warm"]),
+            conv_analyzed=sum(
+                1 for r in self.build_records if r.get("conv_analyzed")
+            ),
+            conv_reused=sum(
+                1 for r in self.build_records if r.get("conv_reused")
+            ),
+            conv_resident=len(self._conv_arrays),
             solver_traces={
                 f: e.solver.stats.traces for f, e in self._entries.items()
             },

@@ -49,20 +49,34 @@ class ECGServer:
             max_wait_s=self.config.max_wait_s,
             max_pending=self.config.max_pending,
             dedup=self.config.dedup,
+            packing=self.config.packing,
         )
 
     # ------------------------------------------------------------ requests
-    def submit(self, a, b, x0=None) -> Ticket:
+    def submit(self, a, b, x0=None, tol=None) -> Ticket:
         """Enqueue one request; may dispatch eagerly.
 
         Registers (or resolves) the operator, enqueues the request, and —
         when a batch-closing trigger fires (an operator group reached
-        ``max_batch`` distinct payloads, or the oldest request aged past
-        ``max_wait_s``) — drains the queue before returning.  Raises
-        :class:`~repro.serve.ServeOverloaded` when ``max_pending`` is hit.
+        ``max_batch`` distinct payloads / the pack capacity, or the oldest
+        request aged past a deadline) — drains the queue before returning.
+        Raises :class:`~repro.serve.ServeOverloaded` when ``max_pending``
+        is hit.
+
+        ``tol`` is a per-request absolute residual-norm tolerance and
+        requires the width-packing policy (``ServeConfig(packing="width")``)
+        — only a packed solve retires each request against its own
+        tolerance; the dispatch-batched path solves every request to the
+        session's configured tolerance.
         """
+        if tol is not None and not self.config.packing.active:
+            raise ValueError(
+                "per-request tol requires the width-packing policy "
+                "(ServeConfig(packing='width')); the dispatch-batched path "
+                "solves every request to the session tolerance"
+            )
         key, solver = self.registry.get(a)
-        ticket = self.queue.submit(key, b, x0, solver=solver)
+        ticket = self.queue.submit(key, b, x0, solver=solver, tol=tol)
         if self.queue.due():
             self.flush()
         return ticket

@@ -37,7 +37,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.adaptive.groups import GroupSpec
 from repro.adaptive.reduce import resolve_policy
+from repro.core.cg import SolveResult
 from repro.core.ecg import finalize_result, make_ecg_runner
 from repro.solver.config import SolverConfig
 
@@ -51,6 +53,10 @@ class SolverStats:
     solves: int = 0            # solve() calls served
     partition_reused: bool = False  # with_config reused the parent partition
     op_reused: bool = False         # with_config reused the parent operator
+    conv_analyzed: bool = False     # this build ran the CSR→Block-ELL tile
+    #                                 analysis (the expensive conversion pass)
+    conv_reused: bool = False       # this build skipped conversion entirely
+    #                                 (precomputed Block-ELL arrays supplied)
 
 
 class ECGSolver:
@@ -80,6 +86,7 @@ class ECGSolver:
         *,
         b=None,
         pm=None,
+        conversion=None,
     ) -> "ECGSolver":
         """Build a solver handle for matrix ``a``.
 
@@ -91,6 +98,13 @@ class ECGSolver:
                 a seeded Gaussian — the selection only needs a representative
                 RHS, but passing the real one sharpens the probe).
         pm:     optional precomputed partition to reuse.
+        conversion: optional CSR→Block-ELL conversion artifacts to reuse
+                (sequential ``backend="pallas"`` only) — a dict with
+                ``"arrays"`` (a previous handle's ``self.conversion["arrays"]``
+                — skips the conversion outright) and/or ``"meta"`` (the tile
+                analysis from :func:`repro.kernels.block_ell_meta` — skips
+                the analysis pass).  Mismatched artifacts (different tile,
+                shape, or dtype) are ignored, never an error.
         """
         self = cls.__new__(cls)
         self.a = a
@@ -105,6 +119,9 @@ class ECGSolver:
         self._runners: dict = {}
         self._jits: dict = {}
         self._onehot_cache: dict = {}
+        self._packed_applies: dict = {}
+        self._conversion_in = conversion
+        self.conversion = None
         self._build()
         return self
 
@@ -161,15 +178,62 @@ class ECGSolver:
         self._segmented = False
         ell_block = tuned.ell_block if tuned is not None else cfg.kernel.ell_block
         if cfg.kernel.backend == "pallas":
-            from repro.kernels import make_block_ell_apply
-
-            self._apply = make_block_ell_apply(self.a, block=ell_block)
+            self._build_ell_apply(ell_block)
         else:
             self._apply = lambda V: csr_spmbv(self.a, V)
         self._gram1 = self._gram2 = self._sqnorm = self._tail = None
-        self._gram2p = None
+        self._gram2p = self._sqnorm_cols = None
         self._split_fn = None
         self._precond = self._build_precond()
+
+    def _build_ell_apply(self, ell_block):
+        """Sequential Block-ELL apply, reusing supplied conversion artifacts.
+
+        Priority: precomputed arrays (skip conversion outright — the
+        eviction-aware warm path) > tile-analysis meta (skip the analysis
+        pass, direct-fill the blocks) > full cold conversion.  The produced
+        artifacts are published on ``self.conversion`` so the serve registry
+        can persist/reshare them; ``stats.conv_analyzed``/``conv_reused``
+        make the chosen path observable (gated in serve_bench).
+        """
+        from repro.kernels import make_block_ell_apply_from_arrays
+        from repro.kernels.bsr_spmbv.ops import block_ell_arrays
+
+        br, bc = (
+            (ell_block, ell_block) if isinstance(ell_block, int) else ell_block
+        )
+        conv_in = self._conversion_in or {}
+        reuse = conv_in.get("arrays")
+        dtype = str(np.dtype(self.a.data.dtype))
+        if reuse is not None and not (
+            reuse.get("br") == br
+            and reuse.get("bc") == bc
+            and reuse.get("shape") == tuple(self.a.shape)
+            and reuse.get("dtype") == dtype
+        ):
+            reuse = None  # stale artifacts (tile/shape/dtype changed): ignore
+        if reuse is not None:
+            blocks, indices, m_pad = (
+                reuse["blocks"], reuse["indices"], reuse["m_pad"]
+            )
+            meta = reuse.get("meta")
+            self.stats.conv_reused = True
+        else:
+            blocks, indices, m_pad, meta, analyzed = block_ell_arrays(
+                self.a, br, bc, meta=conv_in.get("meta")
+            )
+            self.stats.conv_analyzed = analyzed
+        self._apply = make_block_ell_apply_from_arrays(
+            blocks, indices, m_pad, self.a.shape[0]
+        )
+        self.conversion = dict(
+            arrays=dict(
+                blocks=blocks, indices=indices, m_pad=m_pad,
+                br=br, bc=bc, shape=tuple(self.a.shape), dtype=dtype,
+                meta=meta,
+            ),
+            meta=meta,
+        )
 
     def _build_distributed(self):
         from repro.sparse.partition import partition_csr
@@ -295,6 +359,16 @@ class ECGSolver:
             mesh=mesh,
             in_specs=P(("node", "proc")),
             out_specs=P(),
+            check_rep=False,
+        )
+        # per-column squared norms for packed multi-RHS solves: one psum of
+        # g floats that REPLACES the scalar sqnorm collective in group mode
+        # (the per-iteration collective count is identical to a solo solve)
+        self._sqnorm_cols = shard_map(
+            lambda m: jax.lax.psum(jnp.sum(m * m, axis=0), axes),
+            mesh=mesh,
+            in_specs=vspec,
+            out_specs=P(None),
             check_rep=False,
         )
         # preconditioned packed reduction [PᵀR | APᵀW | AP_oldᵀW]: three
@@ -521,6 +595,214 @@ class ECGSolver:
             for out, x0_dev in outs
         ]
 
+    # ------------------------------------------------------- packed solving
+    def _packed_apply(self, width: int):
+        """Full-width SpMBV for a packed solve (re-sliced plan at ``width``)."""
+        fn = self._packed_applies.get(width)
+        if fn is None:
+            fn = self.op.matvec_fn(t_active=width)
+            self._packed_applies[width] = fn
+        return fn
+
+    def _packed_runner(self, spec: GroupSpec, width_seg: int):
+        key = ("pack", spec, width_seg)
+        runner = self._runners.get(key)
+        if runner is None:
+            cfg = self.config
+            width = spec.width
+            if self.mesh is None:
+                apply_w = self._apply  # width-polymorphic CSR/Block-ELL apply
+                masked = None
+                exit_bw = None
+            else:
+                apply_w = self._packed_apply(width)
+                # group retirement drives the compacted exchange even with
+                # no reduction policy: the full-width segment carries the
+                # live mask so the loop can exit at a retirement event,
+                # narrower segments compact the payload
+                masked = (
+                    (lambda z, act: apply_w(z)) if width_seg == width
+                    else self.op.masked_matvec_fn(width_seg)
+                )
+                exit_bw = width_seg
+            runner = make_ecg_runner(
+                apply_w, width, tol=cfg.tol, max_iters=cfg.max_iters,
+                split=self._split_fn, gram1=self._gram1, gram2=self._gram2,
+                sqnorm=self._sqnorm, tail=self._tail,
+                backend=cfg.kernel.backend, policy=self.policy,
+                a_apply_masked=masked, exit_below_width=exit_bw,
+                method=cfg.method.name, s=cfg.method.s,
+                reorth=cfg.method.reorth, rank_rtol=cfg.method.rank_rtol,
+                precond=self._precond, gram2p=self._gram2p,
+                precond_reseed=(
+                    cfg.precondition.reseed
+                    if cfg.precondition.kind == "inexact"
+                    else None
+                ),
+                groups=spec, sqnorm_cols=self._sqnorm_cols,
+            )
+            self._runners[key] = runner
+        return runner
+
+    def _packed_jit(self, spec: GroupSpec, width_seg: int, kind: str):
+        key = ("pack", spec, width_seg, kind)
+        fn = self._jits.get(key)
+        if fn is None:
+            runner = self._packed_runner(spec, width_seg)
+            if kind == "fresh":
+                def go(b, x0):
+                    self.stats.traces += 1  # trace-time side effect only
+                    return runner.run(runner.init(b, x0))
+            else:
+                def go(carry):
+                    self.stats.traces += 1
+                    return runner.run(carry)
+            fn = jax.jit(go)
+            self._jits[key] = fn
+        return fn
+
+    def solve_packed(self, bs, x0s=None, tols=None):
+        """Solve k right-hand sides as ONE enlarged block solve of width
+        ``k·t``, each request retiring against its own tolerance.
+
+        Request j owns the contiguous column slab ``[j·t, (j+1)·t)`` of the
+        packed program; all k requests share every halo exchange and both
+        Gram psums per iteration (the amortization the paper prices per
+        *column* now amortizes per *request*).  When a request's per-group
+        residual norm reaches its tolerance its R/Z slabs are zero-retired,
+        its solution freezes, and on a distributed handle the exchange is
+        re-sliced at the shrunken live width (``ExchangePlan.at_width``) so
+        late finishers stop paying early finishers' bytes.
+
+        ``tols`` is one absolute residual-norm tolerance per request (None
+        entries inherit ``config.tol``).  Results are NOT bit-identical to
+        solo :meth:`solve` calls — the shared search space couples the
+        iterates (that coupling is exactly why the pack converges in fewer
+        total iterations than k solo solves) — so each
+        :class:`~repro.core.cg.SolveResult` carries honest per-request
+        telemetry: its own residual history/iteration count and a
+        ``pack`` dict (group layout, retirement iteration, total packed
+        iterations).  Requires ``method="classic"`` and no restart policy.
+        """
+        cfg = self.config
+        if len(bs) == 0:
+            raise ValueError("solve_packed needs at least one right-hand side")
+        if cfg.method.name != "classic":
+            raise ValueError(
+                f"solve_packed requires method 'classic', got {cfg.method.name!r}"
+            )
+        if self.policy is None:
+            raise ValueError(
+                "solve_packed requires a rank-revealing policy (build with "
+                "adaptive='rankrev' at minimum): retirement makes the Gram "
+                "matrix structurally singular, which the pivoted "
+                "factorization absorbs as zero-masked columns"
+            )
+        if self.policy.restart:
+            raise ValueError(
+                "solve_packed cannot run a restart policy (re-enlarging would "
+                "mix request boundaries); use adaptive='rankrev' or 'reduce'"
+            )
+        x0s = [None] * len(bs) if x0s is None else list(x0s)
+        tols = [None] * len(bs) if tols is None else list(tols)
+        if len(x0s) != len(bs) or len(tols) != len(bs):
+            raise ValueError(
+                f"got {len(bs)} rhs but {len(x0s)} guesses / {len(tols)} tols"
+            )
+        spec = GroupSpec(
+            t_each=self.t,
+            tols=tuple(cfg.tol if tt is None else float(tt) for tt in tols),
+        )
+        g = spec.n_groups
+        b_mat = np.stack([np.asarray(b) for b in bs], axis=1)
+        x0_mat = np.stack(
+            [np.zeros(b_mat.shape[0], b_mat.dtype) if x0 is None
+             else np.asarray(x0) for x0 in x0s],
+            axis=1,
+        )
+        if self.mesh is not None:
+            b_dev = self.op.shard_vector(b_mat)
+            x0_dev = self.op.shard_vector(x0_mat.astype(b_mat.dtype))
+            self._onehot(b_dev.dtype)  # warm eagerly — a trace must not put
+        else:
+            b_dev = jnp.asarray(b_mat)
+            x0_dev = jnp.asarray(x0_mat)
+        segments = None
+        if self.mesh is None:
+            out = self._packed_jit(spec, spec.width, "fresh")(b_dev, x0_dev)
+        else:
+            # width-segmented packed solve: each retirement (or policy
+            # reduction) event exits the loop, the exchange re-slices at the
+            # live width, and the solve resumes from the same carry
+            t_seg, carry, k_prev, segments = spec.width, None, 0, []
+            while True:
+                if carry is None:
+                    carry = self._packed_jit(spec, t_seg, "fresh")(b_dev, x0_dev)
+                else:
+                    carry = self._packed_jit(spec, t_seg, "resume")(carry)
+                k = int(carry["k"])
+                bd = bool(carry["bd"])
+                it_seg = k - k_prev
+                segments.append((t_seg, it_seg))
+                k_prev = k
+                n_act = int(jnp.sum(carry["act"]))
+                if (
+                    not bool(jnp.any(carry["grp_live"]))
+                    or bd
+                    or k >= cfg.max_iters
+                    or n_act >= t_seg
+                    or n_act == 0
+                ):
+                    break
+                new_w = max(n_act, 1)
+                if it_seg == 0 and new_w == t_seg:
+                    break  # zero-progress segment at a stable width
+                # retirement (or reduction) event -> re-slice; a pack whose
+                # groups arrive pre-converged (x0 at tolerance) exits its
+                # first segment after zero iterations and re-slices straight
+                # to the initial live width
+                t_seg = new_w
+            out = carry
+        self.stats.solves += g
+        return self._finalize_packed(out, x0_dev, spec, segments)
+
+    def _finalize_packed(self, out, x0_dev, spec: GroupSpec, segments):
+        """Split one packed loop carry into k honest per-request results."""
+        te, g = spec.t_each, spec.n_groups
+        big_x = out["X"]
+        xs = x0_dev + big_x.reshape(big_x.shape[0], g, te).sum(axis=2)
+        xs = np.asarray(xs)
+        grp_iter = np.asarray(out["grp_iter"])
+        grp_hist = np.asarray(out["grp_hist"])
+        k_total = int(out["k"])
+        bd = bool(out["bd"])
+        results = []
+        for j in range(g):
+            retired = int(grp_iter[j]) >= 0
+            nit = int(grp_iter[j]) if retired else k_total
+            hist_j = grp_hist[:, j].copy()
+            hist_j[nit + 1:] = np.nan  # frozen-past-retirement -> NaN padding
+            results.append(SolveResult(
+                x=xs[:, j],
+                n_iters=nit,
+                res_hist=hist_j,
+                converged=retired,
+                breakdown=bd and not retired,
+                t=te,
+                selection=self.selection,
+                comm_segments=segments,
+                pack=dict(
+                    width=spec.width,
+                    t_each=te,
+                    n_groups=g,
+                    group=j,
+                    tol=spec.tols[j],
+                    retired_iter=int(grp_iter[j]) if retired else None,
+                    packed_iters=k_total,
+                ),
+            ))
+        return results
+
     def unshard(self, arr):
         """Padded per-rank layout -> global (n, ...) numpy array (identity
         for a sequential handle)."""
@@ -559,6 +841,11 @@ class ECGSolver:
         clone._probe_b = self._probe_b
         clone._runners, clone._jits = {}, {}
         clone._onehot_cache = {}
+        clone._packed_applies = {}
+        # siblings of the same matrix may reuse the parent's conversion
+        # artifacts (validated against tile/shape/dtype at build time)
+        clone._conversion_in = self.conversion
+        clone.conversion = None
         reuse_op = (
             new_cfg.t == self.config.t
             and new_cfg.comm == self.config.comm
@@ -590,7 +877,9 @@ class ECGSolver:
             clone._gram1, clone._gram2 = self._gram1, self._gram2
             clone._sqnorm, clone._tail = self._sqnorm, self._tail
             clone._gram2p = self._gram2p
+            clone._sqnorm_cols = self._sqnorm_cols
             clone._split_fn = self._split_fn
+            clone.conversion = self.conversion
             # the preconditioner depends only on (a, op, precondition cfg):
             # operator reuse keeps it unless the precondition knobs changed
             if new_cfg.precondition == self.config.precondition:
@@ -637,3 +926,27 @@ class ECGSolver:
             self._onehot(dtype)  # warm eagerly — a trace must not put
         sds = jax.ShapeDtypeStruct((n,), _np.dtype(dtype))
         return self._jit(width, "fresh").lower(sds, sds).compile().as_text()
+
+    def packed_lowered_text(
+        self, tols, dtype=None, width_seg: int | None = None
+    ) -> str:
+        """Compiled HLO of the (fresh) *packed* solve program for a group
+        layout of ``len(tols)`` requests, at exchange width ``width_seg`` —
+        used by the retirement re-slice gates (all-reduce count unchanged,
+        collective-permute payload drops with the live width)."""
+        import numpy as _np
+
+        dtype = jnp.float64 if dtype is None else dtype
+        spec = GroupSpec(
+            t_each=self.t,
+            tols=tuple(
+                self.config.tol if tt is None else float(tt) for tt in tols
+            ),
+        )
+        width_seg = spec.width if width_seg is None else width_seg
+        n = self.op.n_padded if self.op is not None else self.a.shape[0]
+        if self.mesh is not None:
+            self._onehot(dtype)  # warm eagerly — a trace must not put
+        sds = jax.ShapeDtypeStruct((n, spec.n_groups), _np.dtype(dtype))
+        fn = self._packed_jit(spec, width_seg, "fresh")
+        return fn.lower(sds, sds).compile().as_text()

@@ -315,6 +315,106 @@ def check_packed_exchange_lowering():
           "per rotation, at full and reduced widths)")
 
 
+def _permute_payload_elems(txt):
+    """Total elements moved by collective-permutes in optimized HLO text —
+    the p2p payload a packed solve pays per exchange sweep (sum over the
+    operand shapes of every collective-permute / collective-permute-start)."""
+    import re
+
+    total = 0
+    for line in txt.splitlines():
+        m = re.search(
+            r" collective-permute(?:-start)?\([a-z0-9]+\[([\d,]+)\]", line
+        )
+        if m:
+            dims = [int(d) for d in m.group(1).split(",")]
+            total += int(np.prod(dims))
+    return total
+
+
+def check_packed_retirement():
+    """Cross-request width packing on the shard_map path: three requests
+    with staggered tolerances solve as ONE enlarged width-12 block solve,
+    and each retirement re-slices the exchange —
+
+    * ``comm_segments`` widths strictly decrease (12 → 8 → 4) and every
+      request's true residual meets its own tolerance;
+    * the packed program's all-reduce count is 4 at EVERY segment width
+      (3 body + 1 init — grouping the convergence norm into per-request
+      norms is one psum of g floats, not g psums, and narrowing the
+      exchange adds no collective);
+    * the collective-permute payload (elements moved per sweep, read off
+      the lowered HLO operand shapes) strictly drops at each retirement
+      width while the permute COUNT stays fixed — re-slicing compacts
+      bytes, never the rotation structure;
+    * retirement iterations agree with the sequential packed solve on the
+      same operator to a small margin (only SpMBV summation order differs;
+      after a retirement the Gram is structurally singular, so pivot-order
+      decisions amplify last-bit differences — the FD system keeps that
+      chaos bounded, where the DG system does not).
+    """
+    from repro.solver import CommConfig, ECGSolver, SolverConfig
+
+    mesh = jax.make_mesh((2, 4), ("node", "proc"))
+    a = fd_laplace_2d(13)
+    ad = np.asarray(a.todense(), np.float64)
+    rng = np.random.default_rng(7)
+    bs = [rng.standard_normal(a.shape[0]) for _ in range(3)]
+    tols = [1e-2, 1e-5, 1e-8]
+
+    cfg = SolverConfig(
+        t=4, tol=1e-8, max_iters=500, adaptive="rankrev",
+        comm=CommConfig(strategy="optimal", machine=BLUE_WATERS),
+    )
+    solver = ECGSolver.build(a, mesh, cfg)
+    results = solver.solve_packed(bs, tols=tols)
+
+    for res, b, tol in zip(results, bs, tols):
+        assert bool(res.converged), res.pack
+        rnorm = np.linalg.norm(ad @ solver.unshard(res.x) - np.asarray(b))
+        assert rnorm <= tol * 1.01, (tol, rnorm)
+    iters = [r.n_iters for r in results]
+    assert iters == sorted(iters), iters
+
+    segs = results[0].comm_segments
+    widths = [w for w, _ in segs]
+    assert widths[0] == 12 and len(widths) >= 3, segs
+    assert all(w1 > w2 for w1, w2 in zip(widths, widths[1:])), segs
+
+    seq = ECGSolver.build(a, config=cfg).solve_packed(bs, tols=tols)
+    for res, sres in zip(results, seq):
+        assert abs(res.n_iters - sres.n_iters) <= max(5, sres.n_iters // 3), (
+            "distributed retirement diverged from sequential",
+            res.n_iters, sres.n_iters,
+        )
+
+    # lowered collective structure at each live width the solve visited
+    payloads, counts = [], []
+    for w in widths:
+        txt = solver.packed_lowered_text(tols, width_seg=w)
+        n_ar = txt.count(" all-reduce(")
+        assert n_ar == 4, (w, f"expected 3 body + 1 init all-reduces, got {n_ar}")
+        counts.append(
+            txt.count(" collective-permute(")
+            + txt.count(" collective-permute-start(")
+        )
+        payloads.append(_permute_payload_elems(txt))
+    assert len(set(counts)) == 1 and counts[0] > 0, (
+        "retirement re-slice must not change the rotation structure", counts,
+    )
+    assert all(p1 > p2 for p1, p2 in zip(payloads, payloads[1:])), (
+        "collective-permute payload must drop at each retirement width",
+        list(zip(widths, payloads)),
+    )
+    print(
+        "packed retirement OK (widths "
+        + " -> ".join(str(w) for w in widths)
+        + f"; all-reduce x4 at every width; permute payload "
+        + " -> ".join(str(p) for p in payloads)
+        + f" elems over {counts[0]} permutes; iters {iters})"
+    )
+
+
 def check_solver_handle():
     """The ECGSolver handle on the shard_map path: ``solve_many`` over 4 RHS
     compiles the loop exactly once (zero retraces after the first solve),
@@ -755,6 +855,7 @@ if __name__ == "__main__":
     check_adaptive_and_auto_t()
     check_adaptive_opcode_count()
     check_packed_exchange_lowering()
+    check_packed_retirement()
     check_two_psums_per_iteration()
     check_solver_handle()
     check_preconditioned_solver()

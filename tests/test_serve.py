@@ -22,13 +22,18 @@ import jax
 from repro.serve import (
     ECGServer,
     OperatorRegistry,
+    PackingConfig,
+    RequestQueue,
     ServeConfig,
     ServeOverloaded,
     WarmStartCache,
     config_digest,
     fingerprint_csr,
+    latency_percentiles,
     mesh_tag,
     operator_nbytes,
+    payload_key,
+    true_relres,
 )
 from repro.solver import ECGSolver, SolverConfig
 from repro.sparse import aniso_laplace_2d, dg_laplace_2d, fd_laplace_2d
@@ -387,3 +392,288 @@ class TestSolveManyPipelined:
             assert res.n_iters == ref.n_iters
         assert solver.stats.solves == 4
         assert solver.stats.traces == solo.stats.traces  # one program each
+
+
+# ------------------------------------------------------------- width packing
+class TestWidthPacking:
+    def _config(self, **kw):
+        defaults = dict(
+            solver=SolverConfig(t=4, tol=1e-8, adaptive="rankrev"),
+            packing=dict(pack="width", max_pack_width=16),
+        )
+        defaults.update(kw)
+        return ServeConfig(**defaults)
+
+    def test_packed_relres_contract_and_iter_bound(self, operators):
+        """Every packed request meets its OWN tolerance, and the pack
+        converges no slower than the slowest solo solve (the flexible-ECG
+        shared-search-space bound, with slack for the coupling)."""
+        a = operators[0]
+        rng = np.random.default_rng(11)
+        bs = [rng.standard_normal(a.shape[0]) for _ in range(4)]
+        tols = [1e-4, 1e-6, 1e-8, 1e-8]
+        server = ECGServer(self._config())
+        tks = [server.submit(a, b, tol=tol) for b, tol in zip(bs, tols)]
+        assert all(tk.done for tk in tks)  # capacity 4 -> eager dispatch
+        solo = ECGSolver.build(a, config=server.config.solver)
+        max_solo = max(solo.solve(b).n_iters for b in bs)
+        for tk, b, tol in zip(tks, bs, tols):
+            assert tk.result.pack["tol"] == tol
+            assert tk.relres is not None
+            # tol is an absolute residual-norm bound; the measured true
+            # relres is ||r|| / ||b|| with ||b|| >> 1 here, so <= tol too
+            assert tk.relres <= tol
+            assert bool(tk.result.converged)
+            assert tk.result.n_iters <= max_solo + 5
+        assert tks[0].result.n_iters <= tks[3].result.n_iters  # loosest first
+
+    def test_pack_off_is_bit_identical_to_solo(self, operators):
+        """pack="off" (the default) leaves the dispatch-batched path — and
+        its bit-identity guarantee — untouched."""
+        a = operators[1]
+        rng = np.random.default_rng(12)
+        bs = [rng.standard_normal(a.shape[0]) for _ in range(3)]
+        server = ECGServer(self._config(packing="off"))
+        tks = [server.submit(a, b) for b in bs]
+        server.flush()
+        solo = ECGSolver.build(a, config=server.config.solver)
+        for tk, b in zip(tks, bs):
+            ref = solo.solve(b)
+            assert np.array_equal(np.asarray(tk.result.x), np.asarray(ref.x))
+            assert tk.result.n_iters == ref.n_iters
+            assert tk.pack_id is None and tk.relres is None
+            assert tk.completed_s is not None  # latency stamps on all paths
+        assert server.queue.stats()["packs"] == 0
+
+    def test_packed_not_bit_identical_but_honest(self, operators):
+        """The coupling is real (iterate sequences differ from solo) and
+        the telemetry is honest about it: per-request histories end at the
+        request's own retirement, not at the pack's last iteration."""
+        a = operators[0]
+        rng = np.random.default_rng(13)
+        bs = [rng.standard_normal(a.shape[0]) for _ in range(4)]
+        server = ECGServer(self._config())
+        tks = [server.submit(a, b) for b in bs]
+        for tk in tks:
+            res = tk.result
+            assert res.pack["n_groups"] == 4 and res.pack["width"] == 16
+            assert res.pack["packed_iters"] >= res.n_iters
+            hist = np.asarray(res.res_hist)
+            assert np.isfinite(hist[res.n_iters])
+            assert hist[res.n_iters] <= res.pack["tol"]
+            assert np.all(np.isnan(hist[res.n_iters + 1:]))
+
+    def test_single_request_still_packs(self, operators):
+        a = operators[2]
+        b = np.random.default_rng(14).standard_normal(a.shape[0])
+        server = ECGServer(self._config())
+        tk = server.submit(a, b)
+        server.flush()
+        assert tk.done and tk.pack_width == 4 and tk.group_index == 0
+        assert tk.relres <= server.config.solver.tol
+
+    def test_tol_requires_packing(self, operators):
+        server = ECGServer(self._config(packing="off"))
+        with pytest.raises(ValueError, match="width-packing"):
+            server.submit(operators[0], np.ones(operators[0].shape[0]),
+                          tol=1e-4)
+
+    def test_distinct_tols_do_not_dedup(self, operators):
+        a = operators[0]
+        b = np.random.default_rng(15).standard_normal(a.shape[0])
+        server = ECGServer(self._config())
+        t1 = server.submit(a, b, tol=1e-4)
+        t2 = server.submit(a, b.copy(), tol=1e-8)  # same payload, other tol
+        server.flush()
+        assert t1.key != t2.key
+        assert t1.result is not t2.result
+        assert t1.group_index != t2.group_index  # separate slabs of one pack
+        assert t1.pack_id == t2.pack_id
+        fp = fingerprint_csr(a)
+        assert payload_key(fp, b) == payload_key(fp, b, tol=None)
+        assert payload_key(fp, b, tol=1e-4) != payload_key(fp, b)
+
+    def test_deadline_timer_deterministic(self, operators):
+        """An injected clock drives the packing deadline: the pack closes
+        exactly when the oldest request ages past max_wait_s, and the
+        resulting layout is a pure function of the (trace, clock) pair."""
+        a = operators[0]
+        solver = ECGSolver.build(
+            a, config=SolverConfig(t=4, tol=1e-8, adaptive="rankrev")
+        )
+        fp = fingerprint_csr(a)
+        rng = np.random.default_rng(16)
+        bs = [rng.standard_normal(a.shape[0]) for _ in range(2)]
+
+        def replay():
+            now = [0.0]
+            q = RequestQueue(
+                packing=PackingConfig(pack="width", max_pack_width=16,
+                                      max_wait_s=0.5),
+                clock=lambda: now[0],
+            )
+            q.submit(fp, bs[0], solver=solver)
+            now[0] = 0.4
+            q.submit(fp, bs[1], solver=solver)
+            assert not q.due()  # capacity 4 not reached, oldest aged 0.4
+            now[0] = 0.6
+            assert q.due()  # deadline: oldest request is now 0.6 old
+            tickets = q.drain()
+            now[0] = 0.7
+            return q, tickets
+
+        q1, tk1 = replay()
+        q2, tk2 = replay()
+        assert q1.stats()["pack_layouts"] == q2.stats()["pack_layouts"]
+        assert [t.pack_id for t in tk1] == [t.pack_id for t in tk2]
+        assert [t.completed_s for t in tk1] == [t.completed_s for t in tk2]
+        for u, v in zip(tk1, tk2):
+            assert np.array_equal(np.asarray(u.result.x),
+                                  np.asarray(v.result.x))
+
+    def test_retirement_byte_accounting(self):
+        """The exchange re-slice behind per-request retirement, replayed on
+        the host: at every retirement width the sliced plan delivers halos
+        bit-exactly, and the wire bytes drop in proportion to the retired
+        slabs — late finishers stop paying early finishers' bytes."""
+        from repro.core.machines import BLUE_WATERS
+        from repro.core.node_aware import build_exchange_plan, simulate_plan
+        from repro.sparse import partition_csr
+
+        a = fd_laplace_2d(13)
+        pm = partition_csr(a, 8)
+        plan = build_exchange_plan(pm, 2, 4, "optimal", t=16,
+                                   machine=BLUE_WATERS)
+        rng = np.random.default_rng(17)
+        widths = [16, 12, 8, 4]  # 4 packed requests of t=4 retiring one by one
+        bytes_seen = []
+        for w in widths:
+            x = rng.standard_normal((a.shape[0], w))
+            halos = simulate_plan(plan, pm, x, at_width=w)
+            for d in range(8):
+                assert np.array_equal(halos[d], x[pm.halo_sources[d]])
+            bytes_seen.append(plan.at_width(w).wire_bytes())
+        assert bytes_seen == sorted(bytes_seen, reverse=True)
+        assert bytes_seen[-1] < bytes_seen[0]
+        # accounting consistency: slicing then counting == counting at width
+        for w in widths[1:]:
+            assert plan.at_width(w).wire_bytes() == plan.wire_bytes(width=w)
+
+    def test_latency_percentiles_helper(self):
+        class T:
+            def __init__(self, s, c):
+                self.submitted_s, self.completed_s = s, c
+
+        p = latency_percentiles([T(0.0, 1.0), T(0.0, 2.0), T(1.0, 2.0),
+                                 T(0.0, None)])
+        assert p["n"] == 3
+        assert p["p50"] == 1.0 and p["p50"] <= p["p95"] <= p["p99"] <= 2.0
+        empty = latency_percentiles([])
+        assert empty["n"] == 0 and np.isnan(empty["p50"])
+
+    def test_packing_config_validation(self):
+        assert not PackingConfig().active
+        assert PackingConfig.coerce("width").active
+        assert PackingConfig.coerce(None).pack == "off"
+        cfg = PackingConfig.coerce(dict(pack="width", max_pack_width=8))
+        assert cfg.max_pack_width == 8
+        with pytest.raises(ValueError, match="pack must be"):
+            PackingConfig(pack="columns")
+        with pytest.raises(ValueError, match="max_pack_width"):
+            PackingConfig(max_pack_width=0)
+        with pytest.raises(ValueError, match="max_wait_s"):
+            PackingConfig(max_wait_s=-0.1)
+        with pytest.raises(TypeError):
+            PackingConfig.coerce(42)
+        assert ServeConfig(packing="width").packing.active
+
+    def test_true_relres_matches_dense(self, operators):
+        a = operators[2]
+        rng = np.random.default_rng(18)
+        x = rng.standard_normal(a.shape[0])
+        b = rng.standard_normal(a.shape[0])
+        dense = np.asarray(a.todense())
+        expect = np.linalg.norm(dense @ x - b) / np.linalg.norm(b)
+        assert abs(true_relres(a, x, b) - expect) < 1e-12
+
+
+# -------------------------------------------------- conversion warm starts
+class TestConversionWarmStart:
+    def _cfg(self, **kw):
+        return ServeConfig(
+            solver=SolverConfig(t=4, tol=1e-8, adaptive="rankrev",
+                                kernel=dict(backend="pallas")),
+            **kw,
+        )
+
+    def test_eviction_readmission_skips_conversion(self, operators):
+        """An evicted operator's Block-ELL arrays survive in the side
+        table: re-admission rebuilds the session with zero re-conversions
+        and bit-identical results."""
+        a1, a2 = operators[0], operators[1]
+        reg = OperatorRegistry(self._cfg(registry_bytes=1))
+        k1, s1 = reg.get(a1)
+        assert s1.stats.conv_analyzed and not s1.stats.conv_reused
+        reg.get(a2)  # tiny budget: evicts a1
+        assert k1 not in reg
+        _, s1b = reg.get(a1)  # re-admission
+        assert s1b.stats.conv_reused and not s1b.stats.conv_analyzed
+        b = np.random.default_rng(19).standard_normal(a1.shape[0])
+        assert np.array_equal(np.asarray(s1.solve(b).x),
+                              np.asarray(s1b.solve(b).x))
+        st = reg.stats()
+        assert st["conv_reused"] == 1 and st["conv_resident"] == 2
+
+    def test_restart_skips_tile_analysis(self, operators, tmp_path):
+        """A restarted server loads the persisted tile meta: the rebuild
+        direct-fills the Block-ELL arrays without re-running the analysis
+        pass (schema-2 warm-start entries)."""
+        a = operators[0]
+        cfg = self._cfg(cache_dir=str(tmp_path))
+        reg1 = OperatorRegistry(cfg)
+        _, s1 = reg1.get(a)
+        assert s1.stats.conv_analyzed
+        reg2 = OperatorRegistry(cfg)  # simulated restart: no arrays in memory
+        _, s2 = reg2.get(a)
+        rec = reg2.build_records[-1]
+        assert rec["warm"] and not rec["conv_analyzed"]
+        assert not rec["conv_reused"]  # arrays direct-filled, not reused
+        b = np.random.default_rng(20).standard_normal(a.shape[0])
+        assert np.array_equal(np.asarray(s1.solve(b).x),
+                              np.asarray(s2.solve(b).x))
+
+    def test_corrupt_conversion_meta_is_reanalyzed(self, operators, tmp_path):
+        """A stale/garbled conversion entry triggers a fresh analysis,
+        never an error (same corruption contract as the tuning payload)."""
+        a = operators[0]
+        cfg = self._cfg(cache_dir=str(tmp_path))
+        OperatorRegistry(cfg).get(a)
+        path = tmp_path / os.listdir(tmp_path)[0]
+        d = json.loads(path.read_text())
+        assert isinstance(d.get("conversion"), dict)  # schema 2 persisted it
+        d["conversion"] = dict(br="bogus")
+        path.write_text(json.dumps(d))
+        reg = OperatorRegistry(cfg)
+        _, s = reg.get(a)
+        rec = reg.build_records[-1]
+        assert rec["warm"] and rec["conv_analyzed"]  # fell back to analysis
+        assert bool(s.solve(np.ones(a.shape[0])).converged)
+
+    def test_schema1_entry_upgraded_in_place(self, operators, tmp_path):
+        """A pre-conversion (schema 1) warm entry still hits for tuning and
+        is upgraded with the conversion meta on the next build."""
+        a = operators[0]
+        cfg = self._cfg(cache_dir=str(tmp_path))
+        OperatorRegistry(cfg).get(a)
+        path = tmp_path / os.listdir(tmp_path)[0]
+        d = json.loads(path.read_text())
+        d["schema"] = 1
+        d.pop("conversion")
+        path.write_text(json.dumps(d))
+        reg = OperatorRegistry(cfg)
+        reg.get(a)
+        rec = reg.build_records[-1]
+        assert rec["warm"]  # schema-1 entries still answer
+        upgraded = json.loads(path.read_text())
+        assert upgraded["schema"] == 2
+        assert isinstance(upgraded["conversion"], dict)

@@ -312,3 +312,93 @@ class TestDispatchOverheadMicrobench:
 
         v = measure_dispatch_overhead(mesh, repeats=3, chain=(2, 8))
         assert np.isfinite(v) and 0 < v < 1.0
+
+
+# ------------------------------------------------------------- solve_packed
+class TestSolvePacked:
+    CFG = dict(t=4, tol=1e-8, adaptive="rankrev")
+
+    def test_groupspec_validation(self):
+        from repro.adaptive import GroupSpec
+
+        spec = GroupSpec(t_each=4, tols=(1e-4, 1e-8))
+        assert spec.width == 8 and spec.n_groups == 2
+        assert hash(spec) == hash(GroupSpec(t_each=4, tols=(1e-4, 1e-8)))
+        with pytest.raises(ValueError, match="t_each"):
+            GroupSpec(t_each=0, tols=(1e-8,))
+        with pytest.raises(ValueError, match="at least one group"):
+            GroupSpec(t_each=4, tols=())
+        with pytest.raises(ValueError, match="tol"):
+            GroupSpec(t_each=4, tols=(1e-8, -1.0))
+
+    def test_each_request_meets_its_tolerance(self, system):
+        a, _ = system
+        rng = np.random.default_rng(21)
+        bs = [rng.standard_normal(a.shape[0]) for _ in range(3)]
+        tols = [1e-3, 1e-6, 1e-9]
+        solver = ECGSolver.build(a, config=SolverConfig(**self.CFG))
+        results = solver.solve_packed(bs, tols=tols)
+        dense = np.asarray(a.todense())
+        for res, b, tol in zip(results, bs, tols):
+            assert bool(res.converged)
+            assert np.linalg.norm(dense @ np.asarray(res.x) - b) <= tol * 1.01
+            assert res.pack["tol"] == tol and res.t == 4
+        # retirement order follows tolerance order on a shared operator
+        iters = [r.n_iters for r in results]
+        assert iters == sorted(iters)
+        assert solver.stats.solves == 3
+
+    def test_pack_converges_faster_than_solo_total(self, system):
+        a, _ = system
+        rng = np.random.default_rng(22)
+        bs = [rng.standard_normal(a.shape[0]) for _ in range(4)]
+        solver = ECGSolver.build(a, config=SolverConfig(**self.CFG))
+        packed = solver.solve_packed(bs)
+        solo = ECGSolver.build(a, config=SolverConfig(**self.CFG))
+        solo_iters = [solo.solve(b).n_iters for b in bs]
+        # the shared search space: the pack's total iterations beat the
+        # slowest solo solve, not just the sum
+        assert packed[0].pack["packed_iters"] <= max(solo_iters)
+
+    def test_x0_at_tolerance_retires_at_zero(self, system):
+        a, b = system
+        solver = ECGSolver.build(a, config=SolverConfig(**self.CFG))
+        x_star = solver.solve(b).x
+        rng = np.random.default_rng(23)
+        b2 = rng.standard_normal(a.shape[0])
+        res = solver.solve_packed([b, b2], x0s=[np.asarray(x_star), None])
+        assert res[0].n_iters == 0 and bool(res[0].converged)
+        assert res[0].pack["retired_iter"] == 0
+        assert res[1].n_iters > 0 and bool(res[1].converged)
+
+    def test_repack_same_layout_zero_retraces(self, system):
+        a, _ = system
+        rng = np.random.default_rng(24)
+        solver = ECGSolver.build(a, config=SolverConfig(**self.CFG))
+        solver.solve_packed([rng.standard_normal(a.shape[0]) for _ in range(3)])
+        traces0 = solver.stats.traces
+        solver.solve_packed([rng.standard_normal(a.shape[0]) for _ in range(3)])
+        assert solver.stats.traces == traces0  # same (t_each, tols) layout
+
+    def test_rejects_unsupported_configs(self, system):
+        a, b = system
+        bs = [b]
+        no_policy = ECGSolver.build(a, config=SolverConfig(t=4, tol=1e-8))
+        with pytest.raises(ValueError, match="rank-revealing"):
+            no_policy.solve_packed(bs)
+        sstep = ECGSolver.build(
+            a, config=SolverConfig(t=4, adaptive="rankrev",
+                                   method=dict(name="sstep"))
+        )
+        with pytest.raises(ValueError, match="classic"):
+            sstep.solve_packed(bs)
+        restart = ECGSolver.build(
+            a, config=SolverConfig(t=4, adaptive="reduce+restart")
+        )
+        with pytest.raises(ValueError, match="restart"):
+            restart.solve_packed(bs)
+        solver = ECGSolver.build(a, config=SolverConfig(**self.CFG))
+        with pytest.raises(ValueError, match="at least one"):
+            solver.solve_packed([])
+        with pytest.raises(ValueError, match="guesses"):
+            solver.solve_packed(bs, x0s=[None, None])
