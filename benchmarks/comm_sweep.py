@@ -37,46 +37,15 @@ one wall-clock-derived field).
 import argparse
 import json
 import os
-import re
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import numpy as np
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4}
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def hlo_permute_bytes(compiled_text: str, p: int) -> int:
-    """Sum of collective-permute payload bytes in a compiled module.
-
-    Each instruction's (first) result shape is the per-device buffer; every
-    device sends one, so the wire total is shape_bytes × p.  Handles both
-    the synchronous form (``x = f64[c,w]{..} collective-permute(...)``) and
-    the async start form, whose result is a tuple
-    (``x = (f64[c,w]{..}, f64[c,w]{..}) collective-permute-start(...)`` —
-    the first element is the send payload; ``-done`` is not counted).
-    """
-    total = 0
-    for line in compiled_text.splitlines():
-        # split at the op's opening paren (the SSA name at line start would
-        # otherwise shadow the search); "-done" carries no payload
-        if " collective-permute-start(" in line:
-            head = line.split(" collective-permute-start(", 1)[0]
-        elif " collective-permute(" in line:
-            head = line.split(" collective-permute(", 1)[0]
-        else:
-            continue
-        m = _SHAPE_RE.search(head.split("=", 1)[-1])
-        if not m or m.group(1) not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in m.group(2).split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[m.group(1)] * p
-    return total
+# the HLO byte counter moved to the observability layer (the model-drift
+# comparison needs it too); same function, one home
+from repro.observe.drift import hlo_collective_bytes as hlo_permute_bytes
 
 
 def main() -> None:

@@ -3,9 +3,6 @@
 from __future__ import annotations
 
 import functools
-import time
-
-import numpy as np
 
 import jax
 
@@ -38,16 +35,19 @@ def comm_stats(which: str, p: int, ppn: int):
     return build_comm_graph(pm, ppn=ppn, row_block=blk)
 
 
-def timed(fn, *args, repeats: int = 3, **kw):
-    """(result, wall microseconds per call) — median of repeats."""
-    fn(*args, **kw)  # warmup / compile
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn(*args, **kw)
-        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(out, jax.Array) else None
-        ts.append(time.perf_counter() - t0)
-    return out, float(np.median(ts) * 1e6)
+def timed(fn, *args, repeats: int = 3, label: str = "timed", **kw):
+    """(result, wall microseconds per call) — median of repeats.
+
+    A thin shim over :func:`repro.observe.timed_median` (one warmup call,
+    ``block_until_ready`` inside the timed region); with a tracer installed
+    via :func:`repro.observe.set_tracer` each timed call is a
+    ``bench/<label>`` span.
+    """
+    from repro.observe import get_tracer, timed_median
+
+    out, s = timed_median(fn, *args, repeats=repeats, label=label,
+                          tracer=get_tracer(), **kw)
+    return out, s * 1e6
 
 
 def row(name: str, us: float, derived) -> str:

@@ -1,0 +1,273 @@
+"""Observability benchmark: tracer overhead gate + model-drift validation.
+
+    PYTHONPATH=src python benchmarks/observe_bench.py [--smoke] [--json PATH]
+                                                      [--check BASELINE]
+                                                      [--trace PATH]
+
+Two phases, one JSON:
+
+* **overhead gate** — the same warm ``solve_many`` batch timed on two
+  identically-built sequential solvers, one untraced and one with a live
+  :class:`~repro.observe.Tracer` feeding a memory sink.  All span clocks
+  sit at dispatch boundaries (never inside jitted code) and ``solve_many``
+  keeps its no-host-sync pipeline, so the traced run must come in within
+  3% of the untraced wall.  Measurement is paired-interleaved min-of-k
+  over three trials, gated on the best trial ratio (contention on a
+  shared host only ever *adds* time) with a 1 ms absolute allowance so
+  micro-walls don't gate on timer noise.
+* **model drift** — on a (2 nodes x 4 procs) host mesh, every exchange
+  strategy solves a full-rank RHS (width t) and a rank-deficient RHS
+  (``adaptive="reduce"`` drops it to a narrow tail segment); the tracer's
+  ``solve/segment`` spans supply measured ``(width, iters, wall)``, and
+  :func:`repro.observe.model_drift` prices each against the structural
+  cost model (HOST params, ``dispatch_overhead`` re-calibrated from
+  :func:`repro.tune.measure_dispatch_overhead`) and against the
+  plan-accounted exchange bytes vs. the compiled HLO's collective-permute
+  payloads.  Gates: every *calibrated* time drift (normalized by the
+  median across configurations — absolute machine speed cancels) in
+  [0.5, 2.0]; per strategy the HLO/plan byte ratio is constant across
+  widths within 15% (the re-slice moves active columns only — both
+  accountings must shrink together).
+
+``--check BASELINE`` additionally compares the deterministic byte
+counters (plan and HLO bytes per (strategy, t_active)) against the
+committed ``BENCH_observe.json`` — they are pure functions of the
+partition and must match exactly.  ``--trace PATH`` records the whole
+benchmark (build phases, solve segments, drift gauges) as a Chrome/
+Perfetto trace — the CI artifact.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small problem for CI")
+    ap.add_argument("--t", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timed repeats (median-of); default 5, 3 smoke")
+    ap.add_argument("--json", default="BENCH_observe.json")
+    ap.add_argument("--check", metavar="BASELINE", default=None,
+                    help="fail unless deterministic byte counters match")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the benchmark's own Chrome/Perfetto trace")
+    args = ap.parse_args()
+    repeats = args.repeats or (3 if args.smoke else 5)
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.core.machines import HOST
+    from repro.observe import (
+        MemorySink, Tracer, calibrated_drift, model_drift, open_sink,
+        timed_median,
+    )
+    from repro.solver import CommConfig, ECGSolver, SolverConfig
+    from repro.sparse import dg_laplace_2d, fd_laplace_2d
+    from repro.tune import measure_dispatch_overhead
+
+    trace_sink = open_sink(args.trace) if args.trace else None
+    run_tracer = Tracer(sinks=[trace_sink]) if trace_sink else None
+
+    # ---- phase 1: tracer overhead on the warm solve_many hot path.
+    # Two identical sequential sessions; only the tracer differs.  The
+    # batch replays on compiled programs, so any slowdown is pure
+    # instrumentation cost at the dispatch boundaries.
+    n_seq = 16 if args.smoke else 24
+    a_seq = fd_laplace_2d(n_seq)
+    rng = np.random.default_rng(args.seed)
+    bs = [rng.standard_normal(a_seq.shape[0]) for _ in range(8)]
+    seq_cfg = SolverConfig(t=4, tol=1e-8)
+    untraced = ECGSolver.build(a_seq, config=seq_cfg)
+    traced = ECGSolver.build(a_seq, config=seq_cfg,
+                             tracer=Tracer(sinks=[MemorySink()]))
+    untraced.solve_many(bs)  # compile-warm both sessions
+    traced.solve_many(bs)
+    # paired interleaved repeats, min-of-k per trial, best trial ratio:
+    # wall noise on a shared host is one-sided (contention only ever adds
+    # time) and swamps a 3% gate under a single median — the minimum
+    # observed traced/untraced ratio across independent trials is the
+    # cleanest estimate of the true instrumentation cost
+    ratios, plain_s, traced_s = [], None, None
+    for _ in range(3):
+        plain_ts, traced_ts = [], []
+        for _ in range(repeats):
+            _, s_u = timed_median(untraced.solve_many, bs, repeats=1,
+                                  warmup=0, label="solve_many/untraced",
+                                  sync=False)
+            _, s_t = timed_median(traced.solve_many, bs, repeats=1,
+                                  warmup=0, label="solve_many/traced",
+                                  sync=False)
+            plain_ts.append(s_u)
+            traced_ts.append(s_t)
+        ratios.append(min(traced_ts) / min(plain_ts))
+        if plain_s is None or min(plain_ts) < plain_s:
+            plain_s, traced_s = min(plain_ts), min(traced_ts)
+    overhead_pct = (min(ratios) - 1.0) * 100.0
+    overhead_ok = min(ratios) <= 1.03 or traced_s <= plain_s + 1e-3
+    print(f"# overhead: untraced {plain_s * 1e3:.1f}ms -> traced "
+          f"{traced_s * 1e3:.1f}ms ({overhead_pct:+.2f}% best-trial, "
+          f"ratios {[round(r, 3) for r in ratios]}, gate <= 3%) "
+          f"over {len(bs)} solves x 3 trials x {repeats} repeats")
+
+    # ---- phase 2: model drift per (strategy, t_active) on a 2x4 mesh
+    n_dev = len(jax.devices())
+    assert n_dev >= 8, f"need >= 8 devices, got {n_dev}"
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:8]).reshape(2, 4), ("node", "proc")
+    )
+    t = args.t
+    a = fd_laplace_2d(13) if args.smoke else dg_laplace_2d((16, 12), block=8)
+    n = a.shape[0]
+    machine = dataclasses.replace(
+        HOST, dispatch_overhead=float(measure_dispatch_overhead(mesh))
+    )
+    print(f"# drift: {n} rows, {a.nnz} nnz, t={t} on 2x4 mesh; "
+          f"dispatch overhead {machine.dispatch_overhead * 1e6:.1f}us/op")
+
+    b_full = rng.standard_normal(n)
+    m = 2  # deficient splitting: t -> t_active=m at the first iteration
+    b_def = np.zeros(n)
+    b_def[: (m * n) // t] = rng.standard_normal((m * n) // t)
+
+    strategies = (
+        ("standard", "3step") if args.smoke
+        else ("standard", "2step", "3step", "optimal")
+    )
+    rows = []
+    pm = None
+    for strategy in strategies:
+        sink = MemorySink()
+        sinks = [sink] + ([trace_sink] if trace_sink else [])
+        solver = ECGSolver.build(a, mesh, SolverConfig(
+            t=t, tol=1e-8, max_iters=600, adaptive="reduce",
+            comm=CommConfig(strategy=strategy, machine=HOST),
+        ), pm=pm, tracer=Tracer(sinks=sinks))
+        pm = solver.partition  # one row partition across strategy builds
+        for b in (b_full, b_def):  # compile-warm both segment layouts
+            solver.solve(b)
+        sink.spans.clear()
+        for _ in range(repeats):
+            solver.solve(b_full)
+            solver.solve(b_def)
+        # measured (width, iters, wall): aggregate the solve/segment spans
+        # across repeats; segments shorter than 3 iterations are dropped —
+        # a 1-iteration segment is all dispatch edge, not steady state
+        agg: dict[int, list[float]] = {}
+        for sp in sink.spans:
+            if sp.name != "solve/segment":
+                continue
+            w, it = int(sp.args["width"]), int(sp.args["iters"])
+            if it >= 3:
+                agg.setdefault(w, []).append(sp.dur / it)
+        segments = [
+            (w, 1, float(np.median(per_iter)))
+            for w, per_iter in sorted(agg.items(), reverse=True)
+        ]
+        srows = model_drift(solver, segments, machine=machine,
+                            tracer=run_tracer, strategy=strategy)
+        rows.extend(srows)
+        for r in srows:
+            print(f"drift/{strategy}_t{t}_active{r['t_active']},"
+                  f"{r['measured_iter_s'] * 1e6:.1f}us,"
+                  f"{r['predicted_iter_s'] * 1e6:.1f}us,"
+                  f"{r['plan_bytes']},{r['hlo_bytes']}", flush=True)
+
+    rows = calibrated_drift(rows)
+    cal = [r["calibrated_time_drift"] for r in rows]
+    time_drift_ok = all(c is not None and 0.5 <= c <= 2.0 for c in cal)
+    by_strategy: dict[str, list[float]] = {}
+    for r in rows:
+        if r["bytes_drift"] is not None:
+            by_strategy.setdefault(r["strategy"], []).append(r["bytes_drift"])
+    bytes_consistent = all(
+        max(v) / min(v) - 1.0 <= 0.15 for v in by_strategy.values() if v
+    )
+    print(f"# calibrated time drift: "
+          f"{', '.join(f'{c:.2f}' for c in cal)} (gate [0.5, 2.0])")
+
+    summary = dict(
+        overhead_pct=float(overhead_pct),
+        overhead_ok=bool(overhead_ok),
+        time_drift_ok=bool(time_drift_ok),
+        bytes_ratio_consistent_15pct=bool(bytes_consistent),
+        configs_measured=len(rows),
+    )
+    out = dict(
+        benchmark="observe", smoke=args.smoke, seed=args.seed,
+        repeats=repeats, t=t,
+        overhead=dict(
+            untraced_s=float(plain_s), traced_s=float(traced_s),
+            overhead_pct=float(overhead_pct), batch=len(bs),
+        ),
+        drift=rows,
+        summary=summary,
+    )
+    with open(args.json, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(f"# gauges: {json.dumps(summary)}")
+    print(f"# wrote {args.json}")
+
+    if run_tracer is not None:
+        run_tracer.close()
+        print(f"# trace written to {args.trace}")
+
+    failures = []
+    if not overhead_ok:
+        failures.append(
+            f"tracer overhead {overhead_pct:+.2f}% exceeds the 3% gate "
+            f"({plain_s * 1e3:.1f}ms -> {traced_s * 1e3:.1f}ms)"
+        )
+    if not time_drift_ok:
+        failures.append(
+            f"calibrated time drift outside [0.5, 2.0]: "
+            f"{[round(c, 3) for c in cal]}"
+        )
+    if not bytes_consistent:
+        failures.append(
+            "HLO/plan byte ratio varies > 15% across widths within a "
+            "strategy (the width re-slice leaked payload)"
+        )
+    if args.check:
+        failures += check_counters(out, args.check)
+        if not failures:
+            print(f"counter gate OK vs {args.check}")
+    if failures:
+        print("OBSERVE GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        sys.exit(1)
+
+
+def check_counters(out: dict, baseline_path: str) -> list[str]:
+    """Deterministic byte counters must match the committed baseline."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failures = []
+    key = lambda r: (r["strategy"], r["t_active"])  # noqa: E731
+    base_rows = {key(r): r for r in base["drift"]}
+    for r in out["drift"]:
+        br = base_rows.get(key(r))
+        if br is None:
+            failures.append(f"drift row {key(r)} missing from baseline")
+            continue
+        for field in ("plan_bytes", "hlo_bytes"):
+            if r[field] != br[field]:
+                failures.append(
+                    f"drift[{key(r)}].{field}: {r[field]!r} != "
+                    f"baseline {br[field]!r}"
+                )
+    return failures
+
+
+if __name__ == "__main__":
+    main()

@@ -48,7 +48,6 @@ import argparse
 import json
 import sys
 import tempfile
-import time
 
 
 def register_all(server, ops):
@@ -98,6 +97,7 @@ def main() -> None:
     import numpy as np
 
     from repro.launch.serve import build_trace
+    from repro.observe import timed_median
     from repro.serve import ECGServer, ServeConfig, latency_percentiles
     from repro.solver import ECGSolver, SolverConfig
 
@@ -143,13 +143,13 @@ def main() -> None:
         # programs are keyed by pack layout, so a per-operator solo solve
         # would leave them cold
         replay(server, ops, trace)
-        runs = []
-        tickets = None
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            tickets = replay(server, ops, trace)
-            runs.append(time.perf_counter() - t0)
-        walls[name] = float(np.median(runs))
+        # shared timer (one warmup already paid above, so warmup=0);
+        # sync=False — replay drains the queue, results are already host
+        tickets, wall = timed_median(
+            replay, server, ops, trace,
+            repeats=repeats, warmup=0, label=f"replay/{name}", sync=False,
+        )
+        walls[name] = wall
         lats[name] = latency_percentiles(tickets)
     rps = {name: len(trace) / w for name, w in walls.items()}
     for name in policies:
@@ -201,7 +201,8 @@ def main() -> None:
           f"contract {'OK' if relres_ok else 'VIOLATED'}")
 
     pct_present = all(
-        np.isfinite([p["p50"], p["p95"], p["p99"]]).all() and p["n"] == len(trace)
+        p["n"] == len(trace)
+        and all(p[k] is not None for k in ("mean", "p50", "p95", "p99"))
         for p in lats.values()
     )
     packed_floor = 1.0 if args.smoke else 1.2

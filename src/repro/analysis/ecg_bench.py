@@ -16,8 +16,6 @@ Shared by ``benchmarks/kernel_sweep.py`` (CSV, 8 forced host devices) and
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -26,16 +24,16 @@ STRATEGIES = ("standard", "2step", "3step", "optimal")
 
 
 def _timeit(fn, *args, repeats: int = 3) -> float:
-    """Median wall microseconds per call (after one warmup/compile call)."""
-    out = fn(*args)
-    jax.block_until_ready(out)
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    """Median wall microseconds per call (after one warmup/compile call).
+
+    Delegates to the shared :func:`repro.observe.timed_median_us` timer —
+    the measurement discipline is identical across every benchmark, and an
+    installed ambient tracer sees each timed call as a ``bench/*`` span.
+    """
+    from repro.observe import get_tracer, timed_median_us
+
+    return timed_median_us(fn, *args, repeats=repeats, label="ecg_bench",
+                           tracer=get_tracer())
 
 
 def overlap_vs_blocking_sweep(

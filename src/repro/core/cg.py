@@ -22,6 +22,9 @@ import jax.numpy as jnp
 EV_RECOVERY = 1  # rank-revealing factorization dropped live directions
 EV_RESEED = 2    # flexible restart reseeded Z from the preconditioned residual
 
+#: event-bit -> human-readable code name (the ``iter_trace`` spelling)
+EVENT_NAMES = {EV_RECOVERY: "recovery", EV_RESEED: "reseed"}
+
 
 @dataclasses.dataclass
 class SolveResult:
@@ -121,6 +124,55 @@ class SolveResult:
     @property
     def n_reseeds(self) -> int:
         return len(self.reseed_events())
+
+    def iter_trace(self) -> list[dict]:
+        """Structured per-iteration view over the recorded histories.
+
+        One dict per *recorded* iteration ``k`` (including iteration 0,
+        the initial residual)::
+
+            dict(k, resnorm, active, events)
+
+        ``resnorm`` is the residual norm, ``active`` the active block
+        width (None when no reduction trace was recorded), ``events`` a
+        tuple of event code names (``"recovery"`` / ``"reseed"``; empty
+        when none fired or no mechanism was tracked).
+
+        The valid prefix is the leading run of finite ``res_hist``
+        entries: the history is NaN-padded past convergence — and, for a
+        request out of a packed multi-RHS solve, past its *retirement*
+        — so the rows stop exactly where this request's recorded history
+        does, not at the shared loop's last iteration.  This is the
+        tracer's solve-segment source (``repro.observe``).
+        """
+        import numpy as np
+
+        hist = np.asarray(self.res_hist, np.float64)
+        finite = np.isfinite(hist)
+        end = int(np.argmin(finite)) if not finite.all() else hist.size
+        act = (
+            None if self.active_hist is None
+            else np.asarray(self.active_hist).tolist()
+        )
+        ev = (
+            None if self.event_hist is None
+            else np.asarray(self.event_hist).tolist()
+        )
+        rows = []
+        for k in range(end):
+            events = ()
+            if ev is not None and k < len(ev) and ev[k] > 0:
+                events = tuple(
+                    name for bit, name in sorted(EVENT_NAMES.items())
+                    if int(ev[k]) & bit
+                )
+            active = None
+            if act is not None and k < len(act) and act[k] >= 0:
+                active = int(act[k])
+            rows.append(dict(
+                k=k, resnorm=float(hist[k]), active=active, events=events,
+            ))
+        return rows
 
 
 def _guarded_while(cond_extra, body_fn, init: dict):

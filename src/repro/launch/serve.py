@@ -88,6 +88,9 @@ def main():
                          "oldest pending request is this old (0 = off)")
     ap.add_argument("--seed", type=int, default=0,
                     help="trace seed (RHS draws + arrival shuffle)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a span trace of the replay: *.json = Chrome/"
+                         "Perfetto trace, *.jsonl = append-only event log")
     args = ap.parse_args()
     if args.dups >= args.requests:
         ap.error(f"--dups must be < --requests, got {args.dups} >= {args.requests}")
@@ -102,6 +105,12 @@ def main():
 
     from repro.serve import ECGServer, ServeConfig, latency_percentiles
     from repro.solver import SolverConfig
+
+    tracer = None
+    if args.trace:
+        from repro.observe import Tracer, open_sink
+
+        tracer = Tracer(sinks=[open_sink(args.trace)])
 
     t = "auto" if args.t == "auto" else int(args.t)
     mesh = None
@@ -122,6 +131,7 @@ def main():
             ),
         ),
         mesh=mesh,
+        tracer=tracer,
     )
 
     ops, trace = build_trace(args.requests, args.dups, args.scale,
@@ -168,10 +178,20 @@ def main():
             print(f"  pack {lay['pack_id']:>2}: width {lay['width']} = "
                   f"{lay['groups']} x t{lay['t_each']}, exchange{segs}")
     lat = latency_percentiles([tk for _, tk in tickets])
-    print(f"latency: p50={lat['p50'] * 1e3:.1f}ms p95={lat['p95'] * 1e3:.1f}ms "
-          f"p99={lat['p99'] * 1e3:.1f}ms over {lat['n']} requests")
+    if lat["n"]:
+        print(f"latency: p50={lat['p50'] * 1e3:.1f}ms "
+              f"p95={lat['p95'] * 1e3:.1f}ms p99={lat['p99'] * 1e3:.1f}ms "
+              f"mean={lat['mean'] * 1e3:.1f}ms over {lat['n']} requests")
+    else:
+        print("latency: no completed requests")
+    roll = q.get("rolling") or {}
+    if roll.get("n"):
+        print(f"rolling[{roll['window_s']:.0f}s]: {roll['rate_rps']:.1f} req/s")
     if args.cache_dir and any(not r["warm"] for r in reg["builds"]):
         print(f"re-run with --cache-dir {args.cache_dir} for warm builds")
+    if tracer is not None:
+        tracer.close()
+        print(f"# trace written to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -114,6 +114,10 @@ def main():
                          "polynomial, or the iteration-varying inexact kind "
                          "(flexible ECG; classic reseeds the residual, "
                          "incompatible with --method pipelined)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a trace of the run: *.json = Chrome/Perfetto "
+                         "trace (open in chrome://tracing or ui.perfetto.dev), "
+                         "*.jsonl = append-only event log")
     args = ap.parse_args()
     if args.method == "pipelined" and args.precondition == "inexact":
         ap.error("--precondition inexact needs the flexible residual reseed, "
@@ -145,6 +149,21 @@ def main():
     jax.config.update("jax_enable_x64", True)
     import numpy as np
     import jax.numpy as jnp
+
+    tracer = None
+    if args.trace:
+        # install as the ambient tracer: the solver build/solve spans and
+        # counters flow to the sink without threading the handle through
+        from repro.observe import Tracer, open_sink, set_tracer
+
+        tracer = Tracer(sinks=[open_sink(args.trace)])
+        set_tracer(tracer)
+
+    def _close_trace():
+        if tracer is not None:
+            tracer.close()
+            print(f"# trace written to {args.trace}")
+
     from repro.sparse import dg_laplace_2d, fd_laplace_2d, random_spd, csr_spmbv
     from repro.core.cg import _cg_solve
     from repro.core.machines import TPU_V5E_POD
@@ -202,6 +221,7 @@ def main():
         _print_adaptive_summary(res)
         res_cg = _cg_solve(lambda v: csr_spmbv(a, v[:, None])[:, 0], jnp.asarray(b), tol=args.tol, max_iters=20000)
         print(f"reference CG:  iters={res_cg.n_iters}")
+        _close_trace()
         return
 
     n_dev = len(jax.devices())
@@ -227,6 +247,7 @@ def main():
         f"{time.time()-t0:.1f}s"
     )
     _print_adaptive_summary(res)
+    _close_trace()
 
 
 if __name__ == "__main__":

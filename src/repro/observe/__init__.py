@@ -1,0 +1,54 @@
+"""Observability: span tracing, counters/gauges, model-drift telemetry.
+
+The unified way to *watch* a solve or serve session run — see
+``docs/observability.md`` for the span taxonomy and the sink matrix.
+
+    from repro.observe import Tracer, ChromeTraceSink
+
+    tracer = Tracer(sinks=[ChromeTraceSink("trace.json")])
+    solver = ECGSolver.build(a, mesh, config, tracer=tracer)
+    res = solver.solve(b)
+    tracer.close()              # trace.json opens in chrome://tracing
+"""
+
+from repro.observe.bench import timed_median, timed_median_us
+from repro.observe.drift import (
+    bytes_drift,
+    calibrated_drift,
+    hlo_collective_bytes,
+    model_drift,
+    predicted_iteration_seconds,
+)
+from repro.observe.metrics import RollingWindow
+from repro.observe.sinks import ChromeTraceSink, JsonlSink, MemorySink, open_sink
+from repro.observe.tracer import (
+    NULL_TRACER,
+    NullTracer,
+    Span,
+    Tracer,
+    coerce_tracer,
+    get_tracer,
+    set_tracer,
+)
+
+__all__ = [
+    "ChromeTraceSink",
+    "JsonlSink",
+    "MemorySink",
+    "NULL_TRACER",
+    "NullTracer",
+    "RollingWindow",
+    "Span",
+    "Tracer",
+    "bytes_drift",
+    "calibrated_drift",
+    "coerce_tracer",
+    "get_tracer",
+    "hlo_collective_bytes",
+    "model_drift",
+    "open_sink",
+    "predicted_iteration_seconds",
+    "set_tracer",
+    "timed_median",
+    "timed_median_us",
+]

@@ -1,0 +1,215 @@
+"""Model-drift telemetry: predicted cost / accounted bytes vs. measured.
+
+The repo carries four cost models (the ``repro.tune`` byte models, the
+executor-structural model, ``method_sync_cost``, the ``select_t``
+iteration model).  The paper validates its models by *measuring against
+them* (§5); this module is that validation as a reusable layer: for each
+``(strategy, t_active)`` a solve actually ran, compare
+
+* **time drift** — measured wall seconds per iteration vs. the
+  structural per-iteration prediction
+  (:func:`predicted_iteration_seconds`), and
+* **bytes drift** — collective-permute payload bytes counted in the
+  *compiled HLO* (:func:`hlo_collective_bytes` — moved here from
+  ``benchmarks/comm_sweep.py``, which now imports it back) vs. the bytes
+  the :class:`~repro.core.node_aware.ExchangePlan` accounts for.
+
+Bytes drift is deterministic and gated within 15% in CI.  Absolute time
+drift soaks up the host machine's true speed, so the gate normalizes by
+the median drift across all measured configurations
+(:func:`calibrated_drift`) and requires every *relative* drift in
+[0.5, 2.0] — the model must rank configurations within 2× even when its
+absolute constants are off for the machine at hand.
+"""
+
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def hlo_collective_bytes(compiled_text: str, p: int) -> int:
+    """Sum of collective-permute payload bytes in a compiled module.
+
+    Each instruction's (first) result shape is the per-device buffer; every
+    device sends one, so the wire total is shape_bytes × p.  Handles both
+    the synchronous form (``x = f64[c,w]{..} collective-permute(...)``) and
+    the async start form, whose result is a tuple
+    (``x = (f64[c,w]{..}, f64[c,w]{..}) collective-permute-start(...)`` —
+    the first element is the send payload; ``-done`` is not counted).
+    """
+    total = 0
+    for line in compiled_text.splitlines():
+        # split at the op's opening paren (the SSA name at line start would
+        # otherwise shadow the search); "-done" carries no payload
+        if " collective-permute-start(" in line:
+            head = line.split(" collective-permute-start(", 1)[0]
+        elif " collective-permute(" in line:
+            head = line.split(" collective-permute(", 1)[0]
+        else:
+            continue
+        m = _SHAPE_RE.search(head.split("=", 1)[-1])
+        if not m or m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)] * p
+    return total
+
+
+def _resolve_machine(solver):
+    """The MachineParams a drift row prices against: the tuner's
+    dtype-resolved machine when the build tuned, else the comm config's,
+    else HOST."""
+    machine = None
+    if solver.tuned is not None:
+        machine = solver.tuned.machine
+    if machine is None:
+        machine = solver.config.comm.machine
+    if machine is None:
+        from repro.core.machines import HOST
+
+        machine = HOST
+    return machine
+
+
+def predicted_iteration_seconds(solver, width: int | None = None,
+                                machine=None) -> float:
+    """Structural-model seconds for one iteration of ``solver`` at active
+    width ``width`` (default: the compile width ``solver.t``).
+
+    Mirrors what the executor actually runs at a reduced width: only the
+    exchange payload and the SpMBV flops shrink with ``width`` — the Gram
+    psums and the dense local updates stay full-``t``-shaped (masked
+    columns, not narrower arrays), so their terms are charged at full t.
+    """
+    from repro.core.ecg import ECGOperationCounts
+    from repro.tune.autotune import (
+        _method_local_flops, method_sync_cost, structural_exchange_cost,
+    )
+
+    if solver.op is None:
+        raise ValueError("model drift needs a distributed handle (mesh=)")
+    t = int(solver.t)
+    w = t if width is None else int(width)
+    cfg = solver.config
+    machine = _resolve_machine(solver) if machine is None else machine
+    plan = solver.op.plan
+    p = int(solver.op.p)
+    exchange = structural_exchange_cost(plan, machine, width=w)
+    counts_w = ECGOperationCounts(n=solver.a.shape[0], nnz=solver.a.nnz,
+                                  p=p, t=w)
+    counts_t = ECGOperationCounts(n=solver.a.shape[0], nnz=solver.a.nnz,
+                                  p=p, t=t)
+    spmbv_local = machine.gamma * counts_w.spmbv_flops
+    local = machine.gamma * _method_local_flops(
+        cfg.method.name, counts_t, s=cfg.method.s, reorth=cfg.method.reorth
+    )
+    sync = method_sync_cost(
+        cfg.method.name, t, p, machine, s=cfg.method.s,
+        reorth=cfg.method.reorth, t_spmbv_window=exchange + spmbv_local,
+    ) if p > 1 else 0.0
+    return spmbv_local + exchange + sync + local
+
+
+def bytes_drift(solver, width: int | None = None, dtype=None) -> dict:
+    """Plan-accounted vs. HLO-measured exchange bytes of one SpMBV apply.
+
+    Lowers ``op.matvec_fn(t_active=width)`` *alone* (one apply — a full
+    solve program would double-count the init apply) and counts its
+    collective-permute payloads.  Returns ``dict(width, plan_bytes,
+    hlo_bytes, ratio)``; ``ratio`` is hlo/plan, 1.0 when the accounting
+    is exact.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if solver.op is None:
+        raise ValueError("bytes drift needs a distributed handle (mesh=)")
+    op = solver.op
+    t = int(solver.t)
+    w = t if width is None else int(width)
+    dtype = jnp.float64 if dtype is None else dtype
+    f = int(np.dtype(dtype).itemsize)
+    plan_bytes = int(op.plan.at_width(w).wire_bytes(f))
+    sds = jax.ShapeDtypeStruct((op.n_padded, w), dtype)
+    txt = jax.jit(op.matvec_fn(t_active=w)).lower(sds).compile().as_text()
+    hlo = hlo_collective_bytes(txt, op.p)
+    return dict(
+        width=w, plan_bytes=plan_bytes, hlo_bytes=int(hlo),
+        ratio=(hlo / plan_bytes) if plan_bytes else None,
+    )
+
+
+def model_drift(solver, measured_segments, machine=None, tracer=None,
+                strategy: str | None = None) -> list[dict]:
+    """Drift rows for one solve's measured width segments.
+
+    measured_segments: ``[(width, iters, wall_seconds)]`` — one entry per
+        solve segment (the tracer's ``solve/segment`` spans carry exactly
+        these three numbers).  Zero-iteration segments are skipped.
+    machine: optional calibrated MachineParams override (e.g. with
+        ``dispatch_overhead`` measured by
+        :func:`repro.tune.measure_dispatch_overhead`).
+    tracer: when given, each row is also emitted as a ``model_drift``
+        gauge keyed by ``(strategy, t_active)``.
+
+    Returns rows of ``dict(strategy, t_active, iters, measured_iter_s,
+    predicted_iter_s, time_drift, plan_bytes, hlo_bytes, bytes_drift)``
+    where ``time_drift = measured / predicted`` (> 1: the model is
+    optimistic).
+    """
+    if strategy is None:
+        strategy = (
+            solver.tuned.strategy if solver.tuned is not None
+            else solver.config.comm.strategy
+        )
+    rows = []
+    for width, iters, wall_s in measured_segments:
+        if iters <= 0:
+            continue
+        measured = float(wall_s) / iters
+        predicted = predicted_iteration_seconds(solver, width, machine)
+        bd = bytes_drift(solver, width)
+        row = dict(
+            strategy=strategy, t_active=int(width), iters=int(iters),
+            measured_iter_s=measured, predicted_iter_s=predicted,
+            time_drift=measured / predicted if predicted > 0 else None,
+            plan_bytes=bd["plan_bytes"], hlo_bytes=bd["hlo_bytes"],
+            bytes_drift=bd["ratio"],
+        )
+        rows.append(row)
+        if tracer is not None:
+            tracer.gauge(
+                "model_drift", row["time_drift"], strategy=strategy,
+                t_active=int(width), bytes_drift=bd["ratio"],
+            )
+    return rows
+
+
+def calibrated_drift(rows) -> list[dict]:
+    """Normalize each row's time drift by the median drift across rows.
+
+    One scalar — the machine's true speed relative to the model's
+    constants — soaks into the median; what remains is how well the model
+    *ranks and scales* across (strategy, t_active), which is what the CI
+    gate can assert on any host.  Adds ``calibrated_time_drift`` to a
+    copy of each row.
+    """
+    drifts = [r["time_drift"] for r in rows if r["time_drift"] is not None]
+    med = float(np.median(drifts)) if drifts else 1.0
+    out = []
+    for r in rows:
+        r = dict(r)
+        r["calibrated_time_drift"] = (
+            r["time_drift"] / med if r["time_drift"] is not None and med > 0
+            else None
+        )
+        out.append(r)
+    return out

@@ -47,6 +47,8 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.observe.metrics import RollingWindow
+from repro.observe.tracer import coerce_tracer
 from repro.serve.packing import PackingConfig, WidthPacker
 
 
@@ -118,16 +120,26 @@ class RequestQueue:
 
     def __init__(self, max_batch: int = 8, max_wait_s: float = 0.0,
                  max_pending: int = 256, dedup: bool = True,
-                 packing: PackingConfig | None = None, clock=None):
+                 packing: PackingConfig | None = None, clock=None,
+                 tracer=None, window_s: float = 60.0):
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.max_pending = max_pending
         self.dedup = dedup
         self.packing = PackingConfig.coerce(packing)
         self.packer = WidthPacker(self.packing)
+        self._tracer = coerce_tracer(tracer)
         # injectable clock (same contract as time.monotonic) — deadline
-        # timers become deterministic under a test-controlled clock
-        self._clock = time.monotonic if clock is None else clock
+        # timers become deterministic under a test-controlled clock.  When
+        # tracing is on and no clock was injected, the queue adopts the
+        # tracer's clock so queue-wait spans (emitted from submit/complete
+        # stamps) land on the same timeline as every other span.
+        if clock is None:
+            clock = (
+                self._tracer.clock if self._tracer.enabled
+                else time.monotonic
+            )
+        self._clock = clock
         self.pending: list[Ticket] = []
         self.submitted = 0
         self.rejected = 0
@@ -135,12 +147,16 @@ class RequestQueue:
         self.batch_sizes: list[int] = []
         self.dedup_shared = 0
         self.completed = 0
+        # per-queue latency time-series: one sample per completed ticket,
+        # read as rolling req/s + p50/p95/p99 over the trailing window
+        self.window = RollingWindow(window_s=window_s)
 
     # ------------------------------------------------------------- intake
     def submit(self, fingerprint: str, b, x0=None, solver=None,
                tol=None) -> Ticket:
         if len(self.pending) >= self.max_pending:
             self.rejected += 1
+            self._tracer.counter("serve.rejected", self.rejected)
             raise ServeOverloaded(
                 f"{len(self.pending)} requests pending (max_pending="
                 f"{self.max_pending}); flush or retry after a drain"
@@ -157,6 +173,7 @@ class RequestQueue:
         )
         self.pending.append(ticket)
         self.submitted += 1
+        self._tracer.counter("serve.submitted", self.submitted)
         return ticket
 
     def due(self) -> bool:
@@ -194,18 +211,41 @@ class RequestQueue:
         ``solve_many``.  Results are split back out per ticket.
         """
         drained, self.pending = self.pending, []
-        groups: OrderedDict[str, OrderedDict[str, list[Ticket]]] = OrderedDict()
-        for tk in drained:
-            per_op = groups.setdefault(tk.fingerprint, OrderedDict())
-            key = tk.key if self.dedup else f"req{tk.request_id}"
-            per_op.setdefault(key, []).append(tk)
-        if self.packing.active:
-            self._drain_packed(groups)
-        else:
-            self._drain_batched(groups)
-        now = self._clock()
-        for tk in drained:
-            tk.completed_s = now
+        tr = self._tracer
+        t_start = self._clock()
+        with tr.span("serve/drain", cat="serve", requests=len(drained),
+                     policy=self.packing.pack):
+            if tr.enabled:
+                # queue wait per request: submit stamp -> drain start.
+                # Both ends are on the queue clock (the tracer's clock
+                # unless one was injected), emitted with explicit
+                # timestamps since the wait began before this span opened.
+                for tk in drained:
+                    tr.emit("serve/queue_wait", tk.submitted_s,
+                            t_start - tk.submitted_s, cat="serve",
+                            request_id=tk.request_id)
+            with tr.span("serve/assemble", cat="serve") as spa:
+                groups: OrderedDict[str, OrderedDict[str, list[Ticket]]] = (
+                    OrderedDict()
+                )
+                for tk in drained:
+                    per_op = groups.setdefault(tk.fingerprint, OrderedDict())
+                    key = tk.key if self.dedup else f"req{tk.request_id}"
+                    per_op.setdefault(key, []).append(tk)
+                spa.args.update(
+                    operators=len(groups),
+                    payloads=sum(len(g) for g in groups.values()),
+                )
+            if self.packing.active:
+                self._drain_packed(groups)
+            else:
+                self._drain_batched(groups)
+            with tr.span("serve/retire", cat="serve", tickets=len(drained)):
+                now = self._clock()
+                for tk in drained:
+                    tk.completed_s = now
+                    self.window.add(now, now - tk.submitted_s)
+            tr.counter("serve.completed", self.completed)
         return drained
 
     def _drain_batched(self, groups) -> None:
@@ -216,9 +256,12 @@ class RequestQueue:
                 chunk = unique[lo:lo + self.max_batch]
                 leads = [tickets[0] for tickets in chunk]
                 solver = leads[0].solver
-                results = solver.solve_many(
-                    [tk.b for tk in leads], [tk.x0 for tk in leads]
-                )
+                with self._tracer.span("serve/dispatch", cat="serve",
+                                       policy="batch", batch_id=self.batches,
+                                       batch_size=len(leads)):
+                    results = solver.solve_many(
+                        [tk.b for tk in leads], [tk.x0 for tk in leads]
+                    )
                 batch_id = self.batches
                 self.batches += 1
                 self.batch_sizes.append(len(leads))
@@ -240,7 +283,10 @@ class RequestQueue:
             cap = self.packer.capacity(solver)
             for lo in range(0, len(unique), cap):
                 chunk = unique[lo:lo + cap]
-                self.completed += self.packer.dispatch(chunk)
+                with self._tracer.span("serve/dispatch", cat="serve",
+                                       policy="width", pack_id=self.batches,
+                                       groups=len(chunk)):
+                    self.completed += self.packer.dispatch(chunk)
                 self.batches += 1
                 self.batch_sizes.append(len(chunk))
                 self.dedup_shared += sum(len(ts) - 1 for ts in chunk)
@@ -255,4 +301,5 @@ class RequestQueue:
             pack=self.packing.pack,
             packs=self.packer.packs,
             pack_layouts=[dict(d) for d in self.packer.pack_layouts],
+            rolling=self.window.snapshot(self._clock()),
         )

@@ -107,12 +107,15 @@ def true_relres(a, x, b) -> float:
 
 
 def latency_percentiles(tickets) -> dict:
-    """p50/p95/p99 per-request latency (seconds) of completed tickets.
+    """``dict(n, mean, p50, p95, p99)`` per-request latency (seconds) of
+    completed tickets.
 
     Latency is ``completed_s − submitted_s`` — queue wait *plus* solve, the
     number a client actually experiences.  Tickets without a completion
-    stamp are skipped; an empty set yields NaNs (JSON-safe via ``None`` is
-    the caller's choice).
+    stamp are skipped.  An empty or all-incomplete ticket list returns the
+    **explicit empty result** ``dict(n=0, mean=None, p50=None, p95=None,
+    p99=None)`` — never NaNs (which compare false silently) and never a
+    ``np.percentile`` call on an empty array; callers branch on ``n``.
     """
     lats = [
         tk.completed_s - tk.submitted_s
@@ -120,14 +123,14 @@ def latency_percentiles(tickets) -> dict:
         if tk.completed_s is not None
     ]
     if not lats:
-        return dict(p50=float("nan"), p95=float("nan"), p99=float("nan"),
-                    n=0)
+        return dict(n=0, mean=None, p50=None, p95=None, p99=None)
     arr = np.asarray(lats, np.float64)
     return dict(
+        n=int(arr.size),
+        mean=float(arr.mean()),
         p50=float(np.percentile(arr, 50)),
         p95=float(np.percentile(arr, 95)),
         p99=float(np.percentile(arr, 99)),
-        n=int(arr.size),
     )
 
 

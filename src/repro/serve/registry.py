@@ -37,6 +37,7 @@ import dataclasses
 import time
 from collections import OrderedDict
 
+from repro.observe.tracer import coerce_tracer
 from repro.serve.cache import WarmStartCache, config_digest, mesh_tag
 from repro.serve.config import ServeConfig
 from repro.serve.fingerprint import fingerprint_csr, operator_nbytes
@@ -63,9 +64,11 @@ class OperatorRegistry:
     #: small and LRU'd independently of the session registry
     _CONV_CAP = 64
 
-    def __init__(self, config: ServeConfig | None = None, mesh=None):
+    def __init__(self, config: ServeConfig | None = None, mesh=None,
+                 tracer=None):
         self.config = ServeConfig.coerce(config)
         self.mesh = mesh
+        self._tracer = coerce_tracer(tracer)
         self._entries: OrderedDict[str, _Entry] = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -90,9 +93,13 @@ class OperatorRegistry:
         entry = self._entries.get(key)
         if entry is not None:
             self.hits += 1
+            self._tracer.counter("registry.hits", self.hits,
+                                 fingerprint=key[:12])
             self._entries.move_to_end(key)
             return key, entry.solver
         self.misses += 1
+        self._tracer.counter("registry.misses", self.misses,
+                             fingerprint=key[:12])
         solver, warm, build_s = self._build(a, key)
         self._entries[key] = _Entry(solver=solver, nbytes=operator_nbytes(a))
         self.build_records.append(dict(
@@ -126,9 +133,20 @@ class OperatorRegistry:
         conv_arrays = self._conv_arrays.get(key)
         if conv_arrays is not None or conv_meta is not None:
             conversion = dict(arrays=conv_arrays, meta=conv_meta)
-        t0 = time.perf_counter()
-        solver = ECGSolver.build(a, self.mesh, cfg, conversion=conversion)
-        build_s = time.perf_counter() - t0
+        # build_s keeps its own perf_counter timing (it predates the
+        # tracer and feeds the warm-speedup benchmark gate); the tracer
+        # gets the same interval as a serve/build span — nested build-
+        # phase spans come from the solver's own instrumentation
+        with self._tracer.span("serve/build", cat="serve",
+                               fingerprint=key[:12], warm=warm):
+            t0 = time.perf_counter()
+            solver = ECGSolver.build(a, self.mesh, cfg,
+                                     conversion=conversion,
+                                     tracer=self._tracer)
+            build_s = time.perf_counter() - t0
+        self._tracer.counter(
+            "registry.builds", len(self.build_records) + 1, warm=warm
+        )
         self._harvest_conversion(key, solver, warm, conv_meta)
         if self._cache is not None and not warm:
             self._cache.store(

@@ -38,18 +38,27 @@ class ECGServer:
     config: a :class:`~repro.serve.ServeConfig` (or dict / None).
     mesh:   optional ``("node", "proc")`` device mesh — every registered
             session then runs the distributed node-aware solver.
+    tracer: optional :class:`~repro.observe.Tracer` — threads through the
+            registry (build spans, hit/miss counters), the queue (request
+            lifecycle spans), and every registered solver session (build-
+            phase and solve-segment spans).  None uses the ambient tracer
+            (:func:`~repro.observe.get_tracer`), which is a no-op unless
+            one was installed.
     """
 
-    def __init__(self, config: ServeConfig | dict | None = None, mesh=None):
+    def __init__(self, config: ServeConfig | dict | None = None, mesh=None,
+                 tracer=None):
         self.config = ServeConfig.coerce(config)
         self.mesh = mesh
-        self.registry = OperatorRegistry(self.config, mesh=mesh)
+        self.registry = OperatorRegistry(self.config, mesh=mesh,
+                                         tracer=tracer)
         self.queue = RequestQueue(
             max_batch=self.config.max_batch,
             max_wait_s=self.config.max_wait_s,
             max_pending=self.config.max_pending,
             dedup=self.config.dedup,
             packing=self.config.packing,
+            tracer=tracer,
         )
 
     # ------------------------------------------------------------ requests

@@ -41,6 +41,7 @@ from repro.adaptive.groups import GroupSpec
 from repro.adaptive.reduce import resolve_policy
 from repro.core.cg import SolveResult
 from repro.core.ecg import finalize_result, make_ecg_runner
+from repro.observe.tracer import coerce_tracer
 from repro.solver.config import SolverConfig
 
 
@@ -87,6 +88,7 @@ class ECGSolver:
         b=None,
         pm=None,
         conversion=None,
+        tracer=None,
     ) -> "ECGSolver":
         """Build a solver handle for matrix ``a``.
 
@@ -105,11 +107,16 @@ class ECGSolver:
                 analysis from :func:`repro.kernels.block_ell_meta` — skips
                 the analysis pass).  Mismatched artifacts (different tile,
                 shape, or dtype) are ignored, never an error.
+        tracer: a :class:`repro.observe.Tracer` to record build-phase and
+                solve-segment spans on (default: the process tracer —
+                normally the free null tracer, so instrumentation is a
+                no-op unless one was installed).
         """
         self = cls.__new__(cls)
         self.a = a
         self.mesh = mesh
         self.config = SolverConfig.coerce(config)
+        self._tracer = coerce_tracer(tracer)
         self.stats = SolverStats()
         self.selection = None
         self.tuned = None
@@ -122,7 +129,13 @@ class ECGSolver:
         self._packed_applies: dict = {}
         self._conversion_in = conversion
         self.conversion = None
-        self._build()
+        with self._tracer.span(
+            "build", cat="build", n=int(a.shape[0]), nnz=int(a.nnz),
+            distributed=mesh is not None,
+        ) as sp:
+            self._build()
+            sp.args["t"] = int(self.t)
+        self._tracer.counter("solver.builds", self.stats.builds)
         return self
 
     def _auto_probe_b(self):
@@ -151,26 +164,30 @@ class ECGSolver:
         if isinstance(t, str):  # "auto"
             from repro.adaptive.select_t import resolve_auto_t
 
-            t, self.selection, adaptive = resolve_auto_t(
-                "auto", adaptive, a=self.a, b=self._auto_probe_b(),
-                select=cfg.adaptive.select, candidates=cfg.adaptive.t_candidates,
-                tol=cfg.tol, machine=cfg.comm.machine,
-                backend=cfg.kernel.backend,
-                probe_iters=cfg.adaptive.probe_iters,
-                probe_rtol=cfg.adaptive.probe_rtol,
-                method=cfg.method.name, s=cfg.method.s,
-                reorth=cfg.method.reorth,
-            )
+            with self._tracer.span("build/select_t", cat="build"):
+                t, self.selection, adaptive = resolve_auto_t(
+                    "auto", adaptive, a=self.a, b=self._auto_probe_b(),
+                    select=cfg.adaptive.select,
+                    candidates=cfg.adaptive.t_candidates,
+                    tol=cfg.tol, machine=cfg.comm.machine,
+                    backend=cfg.kernel.backend,
+                    probe_iters=cfg.adaptive.probe_iters,
+                    probe_rtol=cfg.adaptive.probe_rtol,
+                    method=cfg.method.name, s=cfg.method.s,
+                    reorth=cfg.method.reorth,
+                )
             if tuned is None and cfg.kernel.backend == "pallas":
                 # execute the tile the candidate costs were modeled with
                 tuned = self.selection.configs.get(t)
         elif tuned is None and cfg.tune.active and cfg.kernel.backend == "pallas":
             from repro.tune import tune as run_tune
 
-            tuned = run_tune(
-                self.a, t=t, machine=cfg.comm.machine, n_nodes=1, ppn=1,
-                backend="pallas", mode=cfg.tune.mode,
-            )
+            with self._tracer.span("build/tune", cat="build",
+                                   mode=cfg.tune.mode):
+                tuned = run_tune(
+                    self.a, t=t, machine=cfg.comm.machine, n_nodes=1, ppn=1,
+                    backend="pallas", mode=cfg.tune.mode,
+                )
         self.stats.builds += 1
         self.tuned = tuned
         self.t = t
@@ -178,7 +195,12 @@ class ECGSolver:
         self._segmented = False
         ell_block = tuned.ell_block if tuned is not None else cfg.kernel.ell_block
         if cfg.kernel.backend == "pallas":
-            self._build_ell_apply(ell_block)
+            with self._tracer.span("build/convert", cat="build") as sp:
+                self._build_ell_apply(ell_block)
+                sp.args.update(
+                    analyzed=self.stats.conv_analyzed,
+                    reused=self.stats.conv_reused,
+                )
         else:
             self._apply = lambda V: csr_spmbv(self.a, V)
         self._gram1 = self._gram2 = self._sqnorm = self._tail = None
@@ -242,7 +264,9 @@ class ECGSolver:
         cfg = self.config
         n_nodes, ppn = self.mesh.devices.shape
         if self._pm is None:
-            self._pm = partition_csr(self.a, n_nodes * ppn)
+            with self._tracer.span("build/partition", cat="build",
+                                   p=n_nodes * ppn):
+                self._pm = partition_csr(self.a, n_nodes * ppn)
 
         t = cfg.t
         adaptive = "off" if cfg.adaptive.explicit_off else cfg.adaptive.policy
@@ -257,16 +281,19 @@ class ECGSolver:
                 cfg.tune.mode if cfg.tune.mode in ("model", "model:structural")
                 else "model"
             )
-            t, self.selection, adaptive = resolve_auto_t(
-                "auto", adaptive, a=self.a, b=self._auto_probe_b(),
-                select=cfg.adaptive.select, candidates=cfg.adaptive.t_candidates,
-                tol=cfg.tol, machine=cfg.comm.machine, n_nodes=n_nodes, ppn=ppn,
-                backend=cfg.kernel.backend, tune_mode=tune_mode,
-                probe_iters=cfg.adaptive.probe_iters,
-                probe_rtol=cfg.adaptive.probe_rtol,
-                method=cfg.method.name, s=cfg.method.s,
-                reorth=cfg.method.reorth,
-            )
+            with self._tracer.span("build/select_t", cat="build"):
+                t, self.selection, adaptive = resolve_auto_t(
+                    "auto", adaptive, a=self.a, b=self._auto_probe_b(),
+                    select=cfg.adaptive.select,
+                    candidates=cfg.adaptive.t_candidates,
+                    tol=cfg.tol, machine=cfg.comm.machine,
+                    n_nodes=n_nodes, ppn=ppn,
+                    backend=cfg.kernel.backend, tune_mode=tune_mode,
+                    probe_iters=cfg.adaptive.probe_iters,
+                    probe_rtol=cfg.adaptive.probe_rtol,
+                    method=cfg.method.name, s=cfg.method.s,
+                    reorth=cfg.method.reorth,
+                )
             if not cfg.tune.active:
                 # execute the exact config the choice was modeled with — a t
                 # optimized for one (strategy, tile, overlap) but run under
@@ -286,11 +313,27 @@ class ECGSolver:
                             stacklevel=4,
                         )
                     tune_arg = tcfg
-        self.op = _make_distributed_spmbv(
-            self.a, self.mesh, strategy, t=t, machine=cfg.comm.machine,
-            pm=self._pm, backend=cfg.kernel.backend, overlap=overlap,
-            ell_block=ell_block, tune=tune_arg, col_split=cfg.comm.col_split,
-        )
+        # one span for plan construction + tuning + Block-ELL conversion:
+        # _make_distributed_spmbv owns those phases, and the span's
+        # structural attributes (wire bytes, packed dispatch count) are the
+        # accounting every later solve span inherits
+        with self._tracer.span(
+            "build/operator", cat="build", strategy=strategy, t=int(t),
+        ) as sp:
+            self.op = _make_distributed_spmbv(
+                self.a, self.mesh, strategy, t=t, machine=cfg.comm.machine,
+                pm=self._pm, backend=cfg.kernel.backend, overlap=overlap,
+                ell_block=ell_block, tune=tune_arg,
+                col_split=cfg.comm.col_split,
+            )
+            f = int(np.dtype(self.a.data.dtype).itemsize)
+            sp.args.update(
+                wire_bytes=int(self.op.plan.wire_bytes(f)),
+                dispatch_count=int(self.op.plan.dispatch_count(packed=True)),
+                tuned_strategy=(
+                    self.op.tuned.strategy if self.op.tuned else strategy
+                ),
+            )
         self.stats.builds += 1
         if self.selection is not None and self.op.tuned is not None:
             self.op.tuned = dataclasses.replace(
@@ -301,7 +344,8 @@ class ECGSolver:
         self.policy = resolve_policy(adaptive)
         self._segmented = self.policy is not None and not self.policy.restart
         self._apply = self.op.matvec_fn()
-        self._build_reducers()
+        with self._tracer.span("build/reducers", cat="build"):
+            self._build_reducers()
         self._precond = self._build_precond()
 
     def _build_reducers(self):
@@ -497,6 +541,45 @@ class ECGSolver:
             return self.op.shard_vector(np.asarray(v))
         return jnp.asarray(v)
 
+    def _struct_attrs(self, width: int) -> dict:
+        """Structural accounting of one solve segment at active ``width``
+        — the attributes that make a trace self-describing (plan wire
+        bytes at the re-sliced width, packed dispatch count, the scheme's
+        psums/iteration).  Called only when tracing is enabled."""
+        from repro.core.methods import get_method
+
+        cfg = self.config
+        spec = get_method(cfg.method.name)
+        attrs = dict(psums_per_iter=float(
+            spec.collectives_per_iteration(cfg.method.s, cfg.method.reorth)
+        ))
+        if self.op is not None:
+            f = int(np.dtype(self.a.data.dtype).itemsize)
+            plan_w = self.op.plan.at_width(width)
+            attrs.update(
+                wire_bytes=int(plan_w.wire_bytes(f)),
+                dispatch_count=int(plan_w.dispatch_count(packed=True)),
+            )
+        return attrs
+
+    def _emit_solve_telemetry(self, result):
+        """Counters + per-iteration event markers for one finished solve.
+
+        Lifts the recovery/reseed/re-slice events out of the device-side
+        histories (``iter_trace`` is the reader) — a host transfer, so
+        strictly gated on the tracer being enabled."""
+        tr = self._tracer
+        if not tr.enabled:
+            return
+        tr.counter("solver.solves", self.stats.solves)
+        tr.counter("solver.traces", self.stats.traces)
+        for k, before, after in result.reduction_events():
+            tr.instant("solve/width_change", k=k, before=before, after=after)
+        for k in result.recovery_events():
+            tr.instant("solve/recovery", k=k)
+        for k in result.reseed_events():
+            tr.instant("solve/reseed", k=k)
+
     def solve(self, b, x0=None):
         """Solve A x = b; returns a :class:`~repro.core.cg.SolveResult`.
 
@@ -512,12 +595,27 @@ class ECGSolver:
         x0_dev = jnp.zeros_like(b_dev) if x0 is None else self._device_vec(x0)
         if self.mesh is not None:
             self._onehot(b_dev.dtype)  # warm eagerly — a trace must not put
+        tr = self._tracer
         if not self._segmented:
-            out = self._jit(self.t, "fresh")(b_dev, x0_dev)
-            result = finalize_result(
-                out, x0=x0_dev, t=self.t, tol=cfg.tol, policy=self.policy,
-                selection=self.selection,
-            )
+            # dispatch span: the async enqueue only; finalize covers the
+            # host syncs — together they bracket the whole device solve
+            with tr.span("solve/dispatch", cat="solve", width=self.t) as spd:
+                out = self._jit(self.t, "fresh")(b_dev, x0_dev)
+            with tr.span("solve/finalize", cat="solve") as spf:
+                result = finalize_result(
+                    out, x0=x0_dev, t=self.t, tol=cfg.tol, policy=self.policy,
+                    selection=self.selection,
+                )
+                spf.args.update(iters=result.n_iters,
+                                converged=bool(result.converged))
+            if tr.enabled:
+                # one segment span covering dispatch through the finalize
+                # host sync — the unsegmented solve's (width, iters, wall)
+                tr.emit(
+                    "solve/segment", spd.t0, spf.t0 + spf.dur - spd.t0,
+                    cat="solve", width=self.t, iters=result.n_iters,
+                    **self._struct_attrs(self.t),
+                )
         else:
             # Width-segmented solve: each segment runs the jitted loop with
             # the exchange compacted to the current static active width;
@@ -526,13 +624,18 @@ class ECGSolver:
             # work, no rebuild), and the solve resumes from the same carry.
             t_seg, carry, k_prev, segments = self.t, None, 0, []
             while True:
-                if carry is None:
-                    carry = self._jit(t_seg, "fresh")(b_dev, x0_dev)
-                else:
-                    carry = self._jit(t_seg, "resume")(carry)
-                k = int(carry["k"])
-                bd = bool(carry["bd"])
-                it_seg = k - k_prev
+                with tr.span("solve/segment", cat="solve",
+                             width=t_seg) as sp:
+                    if carry is None:
+                        carry = self._jit(t_seg, "fresh")(b_dev, x0_dev)
+                    else:
+                        carry = self._jit(t_seg, "resume")(carry)
+                    k = int(carry["k"])
+                    bd = bool(carry["bd"])
+                    it_seg = k - k_prev
+                    sp.args["iters"] = it_seg
+                    if tr.enabled:
+                        sp.args.update(self._struct_attrs(t_seg))
                 segments.append((t_seg, it_seg))
                 k_prev = k
                 n_act = int(jnp.sum(carry["act"]))
@@ -549,12 +652,14 @@ class ECGSolver:
                 ):
                     break
                 t_seg = max(n_act, 1)  # width-reduction event -> re-slice
-            result = finalize_result(
-                carry, x0=x0_dev, t=self.t, tol=cfg.tol, policy=self.policy,
-                selection=self.selection,
-            )
+            with tr.span("solve/finalize", cat="solve"):
+                result = finalize_result(
+                    carry, x0=x0_dev, t=self.t, tol=cfg.tol,
+                    policy=self.policy, selection=self.selection,
+                )
             result.comm_segments = segments
         self.stats.solves += 1
+        self._emit_solve_telemetry(result)
         return result
 
     def solve_many(self, bs, x0s=None):
@@ -576,24 +681,38 @@ class ECGSolver:
             # width-segmented solves sync the host between segments anyway
             return [self.solve(b, x0) for b, x0 in zip(bs, x0s)]
         cfg = self.config
+        tr = self._tracer
         fn = None
         outs = []
-        for b, x0 in zip(bs, x0s):
-            b_dev = self._device_vec(b)
-            x0_dev = jnp.zeros_like(b_dev) if x0 is None else self._device_vec(x0)
-            if self.mesh is not None:
-                self._onehot(b_dev.dtype)  # warm eagerly — a trace must not put
-            if fn is None:
-                fn = self._jit(self.t, "fresh")
-            outs.append((fn(b_dev, x0_dev), x0_dev))
-            self.stats.solves += 1
-        return [
-            finalize_result(
-                out, x0=x0_dev, t=self.t, tol=cfg.tol, policy=self.policy,
-                selection=self.selection,
-            )
-            for out, x0_dev in outs
-        ]
+        # the dispatch span covers only async enqueues — it must NOT force
+        # a host sync, or the pipelining this method exists for is gone
+        with tr.span("solve_many/dispatch", cat="solve",
+                     requests=len(bs), width=self.t):
+            for b, x0 in zip(bs, x0s):
+                b_dev = self._device_vec(b)
+                x0_dev = (
+                    jnp.zeros_like(b_dev) if x0 is None
+                    else self._device_vec(x0)
+                )
+                if self.mesh is not None:
+                    self._onehot(b_dev.dtype)  # warm eagerly — a trace must
+                    #                            not put
+                if fn is None:
+                    fn = self._jit(self.t, "fresh")
+                outs.append((fn(b_dev, x0_dev), x0_dev))
+                self.stats.solves += 1
+        with tr.span("solve_many/finalize", cat="solve", requests=len(bs)):
+            results = [
+                finalize_result(
+                    out, x0=x0_dev, t=self.t, tol=cfg.tol, policy=self.policy,
+                    selection=self.selection,
+                )
+                for out, x0_dev in outs
+            ]
+        if tr.enabled:
+            tr.counter("solver.solves", self.stats.solves)
+            tr.counter("solver.traces", self.stats.traces)
+        return results
 
     # ------------------------------------------------------- packed solving
     def _packed_apply(self, width: int):
@@ -727,22 +846,34 @@ class ECGSolver:
         else:
             b_dev = jnp.asarray(b_mat)
             x0_dev = jnp.asarray(x0_mat)
+        tr = self._tracer
         segments = None
         if self.mesh is None:
-            out = self._packed_jit(spec, spec.width, "fresh")(b_dev, x0_dev)
+            with tr.span("solve_packed/dispatch", cat="solve",
+                         width=spec.width, groups=g):
+                out = self._packed_jit(spec, spec.width, "fresh")(
+                    b_dev, x0_dev
+                )
         else:
             # width-segmented packed solve: each retirement (or policy
             # reduction) event exits the loop, the exchange re-slices at the
             # live width, and the solve resumes from the same carry
             t_seg, carry, k_prev, segments = spec.width, None, 0, []
             while True:
-                if carry is None:
-                    carry = self._packed_jit(spec, t_seg, "fresh")(b_dev, x0_dev)
-                else:
-                    carry = self._packed_jit(spec, t_seg, "resume")(carry)
-                k = int(carry["k"])
-                bd = bool(carry["bd"])
-                it_seg = k - k_prev
+                with tr.span("solve/segment", cat="solve", width=t_seg,
+                             packed=True, groups=g) as sp:
+                    if carry is None:
+                        carry = self._packed_jit(spec, t_seg, "fresh")(
+                            b_dev, x0_dev
+                        )
+                    else:
+                        carry = self._packed_jit(spec, t_seg, "resume")(carry)
+                    k = int(carry["k"])
+                    bd = bool(carry["bd"])
+                    it_seg = k - k_prev
+                    sp.args["iters"] = it_seg
+                    if tr.enabled:
+                        sp.args.update(self._struct_attrs(t_seg))
                 segments.append((t_seg, it_seg))
                 k_prev = k
                 n_act = int(jnp.sum(carry["act"]))
@@ -764,7 +895,11 @@ class ECGSolver:
                 t_seg = new_w
             out = carry
         self.stats.solves += g
-        return self._finalize_packed(out, x0_dev, spec, segments)
+        with tr.span("solve_packed/finalize", cat="solve", groups=g):
+            results = self._finalize_packed(out, x0_dev, spec, segments)
+        if tr.enabled:
+            tr.counter("solver.solves", self.stats.solves)
+        return results
 
     def _finalize_packed(self, out, x0_dev, spec: GroupSpec, segments):
         """Split one packed loop carry into k honest per-request results."""
@@ -833,6 +968,7 @@ class ECGSolver:
         new_cfg = self.config.replace(**overrides)
         clone = ECGSolver.__new__(ECGSolver)
         clone.a, clone.mesh, clone.config = self.a, self.mesh, new_cfg
+        clone._tracer = self._tracer
         clone.stats = SolverStats()
         clone.selection = None
         clone.tuned = None

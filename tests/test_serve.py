@@ -35,6 +35,7 @@ from repro.serve import (
     payload_key,
     true_relres,
 )
+from repro.observe import MemorySink, Tracer
 from repro.solver import ECGSolver, SolverConfig
 from repro.sparse import aniso_laplace_2d, dg_laplace_2d, fd_laplace_2d
 
@@ -347,6 +348,95 @@ class TestBatching:
         assert relres < 1e-7
 
 
+# -------------------------------------------------------------- telemetry
+class TestServeTelemetry:
+    """Counters and lifecycle spans are pure functions of the request
+    trace: replaying the same 12 requests through a fresh traced server
+    yields the same metric sequence, with final values derivable from the
+    trace structure alone."""
+
+    N_REQUESTS = 12
+
+    def _trace(self, operators):
+        rng = np.random.default_rng(5)
+        reqs = []
+        for i in range(self.N_REQUESTS - 2):
+            a = operators[i % 2]
+            reqs.append((a, rng.standard_normal(a.shape[0])))
+        return reqs + [reqs[0], reqs[1]]  # 2 duplicate payloads
+
+    def _replay(self, operators):
+        sink = MemorySink()
+        server = ECGServer(
+            ServeConfig(solver=SolverConfig(t=4, tol=1e-8), max_batch=4),
+            tracer=Tracer(sinks=[sink]),
+        )
+        tickets = [server.submit(a, b) for a, b in self._trace(operators)]
+        server.flush()
+        assert all(tk.done for tk in tickets)
+        return sink, server, tickets
+
+    def test_counters_derive_from_trace_structure(self, operators):
+        sink, server, tickets = self._replay(operators)
+        # 12 submissions over 2 distinct operators: first sight of each is
+        # the only registry miss, everything else hits the resident session
+        assert sink.counter_value("serve.submitted") == self.N_REQUESTS
+        assert sink.counter_value("serve.completed") == self.N_REQUESTS
+        assert sink.counter_value("registry.misses") == 2
+        assert sink.counter_value("registry.hits") == self.N_REQUESTS - 2
+        assert sink.counter_value("registry.builds") == 2
+        assert sink.counter_value("serve.rejected") is None  # never emitted
+
+    def test_lifecycle_spans_cover_every_request(self, operators):
+        sink, server, tickets = self._replay(operators)
+        waits = sink.by_name("serve/queue_wait")
+        assert len(waits) == self.N_REQUESTS
+        assert {s.args["request_id"] for s in waits} == set(
+            range(self.N_REQUESTS)
+        )
+        assert all(s.dur >= 0 for s in waits)
+        q = server.stats()["queue"]
+        assert len(sink.by_name("serve/dispatch")) == q["batches"]
+        drains = sink.by_name("serve/drain")
+        assert len(drains) == len(sink.by_name("serve/retire"))
+        assert sum(s.args["requests"] for s in drains) == self.N_REQUESTS
+        # rolling window: every completion sampled, ordered percentiles
+        roll = q["rolling"]
+        assert roll["n"] == self.N_REQUESTS
+        assert roll["p50"] <= roll["p95"] <= roll["p99"]
+
+    def test_metric_sequence_is_replay_deterministic(self, operators):
+        seq = []
+        for _ in range(2):
+            sink, _, _ = self._replay(operators)
+            seq.append([
+                (m["kind"], m["name"], m["value"]) for m in sink.metrics
+            ])
+        assert seq[0] == seq[1]
+
+    def test_untraced_server_state_identical(self, operators):
+        """The tracer is observation only: counters/batches/results of a
+        traced replay match an untraced one exactly."""
+        _, traced, t_tickets = self._replay(operators)
+        plain = ECGServer(
+            ServeConfig(solver=SolverConfig(t=4, tol=1e-8), max_batch=4)
+        )
+        p_tickets = [plain.submit(a, b) for a, b in self._trace(operators)]
+        plain.flush()
+        ts, ps = traced.stats(), plain.stats()
+        for section in ("registry", "queue"):
+            a, b = dict(ts[section]), dict(ps[section])
+            # wall-time fields differ run to run; structure must not
+            a.pop("builds", None), b.pop("builds", None)
+            a.pop("rolling", None), b.pop("rolling", None)
+            a.pop("solver_traces", None), b.pop("solver_traces", None)
+            a.pop("solver_solves", None), b.pop("solver_solves", None)
+            assert a == b
+        for tk_t, tk_p in zip(t_tickets, p_tickets):
+            assert np.array_equal(np.asarray(tk_t.result.x),
+                                  np.asarray(tk_p.result.x))
+
+
 # ------------------------------------------------------------------- config
 class TestServeConfig:
     def test_defaults_coerce(self):
@@ -567,9 +657,14 @@ class TestWidthPacking:
         p = latency_percentiles([T(0.0, 1.0), T(0.0, 2.0), T(1.0, 2.0),
                                  T(0.0, None)])
         assert p["n"] == 3
+        assert p["mean"] == pytest.approx(4.0 / 3.0)
         assert p["p50"] == 1.0 and p["p50"] <= p["p95"] <= p["p99"] <= 2.0
-        empty = latency_percentiles([])
-        assert empty["n"] == 0 and np.isnan(empty["p50"])
+        # no completed tickets -> explicit empty result, never NaN and
+        # never np.percentile on an empty array
+        for empty in (latency_percentiles([]),
+                      latency_percentiles([T(0.0, None)])):
+            assert empty == dict(n=0, mean=None, p50=None, p95=None,
+                                 p99=None)
 
     def test_packing_config_validation(self):
         assert not PackingConfig().active
